@@ -1,0 +1,99 @@
+"""Shared benchmark utilities: timing, model stats, CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def time_jit(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds per call of a jit'd fn on the current backend."""
+    f = jax.jit(fn)
+    for _ in range(warmup):
+        jax.block_until_ready(f(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def param_count(tree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def fwd_flops_resnet(params, img_hw: int) -> float:
+    """Analytic forward FLOPs of a (possibly decomposed) ResNet tree by
+    walking conv/fc subtrees with their spatial sizes."""
+    # spatial schedule of bottleneck resnets at input img_hw
+    # stem /2, pool /2, stages at /4 /8 /16 /32
+    flops = [0.0]
+
+    def conv_flops(p, hw, stride):
+        out_hw = hw // stride
+        m = out_hw * out_hw
+        if "w" in p:
+            kh, kw, c, s = p["w"].shape
+            flops[0] += 2.0 * m * kh * kw * c * s
+        elif "w0" in p:
+            c, r = p["w0"].shape[-2:]
+            s = p["w1"].shape[-1]
+            flops[0] += 2.0 * m * r * (c + s)
+        elif "tucker_u" in p:
+            c, r1 = p["tucker_u"].shape
+            kh, kw, _, r2 = p["core"].shape
+            s = p["tucker_v"].shape[-1]
+            flops[0] += 2.0 * m * (c * r1 + kh * kw * r1 * r2 + r2 * s)
+        else:  # branched
+            n, c, r1 = p["u"].shape
+            _, kh, kw, _, r2 = p["core"].shape
+            s = p["v"].shape[-1]
+            flops[0] += 2.0 * m * n * (c * r1 + kh * kw * r1 * r2 + r2 * s)
+        return out_hw
+
+    hw = conv_flops(params["stem"], img_hw, 2)
+    hw //= 2  # maxpool
+    si = 0
+    while f"stage{si}" in params:
+        stage = params[f"stage{si}"]
+        stride = 1 if si == 0 else 2
+        bi = 0
+        while f"block{bi}" in stage:
+            blk = stage[f"block{bi}"]
+            s = stride if bi == 0 else 1
+            conv_flops(blk["conv1"], hw, 1)
+            hw2 = conv_flops(blk["conv2"], hw, s)
+            conv_flops(blk["conv3"], hw2, 1)
+            if "downsample" in blk:
+                conv_flops(blk["downsample"], hw, s)
+            hw = hw2
+            bi += 1
+        si += 1
+    fc = params["fc"]
+    if "w" in fc:
+        c, s = fc["w"].shape
+        flops[0] += 2.0 * c * s
+    else:
+        c, r = fc["w0"].shape
+        s = fc["w1"].shape[-1]
+        flops[0] += 2.0 * r * (c + s)
+    return flops[0]
+
+
+class Csv:
+    def __init__(self, header: list[str]):
+        self.header = header
+        self.rows: list[list] = []
+
+    def row(self, *vals):
+        self.rows.append(list(vals))
+
+    def dump(self, title: str) -> str:
+        out = [f"# {title}", ",".join(self.header)]
+        for r in self.rows:
+            out.append(",".join(str(v) for v in r))
+        return "\n".join(out)

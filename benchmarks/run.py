@@ -1,0 +1,52 @@
+"""Benchmark driver: one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+--full uses the paper-size models (slow on CPU); the default uses reduced
+sizes with identical structure (params/FLOPs columns stay exact full-size
+numbers where analytic).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table3,rank,branch,lm,kernels")
+    args = ap.parse_args()
+    fast = not args.full
+
+    from benchmarks import (bench_branching, bench_kernels, bench_rank_sweep,
+                            bench_table1, bench_table3,
+                            bench_transformer_lrd)
+    benches = {
+        "table1": bench_table1.run,
+        "table3": bench_table3.run,
+        "rank": bench_rank_sweep.run,
+        "branch": bench_branching.run,
+        "lm": bench_transformer_lrd.run,
+        "kernels": bench_kernels.run,
+    }
+    only = set(args.only.split(",")) if args.only else set(benches)
+    failures = 0
+    for name, fn in benches.items():
+        if name not in only:
+            continue
+        t0 = time.time()
+        print(f"\n================ {name} ================", flush=True)
+        try:
+            print(fn(fast=fast))
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures += 1
+            print(f"[bench {name} FAILED] {e!r}")
+        print(f"[{name}: {time.time() - t0:.1f}s]")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

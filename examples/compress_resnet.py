@@ -1,0 +1,90 @@
+"""The paper's full pipeline end-to-end on a ResNet: decompose with each
+of the four acceleration techniques, fine-tune briefly, report the
+Table-3-style comparison.
+
+    PYTHONPATH=src python examples/compress_resnet.py [--full]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import LRDConfig
+from repro.core.surgery import decompose_model
+from repro.models.resnet import ResNetModel, merge_bottleneck
+from repro.train.data import SyntheticImages
+from repro.train.optim import OptimConfig, adamw_init, adamw_update
+from repro.core.freezing import trainable_mask
+
+
+def finetune(m, params, data, steps=5, freeze=False):
+    cfg = OptimConfig(peak_lr=1e-3, warmup_steps=1, total_steps=steps)
+    mask = trainable_mask(params, enabled=freeze)
+    state = adamw_init(params, mask)
+
+    @jax.jit
+    def step(p, s, batch):
+        def loss(p):
+            return m.loss(p, batch, freeze_factors=freeze)[0]
+        l, g = jax.value_and_grad(loss)(p)
+        p2, s2, _ = adamw_update(g, s, p, cfg, mask)
+        return p2, s2, l
+
+    losses = []
+    for i in range(steps):
+        params, state, l = step(params, state, data.batch(i))
+        losses.append(float(l))
+    return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="use resnet50 full config (slow on CPU)")
+    args = ap.parse_args()
+
+    cfg = registry.get("resnet50").full if args.full \
+        else registry.get("resnet50").smoke
+    m = ResNetModel(cfg)
+    params, axes = m.init(jax.random.PRNGKey(0))
+    data = SyntheticImages(cfg, batch=4)
+    min_dim = 8
+
+    variants = {}
+    vanilla, _, rep = decompose_model(params, axes, LRDConfig(
+        enabled=True, compression=2.0, rank_mode="ratio", min_dim=min_dim))
+    variants["vanilla_lrd"] = (vanilla, False)
+    opt_ranks, _, _ = decompose_model(params, axes, LRDConfig(
+        enabled=True, compression=2.0, rank_mode="search", min_dim=min_dim))
+    variants["optimized_ranks"] = (opt_ranks, False)
+    variants["layer_freezing"] = (vanilla, True)
+    cores, _, _ = decompose_model(params, axes, LRDConfig(
+        enabled=True, compression=2.0, rank_mode="ratio", min_dim=min_dim,
+        targets=("conv",)))
+    variants["layer_merging"] = (merge_bottleneck(cores), False)
+    branched, _, _ = decompose_model(params, axes, LRDConfig(
+        enabled=True, compression=1.0001, rank_mode="ratio",
+        min_dim=min_dim, branches=2))
+    variants["layer_branching"] = (branched, False)
+
+    n0 = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{'variant':18s} {'layers':>6s} {'params':>10s} {'dP%':>7s} "
+          f"{'ft loss[0]->[-1]':>18s} {'ft s/step':>9s}")
+    _, l0 = finetune(m, params, data, steps=3)
+    print(f"{'original':18s} {m.layer_count(params):>6d} {n0:>10,d} "
+          f"{0.0:>6.1f}% {l0[0]:>8.3f} -> {l0[-1]:.3f}")
+    for name, (tree, freeze) in variants.items():
+        n = sum(x.size for x in jax.tree.leaves(tree))
+        t0 = time.perf_counter()
+        _, losses = finetune(m, tree, data, steps=3, freeze=freeze)
+        dt = (time.perf_counter() - t0) / 3
+        print(f"{name:18s} {m.layer_count(tree):>6d} {n:>10,d} "
+              f"{100 * (n / n0 - 1):>6.1f}% {losses[0]:>8.3f} -> "
+              f"{losses[-1]:.3f} {dt:>8.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Quickstart: decompose a small LM with the paper's technique, fine-tune
+briefly, and watch the loss recover.  Runs in <1 min on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+
+from repro.configs import registry
+from repro.configs.base import LRDConfig, ParallelConfig, RunConfig, ShapeConfig
+from repro.core.surgery import decompose_model
+from repro.models.api import get_model
+from repro.train.data import SyntheticLM
+from repro.train.loop import train
+from repro.train.optim import OptimConfig
+
+
+def main():
+    cfg = registry.get("llama3.2-1b").smoke
+    shape = ShapeConfig("quick", 64, 4, "train")
+
+    # 1) the dense model
+    model = get_model(cfg)
+    params, axes = model.init(jax.random.PRNGKey(0))
+    n_dense = sum(x.size for x in jax.tree.leaves(params))
+
+    # 2) the paper's technique: truncated-SVD surgery at 2x compression,
+    #    ranks aligned to hardware tiles (§2.1), factors frozen (§2.2)
+    lrd = LRDConfig(enabled=True, compression=2.0, rank_mode="aligned",
+                    rank_align=32, min_dim=48, freeze=True)
+    dec, _, report = decompose_model(params, axes, lrd)
+    n_dec = sum(x.size for x in jax.tree.leaves(dec))
+    print(f"params: dense {n_dense:,} -> decomposed {n_dec:,} "
+          f"({n_dec / n_dense:.2%})")
+    for d in report.decisions[:6]:
+        print(f"  {d.path:28s} {d.kind:5s} rank={d.rank} "
+              f"{d.params_before:>9,d} -> {d.params_after:,d}")
+
+    # 3) fine-tune the decomposed model (only the live factors train)
+    #    on byte-level text (learnable structure, unlike random tokens)
+    from repro.train.data import ByteTextLM
+    run = RunConfig(model=cfg, lrd=lrd,
+                    parallel=ParallelConfig(remat="none"))
+    data = ByteTextLM(cfg, batch=shape.global_batch, seq_len=shape.seq_len)
+    result = train(run, data, num_steps=30,
+                   optim_cfg=OptimConfig(peak_lr=3e-3, warmup_steps=5,
+                                         total_steps=30),
+                   log_every=10)
+    print(f"loss: {result.losses[0]:.3f} -> {result.losses[-1]:.3f} "
+          f"(fine-tuning recovers the decomposition error)")
+    assert result.losses[-1] < result.losses[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+the full production stack — LRD surgery, masked AdamW, checkpoints with
+auto-resume, straggler detection, preemption handling.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200] [--dense]
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import (LRDConfig, ModelConfig, ParallelConfig,
+                                RunConfig, ShapeConfig)
+from repro.train.data import ByteTextLM
+from repro.train.fault_tolerance import PreemptionHandler
+from repro.train.loop import train
+from repro.train.optim import OptimConfig
+
+# ~100M params: 12L x 512d x 2048ff, byte-level vocab
+CFG = ModelConfig(name="lm100m", family="dense", num_layers=10,
+                  d_model=640, num_heads=10, num_kv_heads=5, head_dim=64,
+                  d_ff=2560, vocab_size=256, dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--dense", action="store_true",
+                    help="skip LRD (dense baseline)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--corpus", default=None, help="path to a text file")
+    args = ap.parse_args()
+
+    n = sum(x.size for x in jax.tree.leaves(
+        jax.eval_shape(lambda k: __import__(
+            "repro.models.api", fromlist=["get_model"]
+        ).get_model(CFG).init(k)[0], jax.random.PRNGKey(0))))
+    print(f"model: {n / 1e6:.1f}M params")
+
+    lrd = LRDConfig() if args.dense else LRDConfig(
+        enabled=True, compression=2.0, rank_mode="aligned", rank_align=64,
+        min_dim=256, freeze=True)
+    run = RunConfig(model=CFG, lrd=lrd,
+                    parallel=ParallelConfig(remat="none"))
+    data = ByteTextLM(CFG, batch=args.batch, seq_len=args.seq,
+                      path=args.corpus)
+    with PreemptionHandler() as p:
+        result = train(run, data, num_steps=args.steps,
+                       optim_cfg=OptimConfig(peak_lr=1e-3, warmup_steps=20,
+                                             total_steps=args.steps),
+                       ckpt_dir=args.ckpt_dir, ckpt_every=50,
+                       preemption=p, log_every=20)
+    print(f"done at step {result.step}; final loss "
+          f"{result.losses[-1]:.4f}; stragglers: "
+          f"{result.straggler_report['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.analysis import hw_specs  # noqa: F401

@@ -1,0 +1,47 @@
+"""TPU v5e hardware constants used by the cost model and roofline analysis.
+
+Single source of truth: the rank-selection cost model (repro.core.cost_model)
+and the roofline report (repro.analysis.roofline) both read these, so the
+paper's Algorithm-1 adaptation and the perf analysis agree on the hardware.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops_bf16: float      # FLOP/s per chip
+    hbm_bandwidth: float        # B/s per chip
+    hbm_bytes: float            # HBM capacity per chip
+    ici_link_bandwidth: float   # B/s per ICI link
+    mxu_dim: int                # systolic array tile (lanes)
+    sublanes: int               # VREG sublane granularity
+    vmem_bytes: float           # per-core VMEM
+
+
+# Per the assignment prompt: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    hbm_bytes=16 * 1024**3,
+    ici_link_bandwidth=50e9,
+    mxu_dim=128,
+    sublanes=8,
+    vmem_bytes=128 * 1024**2,
+)
+
+DEFAULT = TPU_V5E
+
+
+def mxu_padded(dim: int, spec: HardwareSpec = DEFAULT) -> int:
+    """Dim as the MXU sees it: zero-padded up to a multiple of 128 lanes."""
+    t = spec.mxu_dim
+    return ((dim + t - 1) // t) * t
+
+
+def sublane_padded(dim: int, spec: HardwareSpec = DEFAULT) -> int:
+    t = spec.sublanes
+    return ((dim + t - 1) // t) * t

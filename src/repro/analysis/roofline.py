@@ -1,0 +1,568 @@
+"""Roofline analysis from compiled HLO (the dry-run's perf report).
+
+XLA's ``compiled.cost_analysis()`` reports *one iteration* of every
+``while`` body (verified experimentally) and per-device numbers.  This
+module therefore parses ``compiled.as_text()`` (optimized, post-SPMD HLO)
+itself:
+
+* **FLOPs** — every ``dot`` (2 * |out| * |contracted|) and ``convolution``
+  (2 * |out| * k_h * k_w * C_in / groups), with ops inside ``while`` bodies
+  scaled by the loop trip count (detected from the loop-bound constant in
+  the condition computation; recursive for nested scans).
+* **HBM traffic** — fusion-boundary accounting: for every materialized op
+  (fusion, dot, conv, copy, collective, reduce, scatter/gather, ...) count
+  written output bytes + read operand bytes (operands resolved through the
+  name->shape table).  This is the standard no-reuse roofline convention.
+* **Collective bytes** — per collective op, payload bytes x the ring
+  factor for its group size N (all-reduce 2(N-1)/N, all-gather /
+  reduce-scatter / all-to-all (N-1)/N, collective-permute 1), scaled by
+  trip counts like everything else.
+
+The three roofline terms then follow from the hardware constants in
+:mod:`repro.analysis.hw_specs`:
+
+    compute    = FLOPs_per_device / peak_FLOP/s
+    memory     = HBM_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+from repro.analysis.hw_specs import DEFAULT, HardwareSpec
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_MATERIALIZED = _COLLECTIVES + (
+    "fusion", "dot", "convolution", "copy", "reduce", "sort", "scatter",
+    "gather", "dynamic-slice", "dynamic-update-slice", "transpose",
+    "broadcast", "iota", "concatenate", "slice", "reverse", "pad",
+    "select-and-scatter", "reduce-window", "cholesky", "triangular-solve",
+    "rng", "convert", "custom-call",
+)
+
+_FREE = ("get-tuple-element", "tuple", "bitcast", "parameter", "constant",
+         "after-all", "partition-id", "replica-id", "bitcast-convert",
+         "reshape")
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    shape_str: str
+    out_bytes: float
+    out_elems: float
+    operands: list[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: dict[str, Op]
+    order: list[str]
+
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?)\s*([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+
+
+def _shape_bytes(shape_str: str) -> tuple[float, float]:
+    """Total (bytes, elems) of a shape string (sums tuple components)."""
+    total_b = total_e = 0.0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        elems = 1.0
+        if dims:
+            for d in dims.split(","):
+                elems *= int(d)
+        total_e += elems
+        total_b += elems * _DTYPE_BYTES[dtype]
+    return total_b, total_e
+
+
+def _operand_names(argstr: str) -> list[str]:
+    # operands are the leading %names before the first "),"-style attr
+    names = []
+    depth = 0
+    for tok in re.finditer(r"%([\w.\-]+)|[()]", argstr):
+        t = tok.group(0)
+        if t == "(":
+            depth += 1
+        elif t == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        else:
+            names.append(tok.group(1))
+    return names
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = Computation(m.group(1), {}, [])
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, kind, rest = m.groups()
+        out_b, out_e = _shape_bytes(shape_str)
+        cur.ops[name] = Op(name, kind, shape_str, out_b, out_e,
+                           _operand_names(rest), rest)
+        cur.order.append(name)
+    return comps
+
+
+# ---------------------------------------------------------------------------
+# Per-op costs
+# ---------------------------------------------------------------------------
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    if not m or not op.operands:
+        return 0.0
+    lhs = comp.ops.get(op.operands[0])
+    if lhs is None:
+        return 0.0
+    dims_m = _SHAPE_RE.search(lhs.shape_str)
+    if not dims_m or not dims_m.group(2):
+        return 0.0
+    lhs_dims = [int(d) for d in dims_m.group(2).split(",")]
+    contracted = 1.0
+    if m.group(1):
+        for d in m.group(1).split(","):
+            contracted *= lhs_dims[int(d)]
+    return 2.0 * op.out_elems * contracted
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    if len(op.operands) < 2:
+        return 0.0
+    rhs = comp.ops.get(op.operands[1])
+    if rhs is None:
+        return 0.0
+    dims_m = _SHAPE_RE.search(rhs.shape_str)
+    if not dims_m or not dims_m.group(2):
+        return 0.0
+    rhs_dims = [int(d) for d in dims_m.group(2).split(",")]
+    # rhs dims: spatial... + input features + output features (per dim_labels)
+    lab = re.search(r"dim_labels=\w+_(\w+)->", op.attrs)
+    groups = 1
+    gm = re.search(r"feature_group_count=(\d+)", op.attrs)
+    if gm:
+        groups = int(gm.group(1))
+    if lab:
+        rl = lab.group(1)       # e.g. "01io"
+        per_out = 1.0
+        for ch, d in zip(rl, rhs_dims):
+            if ch != "o":
+                per_out *= d
+    else:
+        per_out = 1.0
+        for d in rhs_dims[:-1]:
+            per_out *= d
+    return 2.0 * op.out_elems * per_out  # rhs 'i' is already per-group
+
+
+def _group_size(op: Op, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", op.attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+def _collective_bytes(op: Op, comp: Computation, n_devices: int,
+                      pure: set | None = None) -> float:
+    """On-wire bytes per device (ring algorithms).
+
+    When the collective's operand resolves (through CPU-inserted dtype
+    converts) to a bf16 value, the payload is counted at bf16 size: on
+    TPU the collective runs on the bf16 tensor directly.
+    """
+    n = max(2, _group_size(op, n_devices))
+    ring = (n - 1) / n
+    kind = op.kind.replace("-start", "")
+    payload = op.out_bytes
+    if pure and op.operands:
+        src = _resolve_through_converts(op.operands[0], comp, pure)
+        if src is not None and src.shape_str.startswith("bf16[") \
+                and op.shape_str.startswith("f32["):
+            payload = payload / 2.0
+    if kind == "all-reduce":
+        return 2.0 * ring * payload
+    if kind == "all-gather":
+        return ring * payload
+    if kind == "reduce-scatter":
+        in_bytes = sum(comp.ops[o].out_bytes for o in op.operands
+                       if o in comp.ops)
+        return ring * (in_bytes or payload * n)
+    if kind == "all-to-all":
+        return ring * payload
+    if kind == "collective-permute":
+        return payload
+    return 0.0
+
+
+# ---------------------------------------------------------------------------
+# While-loop trip counts
+# ---------------------------------------------------------------------------
+
+def _trip_count(op: Op, comps: dict[str, Computation],
+                default: int = 1) -> int:
+    # XLA annotates analyzed loops directly — trust it first.
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.attrs)
+    if m:
+        return max(1, int(m.group(1)))
+    cm = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+    if not cm or cm.group(1) not in comps:
+        return default
+    cond = comps[cm.group(1)]
+    # the loop bound = the largest scalar integer constant in the condition
+    bounds = []
+    for o in cond.ops.values():
+        if o.kind != "constant" or not o.shape_str.startswith(("s32[]",
+                                                               "u32[]",
+                                                               "s64[]")):
+            continue
+        cm2 = re.match(r"\s*(\d+)\)?", o.attrs)
+        if cm2:
+            bounds.append(int(cm2.group(1)))
+    if bounds:
+        return max(1, max(bounds))
+    return default
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_detail: dict = dataclasses.field(default_factory=dict)
+    while_trips: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "HloCosts", scale: float = 1.0) -> None:
+        self.flops += scale * other.flops
+        self.hbm_bytes += scale * other.hbm_bytes
+        self.collective_bytes += scale * other.collective_bytes
+        for k, v in other.collective_detail.items():
+            self.collective_detail[k] = \
+                self.collective_detail.get(k, 0.0) + scale * v
+
+
+def _pure_convert_names(comps: dict[str, Computation]) -> dict[str, set]:
+    """Per computation: ops that are dtype converts (or fusions wrapping
+    only a convert).  The XLA *CPU* backend materializes f32 copies of
+    bf16 values around every dot; on TPU the MXU consumes bf16 and the
+    f32->bf16 output cast fuses — so converts are *free* for the TPU
+    roofline and traffic is accounted at the underlying value's size."""
+    out: dict[str, set] = {}
+    for comp in comps.values():
+        pure: set[str] = set()
+        for op in comp.ops.values():
+            if op.kind == "convert":
+                pure.add(op.name)
+            elif op.kind == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                body = comps.get(m.group(1)) if m else None
+                if body is not None and {o.kind for o in body.ops.values()} \
+                        <= {"parameter", "convert", "bitcast", "copy",
+                            "reshape"}:
+                    pure.add(op.name)
+        out[comp.name] = pure
+    return out
+
+
+def _resolve_through_converts(name: str, comp: Computation,
+                              pure: set) -> Op | None:
+    """Follow convert chains to the underlying (TPU-real) value."""
+    seen = 0
+    op = comp.ops.get(name)
+    while op is not None and op.name in pure and op.operands and seen < 8:
+        op = comp.ops.get(op.operands[0])
+        seen += 1
+    return op
+
+
+def _fusion_sliced_params(op: Op, comps: dict[str, Computation]
+                          ) -> dict[int, float]:
+    """For a fusion op: operand indices consumed *only* via dynamic-slice
+    (or gather) inside the body -> bytes actually read per execution."""
+    m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+    body = comps.get(m.group(1)) if m else None
+    if body is None:
+        return {}
+    # parameter name -> operand index
+    pidx: dict[str, int] = {}
+    for o in body.ops.values():
+        if o.kind == "parameter":
+            im = re.match(r"(\d+)\)?", o.attrs)
+            if im:
+                pidx[o.name] = int(im.group(1))
+    read: dict[int, float] = {}
+    bad: set[int] = set()
+    for o in body.ops.values():
+        if o.kind == "parameter":
+            continue
+        for j, operand in enumerate(o.operands):
+            if operand not in pidx:
+                continue
+            i = pidx[operand]
+            if o.kind in ("dynamic-slice", "gather", "slice") and j == 0:
+                read[i] = read.get(i, 0.0) + o.out_bytes
+            elif o.kind in ("convert", "bitcast", "reshape", "copy"):
+                # pass-through: conservatively treat as full read
+                bad.add(i)
+            else:
+                bad.add(i)
+    return {i: b for i, b in read.items() if i not in bad}
+
+
+def _fusion_dus_root(op: Op, comps: dict[str, Computation]
+                     ) -> tuple[float, int] | None:
+    """If a fusion's root is a dynamic-update-slice of parameter K, return
+    (update_bytes, K): the fusion writes only the slice in place."""
+    m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+    body = comps.get(m.group(1)) if m else None
+    if body is None or not body.order:
+        return None
+    root = body.ops[body.order[-1]]
+    if root.kind != "dynamic-update-slice" or len(root.operands) < 2:
+        return None
+    tgt = body.ops.get(root.operands[0])
+    upd = body.ops.get(root.operands[1])
+    if tgt is None or upd is None or tgt.kind != "parameter":
+        return None
+    im = re.match(r"(\d+)\)?", tgt.attrs)
+    if not im:
+        return None
+    return upd.out_bytes, int(im.group(1))
+
+
+def _comp_costs(comp: Computation, comps: dict[str, Computation],
+                n_devices: int, visited_fusions: dict,
+                memo: dict) -> HloCosts:
+    if comp.name in memo:
+        return memo[comp.name]
+    if "__pure__" not in visited_fusions:
+        visited_fusions["__pure__"] = _pure_convert_names(comps)
+    pure_all = visited_fusions["__pure__"]
+    pure = pure_all.get(comp.name, set())
+    costs = HloCosts()
+    for name in comp.order:
+        op = comp.ops[name]
+        kind = op.kind.replace("-start", "") if op.kind.endswith("-start") \
+            else op.kind
+        if op.kind.endswith("-done"):
+            continue
+        if kind == "while":
+            bm = re.search(r"body=%?([\w.\-]+)", op.attrs)
+            trips = _trip_count(op, comps)
+            if bm and bm.group(1) in comps:
+                body = _comp_costs(comps[bm.group(1)], comps, n_devices,
+                                   visited_fusions, memo)
+                costs.add(body, scale=trips)
+                costs.while_trips[name] = trips
+            continue
+        if kind in ("call", "conditional"):
+            for cname in re.findall(r"(?:to_apply|calls)=%?([\w.\-]+)",
+                                    op.attrs):
+                if cname in comps:
+                    costs.add(_comp_costs(comps[cname], comps, n_devices,
+                                          visited_fusions, memo))
+            continue
+        if kind == "dot":
+            costs.flops += _dot_flops(op, comp)
+        elif kind == "convolution":
+            costs.flops += _conv_flops(op, comp)
+        elif kind == "fusion":
+            # dots/convs inside fusions still carry their own cost
+            fm = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+            if fm and fm.group(1) in comps:
+                sub = comps[fm.group(1)]
+                for o in sub.ops.values():
+                    if o.kind == "dot":
+                        costs.flops += _dot_flops(o, sub)
+                    elif o.kind == "convolution":
+                        costs.flops += _conv_flops(o, sub)
+        if kind in _COLLECTIVES:
+            b = _collective_bytes(op, comp, n_devices, pure)
+            costs.collective_bytes += b
+            costs.collective_detail[kind] = \
+                costs.collective_detail.get(kind, 0.0) + b
+        # HBM traffic: materialized outputs + materialized operand reads.
+        # Pure dtype-converts are CPU-backend artifacts (TPU fuses the
+        # cast): skip their output and account reads/writes at the
+        # underlying value's size.  A fusion that only *dynamic-slices*
+        # an operand (the scan-over-stacked-layers pattern) is charged
+        # the slice, not the full stack — otherwise every layer-scan
+        # iteration would be billed the whole weight stack.
+        if kind in _MATERIALIZED and name not in pure:
+            out_charge = op.out_bytes
+            skip_read: set[int] = set()
+            if kind == "dynamic-update-slice":
+                # in-place update: traffic = the updated slice (r+w), not
+                # the whole buffer (XLA aliases the target).
+                upd = comp.ops.get(op.operands[1]) if len(op.operands) > 1 \
+                    else None
+                if upd is not None:
+                    out_charge = upd.out_bytes
+                skip_read.add(0)
+            sliced = {}
+            if kind == "fusion":
+                sliced = _fusion_sliced_params(op, comps)
+                dus = _fusion_dus_root(op, comps)
+                if dus is not None:
+                    out_charge = min(out_charge, dus[0])
+                    skip_read.add(dus[1])
+            costs.hbm_bytes += out_charge
+            for i, o in enumerate(op.operands):
+                if i in skip_read:
+                    continue
+                src = _resolve_through_converts(o, comp, pure)
+                if src is None or src.out_bytes <= 128:
+                    continue
+                costs.hbm_bytes += min(src.out_bytes,
+                                       sliced.get(i, src.out_bytes))
+    memo[comp.name] = costs
+    return costs
+
+
+def cpu_bf16_upcast_bytes(text: str) -> float:
+    """Bytes of f32 copies of bf16 parameters/caches created by the XLA
+    *CPU* backend (it has no native bf16 dot/scatter, so it materializes
+    f32 upcasts of loop-invariant weights and cache buffers).  These
+    buffers do not exist on TPU — the dry-run's corrected peak subtracts
+    them.  Counted: top-level ``convert``/``copy``-to-f32 ops (and f32
+    dynamic-update-slice chains) whose operand is a parameter /
+    get-tuple-element of matching element count.
+    """
+    comps = parse_hlo(text)
+    # fusion bodies are not buffer boundaries — their "parameters" are
+    # producer outputs, not real buffers; only scan entry + control-flow
+    # computations (while bodies / conds / entry).
+    fusion_bodies: set[str] = set()
+    for comp in comps.values():
+        for op in comp.ops.values():
+            if op.kind == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                if m:
+                    fusion_bodies.add(m.group(1))
+            for sub in re.findall(r"(?:to_apply)=%?([\w.\-]+)", op.attrs):
+                fusion_bodies.add(sub)
+    def is_pure_convert(op: Op) -> bool:
+        if op.kind == "convert":
+            return True
+        if op.kind != "fusion":
+            return False
+        m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+        body = comps.get(m.group(1)) if m else None
+        if body is None:
+            return False
+        kinds = {o.kind for o in body.ops.values()}
+        return kinds <= {"parameter", "convert", "bitcast", "copy"}
+
+    total = 0.0
+    for comp in comps.values():
+        if comp.name in fusion_bodies:
+            continue
+        for op in comp.ops.values():
+            if not op.shape_str.startswith("f32[") or op.out_bytes < 64e6:
+                continue
+            if not is_pure_convert(op):
+                continue
+            src = comp.ops.get(op.operands[0]) if op.operands else None
+            if src is None:
+                continue
+            if src.kind in ("parameter", "get-tuple-element", "copy") \
+                    and src.shape_str.startswith("bf16[") \
+                    and abs(src.out_bytes * 2 - op.out_bytes) < 1:
+                total += op.out_bytes
+    return total
+
+
+def analyze_hlo(text: str, n_devices: int) -> HloCosts:
+    comps = parse_hlo(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: the computation with the most ops
+        entry = max(comps, key=lambda c: len(comps[c].ops))
+    return _comp_costs(comps[entry], comps, n_devices, {}, {})
+
+
+# ---------------------------------------------------------------------------
+# Roofline report
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    model_flops: float
+    bottleneck: str
+    useful_ratio: float
+    detail: dict
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """model-useful compute time / bound step time (the score)."""
+        if self.step_s <= 0:
+            return 0.0
+        return min(1.0, (self.model_flops and
+                         self.model_flops / self.flops or 0.0)
+                   * self.compute_s / self.step_s)
+
+
+def roofline(costs: HloCosts, *, n_devices: int, model_flops_global: float,
+             spec: HardwareSpec = DEFAULT) -> Roofline:
+    """``costs`` are per-device (post-SPMD HLO); model_flops are global."""
+    compute = costs.flops / spec.peak_flops_bf16
+    memory = costs.hbm_bytes / spec.hbm_bandwidth
+    coll = costs.collective_bytes / spec.ici_link_bandwidth
+    model_per_dev = model_flops_global / n_devices
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_per_dev / costs.flops if costs.flops else 0.0
+    return Roofline(compute, memory, coll, costs.flops, costs.hbm_bytes,
+                    costs.collective_bytes, model_per_dev, bottleneck,
+                    useful, dict(costs.collective_detail))

@@ -1,0 +1,12 @@
+from repro.configs.base import (
+    LRDConfig, ModelConfig, ParallelConfig, RunConfig, ShapeConfig,
+    SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
+    applicable_shapes, skip_reason,
+)
+from repro.configs import registry
+
+__all__ = [
+    "LRDConfig", "ModelConfig", "ParallelConfig", "RunConfig", "ShapeConfig",
+    "SHAPES", "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+    "applicable_shapes", "skip_reason", "registry",
+]

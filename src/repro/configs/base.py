@@ -1,0 +1,304 @@
+"""Configuration dataclasses for the repro framework.
+
+Everything in the framework is driven by three config objects:
+
+* :class:`ModelConfig` — architecture hyper-parameters (one instance per
+  assigned architecture lives in ``repro/configs/<arch>.py``).
+* :class:`LRDConfig` — the paper's technique: which layers to decompose, how
+  ranks are chosen (including the Algorithm-1 search and TPU alignment), and
+  which acceleration variants (freezing / merging / branching) are active.
+* :class:`ParallelConfig` — mesh axes and sharding strategy knobs
+  (DP/FSDP/TP/EP/SP, remat, grad-accum, compression).
+
+Configs are plain frozen dataclasses so they hash, print, and diff cleanly and
+can be embedded into jit static args.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Sequence
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+FAMILY_DENSE = "dense"          # pre-norm decoder, GQA, SwiGLU
+FAMILY_MOE = "moe"              # as dense but MoE FFN (optionally MLA)
+FAMILY_VLM = "vlm"              # dense decoder + interleaved cross-attn layers
+FAMILY_HYBRID = "hybrid"        # mamba2 blocks + shared attention block
+FAMILY_SSM = "ssm"              # pure mamba2 (attention-free)
+FAMILY_ENCODER = "encoder"      # bidirectional encoder (audio backbone)
+FAMILY_RESNET = "resnet"        # the paper's own CNN family
+
+FAMILIES = (
+    FAMILY_DENSE, FAMILY_MOE, FAMILY_VLM, FAMILY_HYBRID,
+    FAMILY_SSM, FAMILY_ENCODER, FAMILY_RESNET,
+)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture definition. Defaults describe a small dense decoder."""
+
+    name: str = "tiny"
+    family: str = FAMILY_DENSE
+
+    # Transformer trunk.
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0                  # 0 -> d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 512
+    max_seq_len: int = 131072
+    rope_theta: float = 500000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    act: str = "swiglu"                # "swiglu" | "gelu"
+    attn_logit_softcap: float = 0.0
+
+    # MoE.
+    moe_num_experts: int = 0           # 0 -> dense FFN
+    moe_top_k: int = 2
+    moe_num_shared: int = 0            # always-on shared experts
+    moe_d_ff: int = 0                  # expert hidden dim (0 -> d_ff)
+    moe_every: int = 1                 # MoE FFN every k-th layer (1 = all)
+    moe_first_dense: int = 0           # first k layers use dense FFN
+    moe_capacity_factor: float = 1.25
+    moe_dispatch_groups: int = 0       # 0 = global dispatch; G = data-local
+                                       # hierarchical dispatch (see §Perf)
+
+    # Multi-head Latent Attention (deepseek-v2 style).
+    mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 64
+    qk_nope_dim: int = 128
+    v_head_dim: int = 128
+
+    # SSM (mamba2 / SSD).
+    ssm_state: int = 0                 # N (state dim); 0 -> no SSM
+    ssm_expand: int = 2                # d_inner = expand * d_model
+    ssm_heads: int = 0                 # 0 -> d_inner // 64
+    ssm_chunk: int = 256               # SSD chunk length
+    ssm_conv_width: int = 4
+
+    # Hybrid (zamba2-style shared attention block).
+    hybrid_attn_every: int = 6         # shared attn block applied every k layers
+
+    # VLM (llama-3.2-vision-style cross attention).
+    cross_attn_every: int = 0          # 0 -> no cross-attn layers
+    num_image_tokens: int = 1601       # stub frontend output length
+    vision_d_model: int = 0            # 0 -> d_model
+
+    # Encoder-only (hubert) specifics.
+    is_encoder: bool = False           # bidirectional attention, no KV cache
+    frontend_dim: int = 0              # stub frame-embedding dim (0 -> d_model)
+
+    # ResNet family (paper's own benchmark architecture).
+    resnet_stage_blocks: Sequence[int] = ()
+    resnet_width: int = 64
+    num_classes: int = 1000
+    img_size: int = 224
+
+    # Numerics.
+    dtype: str = "bfloat16"            # activation / param dtype
+    accum_dtype: str = "float32"
+    pad_vocab: bool = True             # pad embed/unembed vocab dim to a
+                                       # multiple of 128 (shardable +
+                                       # MXU-aligned; padded logits masked)
+
+    def __post_init__(self):
+        if self.family not in FAMILIES:
+            raise ValueError(f"unknown family {self.family!r}")
+
+    # -- derived quantities -------------------------------------------------
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.num_heads if self.num_heads else 0
+
+    @property
+    def resolved_moe_d_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def resolved_ssm_heads(self) -> int:
+        return self.ssm_heads or max(1, self.d_inner // 64)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == FAMILY_SSM
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this arch run the 500k-context decode cell?"""
+        return self.family in (FAMILY_SSM, FAMILY_HYBRID)
+
+    @property
+    def has_decode(self) -> bool:
+        return not (self.is_encoder or self.family == FAMILY_RESNET)
+
+    def param_count(self, active_only: bool = False) -> int:
+        """Exact parameter count from the real model's ``eval_shape`` tree.
+
+        ``active_only`` scales routed MoE expert banks by top_k/num_experts
+        (shared experts stay fully active).
+        """
+        return _param_count_cached(self, active_only)
+
+    def matmul_param_count(self, active_only: bool = True) -> int:
+        """Params participating in matmuls per token: excludes the embedding
+        *gather* table (tied tables count once — they are the unembed)."""
+        total = self.param_count(active_only=active_only)
+        if self.family == FAMILY_RESNET:
+            return total
+        if not self.tie_embeddings:
+            total -= self.vocab_size * self.d_model
+        return total
+
+    def flops_per_token(self, active_only: bool = True) -> float:
+        """~6 * N_active per training token (fwd+bwd); use /3 for fwd-only."""
+        return 6.0 * self.matmul_param_count(active_only=active_only)
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def _param_count_cached(cfg: "ModelConfig", active_only: bool) -> int:
+    import jax  # lazy: keep configs importable without touching jax devices
+    from repro.models.api import get_model  # lazy, avoids cycle
+    m = get_model(cfg)
+    shapes = jax.eval_shape(lambda k: m.init(k)[0], jax.random.PRNGKey(0))
+    total = expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = int(leaf.size)
+        total += n
+        names = {getattr(k, "key", None) for k in path}
+        if "experts" in names:
+            expert += n
+    if active_only and cfg.moe_num_experts:
+        total -= expert
+        total += int(expert * cfg.moe_top_k / cfg.moe_num_experts)
+    return int(total)
+
+
+# ---------------------------------------------------------------------------
+# LRD (paper technique) configuration
+# ---------------------------------------------------------------------------
+
+RANK_MODE_RATIO = "ratio"        # rank from target compression ratio (paper Eq. 7)
+RANK_MODE_ALIGNED = "aligned"    # ratio rank snapped to TPU tile (ours)
+RANK_MODE_SEARCH = "search"      # Algorithm 1 (cost-model or measured timer)
+RANK_MODE_ENERGY = "energy"      # keep singular values covering `energy` mass
+
+
+@dataclass(frozen=True)
+class LRDConfig:
+    """The paper's LRD acceleration technique, as a config."""
+
+    enabled: bool = False
+    compression: float = 2.0          # target per-layer compression ratio (α)
+    rank_mode: str = RANK_MODE_ALIGNED
+    rank_align: int = 128             # MXU lane width on TPU
+    rank_min_frac: float = 0.25       # Algorithm-1 search floor: R_min = frac*R
+    energy: float = 0.95              # for RANK_MODE_ENERGY
+    min_dim: int = 256                # don't decompose layers smaller than this
+    targets: Sequence[str] = (        # which logical layers to decompose
+        "attn_q", "attn_k", "attn_v", "attn_o",
+        "ffn_up", "ffn_gate", "ffn_down",
+        "moe_up", "moe_gate", "moe_down",
+        "unembed", "ssm_in", "ssm_out",
+        "conv", "conv1x1", "fc",      # ResNet path (paper §2)
+    )
+    # Acceleration variants (paper §2.1-2.4).
+    freeze: bool = False              # §2.2 freeze W0 factors during fine-tune
+    merge: bool = False               # §2.3 merge factors into neighbours / QK-VO
+    branches: int = 1                 # §2.4 branched (block-diagonal) LRD; 1=off
+    # Kernel dispatch.
+    use_pallas: bool = False          # route low-rank matmuls through kernels/
+
+
+# ---------------------------------------------------------------------------
+# Parallelism configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """Mesh + sharding strategy. Axis names match launch/mesh.py."""
+
+    multi_pod: bool = False
+    fsdp: bool = False                # shard params/opt-state over `data`
+    seq_shard: bool = False           # sequence parallelism on activations
+    remat: str = "none"               # "none" | "dots" | "full"
+    grad_accum: int = 1               # microbatch steps per optimizer step
+    grad_compression_rank: int = 0    # 0 = off; PowerSGD rank otherwise
+    shard_vocab: bool = True
+    decode_seq_shard: bool = False    # shard KV/state over data for B < data
+    shard_rank: bool = False          # shard low-rank RANK dims over `model`
+                                      # (beyond-paper TP variant, see §Perf)
+
+
+# ---------------------------------------------------------------------------
+# Input shape cells (assigned shapes)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                         # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+SHAPES: Mapping[str, ShapeConfig] = {
+    s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+}
+
+
+def applicable_shapes(model: ModelConfig) -> list[ShapeConfig]:
+    """Shape cells that are defined for this architecture (spec skips)."""
+    out = [TRAIN_4K, PREFILL_32K]
+    if model.has_decode:
+        out.append(DECODE_32K)
+        if model.subquadratic:
+            out.append(LONG_500K)
+    return out
+
+
+def skip_reason(model: ModelConfig, shape: ShapeConfig) -> str | None:
+    if shape.kind == "decode" and not model.has_decode:
+        return "encoder-only: no decode step"
+    if shape.name == "long_500k" and not model.subquadratic:
+        return "pure full-attention arch: 500k decode cell skipped per spec"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Experiment = model + lrd + parallel (+shape at call sites)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    lrd: LRDConfig = LRDConfig()
+    parallel: ParallelConfig = ParallelConfig()
+    seed: int = 0
+
+    def replace(self, **kw: Any) -> "RunConfig":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,54 @@
+"""hubert-xlarge — encoder-only audio backbone (w2v2 architecture).
+
+[arXiv:2106.07447; unverified tier]
+48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504 (target units).
+Encoder-only: bidirectional attention, no KV cache/decode shapes.
+The conv waveform frontend is a STUB per spec: ``input_specs()`` provides
+precomputed frame embeddings (B, T, d_model).
+"""
+from repro.configs.base import ModelConfig, ParallelConfig, FAMILY_ENCODER
+from repro.configs.registry import ArchEntry, register
+
+FULL = ModelConfig(
+    name="hubert-xlarge",
+    family=FAMILY_ENCODER,
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab_size=504,
+    is_encoder=True,
+    act="gelu",
+    frontend_dim=1280,
+)
+
+SMOKE = ModelConfig(
+    name="hubert-smoke",
+    family=FAMILY_ENCODER,
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=64,
+    is_encoder=True,
+    act="gelu",
+    frontend_dim=64,
+)
+
+
+def _parallel(kind: str) -> ParallelConfig:
+    if kind == "train":
+        return ParallelConfig(seq_shard=True, remat="full")
+    return ParallelConfig(seq_shard=True)
+
+
+register(ArchEntry(
+    name="hubert-xlarge", full=FULL, smoke=SMOKE, parallel=_parallel,
+    notes="decode_32k/long_500k skipped: encoder-only. vocab=504 not "
+          "divisible by 16 -> unembed replicated (tiny). head_dim=80 is "
+          "MXU-unfriendly (not 128-multiple): rank-selection demo case.",
+))

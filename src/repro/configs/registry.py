@@ -1,0 +1,75 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Every assigned architecture registers a full-size :class:`ModelConfig`, a
+reduced smoke-test config of the same family, and its default
+:class:`ParallelConfig` for each shape kind.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.configs.base import (
+    ModelConfig, ParallelConfig, RunConfig, LRDConfig,
+)
+
+_REGISTRY: dict[str, "ArchEntry"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchEntry:
+    name: str
+    full: ModelConfig
+    smoke: ModelConfig
+    parallel: Callable[[str], ParallelConfig]  # shape-kind -> ParallelConfig
+    notes: str = ""
+
+
+def register(entry: ArchEntry) -> ArchEntry:
+    if entry.name in _REGISTRY:
+        raise ValueError(f"duplicate arch {entry.name}")
+    _REGISTRY[entry.name] = entry
+    return entry
+
+
+def get(name: str) -> ArchEntry:
+    _ensure_loaded()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {name!r}; known: {sorted(_REGISTRY)}") from None
+
+
+def names() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def assigned_names() -> list[str]:
+    """The 10 assigned LM-family architectures (excludes the ResNet repro)."""
+    _ensure_loaded()
+    return [n for n in sorted(_REGISTRY) if not n.startswith("resnet")]
+
+
+def run_config(name: str, shape_kind: str = "train",
+               lrd: LRDConfig | None = None) -> RunConfig:
+    e = get(name)
+    return RunConfig(model=e.full, parallel=e.parallel(shape_kind),
+                     lrd=lrd or LRDConfig())
+
+
+_LOADED = False
+
+
+def _ensure_loaded() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    # Importing the modules runs their register() calls.
+    from repro.configs import (  # noqa: F401
+        moonshot_v1_16b_a3b, deepseek_v2_236b, llama_3_2_vision_90b,
+        mistral_nemo_12b, llama3_2_1b, granite_8b, minitron_4b,
+        zamba2_1_2b, hubert_xlarge, mamba2_2_7b, resnet,
+    )

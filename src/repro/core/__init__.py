@@ -1,0 +1,31 @@
+"""The paper's contribution: LRD as an acceleration technique.
+
+* :mod:`repro.core.svd` / :mod:`repro.core.tucker` — the decompositions
+  (paper Eq. 1-6).
+* :mod:`repro.core.rank_selection` — Algorithm 1 + TPU tile alignment (§2.1).
+* :mod:`repro.core.cost_model` — the TPU timer behind Algorithm 1.
+* :mod:`repro.core.freezing` — factor freezing (§2.2).
+* :mod:`repro.core.merging` — layer merging incl. QK/VO products (§2.3).
+* :mod:`repro.core.branching` — block-diagonal branched LRD (§2.4).
+* :mod:`repro.core.surgery` — whole-model decomposition driver.
+"""
+from repro.core.svd import (  # noqa: F401
+    SVDFactors, svd_decompose, randomized_svd, decompose_auto,
+    ratio_rank, compression_of_rank, energy_rank,
+)
+from repro.core.tucker import (  # noqa: F401
+    TuckerFactors, tucker2_decompose, ratio_ranks,
+)
+from repro.core.rank_selection import (  # noqa: F401
+    ORG, RankDecision, algorithm1, align_rank, select_rank, max_branches,
+)
+from repro.core.branching import (  # noqa: F401
+    BranchedFactors, branch_svd, branch_tucker, quantize_ranks,
+)
+from repro.core.merging import (  # noqa: F401
+    MergedAttnFactors, merge_attention, merge_linear,
+)
+from repro.core.freezing import trainable_mask  # noqa: F401
+from repro.core.surgery import (  # noqa: F401
+    SurgeryReport, LayerDecision, decompose_model, classify_path,
+)

@@ -1,0 +1,124 @@
+"""Branched (block-diagonal) low-rank decomposition — paper §2.4, Eq. 12-17.
+
+A rank-(r1, r2) Tucker factorization splits into ``N`` parallel branches of
+ranks (r1/N, r2/N) by keeping only the *diagonal blocks* of the core
+(Eq. 17).  The core shrinks by ``N x`` without reducing the total rank
+(Eq. 18-20), and the whole structure executes as one grouped matmul
+(Fig. 4) — the TPU-native analogue of grouped convolution, implemented in
+:mod:`repro.kernels.branched_matmul`.
+
+Two initialization paths:
+
+* FC / linear (SVD): ``W = W0 @ W1`` splits column-wise into branch factors
+  with **identity cores** — exact at init (the SVD "core" sqrt(S)·sqrt(S)
+  is diagonal, and a diagonal matrix *is* block-diagonal).  The cores then
+  train as free per-branch (r1/N x r2/N) mixers.
+* Conv (Tucker-2): the HOSVD core is dense, so branching drops its
+  off-diagonal blocks — an approximation (quantified by
+  :func:`branch_error`), traded for the N x core compression exactly as in
+  the paper.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.svd import svd_decompose
+from repro.core.tucker import TuckerFactors, tucker2_decompose
+
+
+class BranchedFactors(NamedTuple):
+    u: jax.Array     # (N, C, r1/N)
+    xc: jax.Array    # (N, r1/N, r2/N)          block-diagonal core
+    v: jax.Array     # (N, r2/N, S)
+
+
+class BranchedConvFactors(NamedTuple):
+    u: jax.Array     # (N, C, r1/N)             per-branch 1x1 in
+    core: jax.Array  # (N, k, k, r1/N, r2/N)    per-branch kxk core
+    v: jax.Array     # (N, r2/N, S)             per-branch 1x1 out
+
+
+def quantize_ranks(r1: int, r2: int, branches: int) -> tuple[int, int]:
+    """Ranks quantized to multiples of N (paper Eq. 10-11), rounding up."""
+    n = branches
+    q = lambda r: max(n, ((r + n - 1) // n) * n)
+    return q(r1), q(r2)
+
+
+def branch_svd(w: jax.Array, rank: int, branches: int) -> BranchedFactors:
+    """Branched factors for a linear layer ``w (..., C, S)`` — exact at init.
+
+    Batch dims (stacked layers / expert banks) pass through: outputs are
+    ``u (..., N, C, rb)``, ``xc (..., N, rb, rb)``, ``v (..., N, rb, S)``.
+    """
+    n = branches
+    rank, _ = quantize_ranks(rank, rank, n)
+    c, s = int(w.shape[-2]), int(w.shape[-1])
+    rank = min(rank, (min(c, s) // n) * n) or n
+    rb = rank // n
+    f = svd_decompose(w, rank)
+    batch = w.shape[:-2]
+    # w0 (..., C, N*rb) -> (..., N, C, rb);  w1 (..., N*rb, S) -> (..., N, rb, S)
+    u = jnp.moveaxis(f.w0.reshape(*batch, c, n, rb), -2, -3)
+    v = f.w1.reshape(*batch, n, rb, s)
+    xc = jnp.broadcast_to(jnp.eye(rb, dtype=w.dtype), (*batch, n, rb, rb))
+    return BranchedFactors(u, jnp.array(xc), v)
+
+
+def branch_tucker(w: jax.Array, r1: int, r2: int,
+                  branches: int) -> BranchedConvFactors:
+    """Branched Tucker-2 of conv ``w (k, k, C, S)`` — paper Eq. 17.
+
+    Keeps the N diagonal (r1/N x r2/N) blocks of the HOSVD core; the
+    off-diagonal blocks are the approximation cost the paper trades for
+    the N x compression of Eq. 18-20.
+    """
+    n = branches
+    r1, r2 = quantize_ranks(r1, r2, n)
+    kh, kw, c, s = w.shape
+    r1 = min(r1, (c // n) * n) or n
+    r2 = min(r2, (s // n) * n) or n
+    b1, b2 = r1 // n, r2 // n
+    f = tucker2_decompose(w, r1, r2)
+    u = jnp.stack([f.u[:, j * b1:(j + 1) * b1] for j in range(n)])
+    v = jnp.stack([f.v[j * b2:(j + 1) * b2, :] for j in range(n)])
+    core = jnp.stack([f.core[:, :, j * b1:(j + 1) * b1, j * b2:(j + 1) * b2]
+                      for j in range(n)])
+    return BranchedConvFactors(u, core, v)
+
+
+def reconstruct(f: BranchedFactors) -> jax.Array:
+    """W' = sum_j U_j X_j V_j (paper Eq. 17, FC form)."""
+    return jnp.einsum("ncr,nrs,nso->co",
+                      f.u.astype(jnp.float32), f.xc.astype(jnp.float32),
+                      f.v.astype(jnp.float32)).astype(f.u.dtype)
+
+
+def reconstruct_conv(f: BranchedConvFactors) -> jax.Array:
+    return jnp.einsum("ncp,nhwpq,nqs->hwcs",
+                      f.u.astype(jnp.float32), f.core.astype(jnp.float32),
+                      f.v.astype(jnp.float32)).astype(f.u.dtype)
+
+
+def branch_error(w: jax.Array, f: BranchedConvFactors) -> float:
+    """Relative Frobenius error of the block-diagonal truncation."""
+    wf = w.astype(jnp.float32)
+    err = jnp.linalg.norm((wf - reconstruct_conv(f).astype(jnp.float32)
+                           ).ravel())
+    return float(err / (jnp.linalg.norm(wf.ravel()) + 1e-30))
+
+
+def branched_linear_params(c: int, s: int, r1: int, r2: int,
+                           branches: int) -> int:
+    n = branches
+    return c * r1 + (r1 // n) * (r2 // n) * n + r2 * s
+
+
+def branched_conv_params(c: int, s: int, k: int, r1: int, r2: int,
+                         branches: int) -> int:
+    """Paper Eq. 18-20: core shrinks by N."""
+    n = branches
+    return c * r1 + n * (r1 // n) * (r2 // n) * k * k + r2 * s

@@ -1,0 +1,155 @@
+"""TPU layer-latency cost model — the timer behind Algorithm 1 on TPU.
+
+The paper times each candidate decomposition with the PyTorch profiler on
+GPU.  On TPU the dominant effect is *tile quantization*: a matmul operand
+dim is padded to the 128-lane MXU width (and 8 sublanes), so a rank of 309
+costs the MXU exactly what 384 costs, while 256 saves a full tile-row.
+
+``matmul_time`` therefore models a (M x K) @ (K x N) as
+
+    t = max(compute, memory)
+    compute = 2 * M' * K' * N' / peak_flops      (padded dims)
+    memory  = bytes(A) + bytes(B) + bytes(C) / hbm_bw   (unpadded, streamed)
+
+which is a two-term roofline per op.  It is deliberately simple — the point
+(paper Fig. 2) is the *staircase* in t(r), and the staircase comes entirely
+from the padding.  A ``measured`` timer (jit wall-clock on the current
+backend) is provided for paper-faithful mode and used in tests to sanity-
+check the model's ordering on CPU-sized problems.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hw_specs import DEFAULT, HardwareSpec, mxu_padded
+
+
+def matmul_time(m: int, k: int, n: int, *, dtype_bytes: int = 2,
+                spec: HardwareSpec = DEFAULT) -> float:
+    """Modelled seconds for (m,k)@(k,n) on one chip."""
+    mp, kp, np_ = mxu_padded(m, spec), mxu_padded(k, spec), mxu_padded(n, spec)
+    compute = 2.0 * mp * kp * np_ / spec.peak_flops_bf16
+    memory = dtype_bytes * (m * k + k * n + m * n) / spec.hbm_bandwidth
+    return max(compute, memory)
+
+
+def dense_layer_time(m: int, c: int, s: int, **kw) -> float:
+    """Original FC layer: one (m,c)@(c,s)."""
+    return matmul_time(m, c, s, **kw)
+
+
+def lowrank_layer_time(m: int, c: int, s: int, rank: int, **kw) -> float:
+    """SVD pair: (m,c)@(c,r) then (m,r)@(r,s).  Two HBM round-trips."""
+    return matmul_time(m, c, rank, **kw) + matmul_time(m, rank, s, **kw)
+
+
+def branched_layer_time(m: int, c: int, s: int, r1: int, r2: int,
+                        branches: int, *, dtype_bytes: int = 2,
+                        spec: HardwareSpec = DEFAULT) -> float:
+    """Block-diagonal branched LRD (paper Eq. 17 / Fig. 4) as executed by
+    the fused grouped kernel (kernels/branched_matmul.py).
+
+    Compute: branches run back-to-back on the MXU (time adds) with
+    per-branch K dims of r/N.  Memory: the kernel keeps the x tile and the
+    branch accumulator in VMEM, so HBM traffic is x + all branch weights +
+    the output — x is NOT re-read per branch.
+    """
+    n = branches
+    b1, b2 = max(1, r1 // n), max(1, r2 // n)
+    mp = mxu_padded(m, spec)
+    # MXU FLOP-time per branch chain on padded dims, summed over branches.
+    flops = n * 2.0 * mp * (mxu_padded(c, spec) * mxu_padded(b1, spec)
+                            + mxu_padded(b1, spec) * mxu_padded(b2, spec)
+                            + mxu_padded(b2, spec) * mxu_padded(s, spec))
+    compute = flops / spec.peak_flops_bf16
+    weights = n * (c * b1 + b1 * b2 + b2 * s)
+    memory = dtype_bytes * (m * c + weights + m * s) / spec.hbm_bandwidth
+    return max(compute, memory)
+
+
+def conv_time(m_hw: int, c: int, s: int, k: int, *, dtype_bytes: int = 2,
+              spec: HardwareSpec = DEFAULT) -> float:
+    """kxk conv at output spatial size m_hw^2 == matmul with K = c*k*k."""
+    return matmul_time(m_hw * m_hw, c * k * k, s,
+                       dtype_bytes=dtype_bytes, spec=spec)
+
+
+def tucker2_time(m_hw: int, c: int, s: int, k: int, r1: int, r2: int,
+                 **kw) -> float:
+    """1x1 (c->r1) + kxk core (r1->r2) + 1x1 (r2->s)."""
+    m = m_hw * m_hw
+    return (matmul_time(m, c, r1, **kw)
+            + matmul_time(m, r1 * k * k, r2, **kw)
+            + matmul_time(m, r2, s, **kw))
+
+
+# ---------------------------------------------------------------------------
+# Timer protocol for Algorithm 1 (rank_selection.py)
+# ---------------------------------------------------------------------------
+# A timer maps rank -> seconds for a fixed layer geometry. ``make_model_timer``
+# builds one from the cost model; ``make_measured_timer`` times a real jit'd
+# layer on the current backend (paper-faithful mode).
+
+def make_model_timer(m: int, c: int, s: int, *, kind: str = "svd",
+                     k: int = 1, beta: float | None = None,
+                     spec: HardwareSpec = DEFAULT) -> Callable[[int], float]:
+    if kind == "svd":
+        def timer(r: int) -> float:
+            return lowrank_layer_time(m, c, s, r, spec=spec)
+    elif kind == "tucker":
+        bb = beta if beta is not None else s / c
+        def timer(r: int) -> float:
+            r2 = max(1, int(round(bb * r)))
+            return tucker2_time(int(m ** 0.5) or 1, c, s, k, r, r2, spec=spec)
+    else:
+        raise ValueError(kind)
+    return timer
+
+
+def make_dense_time(m: int, c: int, s: int, *, kind: str = "svd", k: int = 1,
+                    spec: HardwareSpec = DEFAULT) -> float:
+    if kind == "svd":
+        return dense_layer_time(m, c, s, spec=spec)
+    return conv_time(int(m ** 0.5) or 1, c, s, k, spec=spec)
+
+
+def make_measured_timer(m: int, c: int, s: int, *, dtype=jnp.float32,
+                        iters: int = 5) -> Callable[[int], float]:
+    """Wall-clock timer on the current backend (the paper's method verbatim).
+
+    Times ``(x @ w0) @ w1`` end to end for each candidate rank. Meaningful
+    ordering on CPU for moderate sizes; on TPU it times the real MXU.
+    """
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m, c), dtype)
+
+    @functools.lru_cache(maxsize=None)
+    def timer(r: int) -> float:
+        w0 = jax.random.normal(key, (c, r), dtype)
+        w1 = jax.random.normal(key, (r, s), dtype)
+        f = jax.jit(lambda a, b0, b1: (a @ b0) @ b1)
+        f(x, w0, w1).block_until_ready()          # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            f(x, w0, w1).block_until_ready()
+        return (time.perf_counter() - t0) / iters
+
+    return timer
+
+
+def measured_dense_time(m: int, c: int, s: int, *, dtype=jnp.float32,
+                        iters: int = 5) -> float:
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m, c), dtype)
+    w = jax.random.normal(key, (c, s), dtype)
+    f = jax.jit(lambda a, b: a @ b)
+    f(x, w).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        f(x, w).block_until_ready()
+    return (time.perf_counter() - t0) / iters

@@ -1,0 +1,58 @@
+"""Layer freezing — paper §2.2.
+
+The decomposed factors are computed *from the teacher's weights*, so they
+are near-optimal transforms already; freezing all but one factor per
+decomposed layer removes their gradient and optimizer-state cost during
+fine-tuning (the paper's +25-32% training speedup) while leaving inference
+untouched.
+
+Freezing is realized twice, consistently:
+
+* **forward**: ``apply_linear(..., freeze_factors=True)`` wraps the frozen
+  factor in ``lax.stop_gradient`` — its cotangent is never formed, so the
+  backward FLOPs visibly drop in the compiled HLO (measured by the
+  dry-run).
+* **optimizer**: :func:`trainable_mask` marks the frozen leaves so the
+  optimizer allocates no moment state for them (memory win, visible in
+  ``memory_analysis()``).
+
+Policy (matching the paper's choice in §2.2): freeze ``w0`` of every SVD
+pair — and for branched factors freeze ``u``/``v`` (keep the small cores
+training); for Tucker convs freeze the first and last 1x1 factors.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+PyTree = Any
+
+# Leaf names considered "teacher-derived transforms" per decomposition kind.
+FROZEN_LEAVES = {
+    "w0",          # SVD pair: first factor (U sqrt(S))
+    "u", "v",      # branched: per-branch outer factors (cores stay live)
+    "tucker_u", "tucker_v",  # conv Tucker 1x1 factors
+}
+
+
+def trainable_mask(params: PyTree, *, enabled: bool = True) -> PyTree:
+    """Boolean pytree: True = trainable, False = frozen (paper §2.2)."""
+    def leaf_mask(path, leaf):
+        if not enabled:
+            return True
+        names = {getattr(k, "key", getattr(k, "name", None)) for k in path}
+        return not (names & FROZEN_LEAVES)
+    return jax.tree_util.tree_map_with_path(leaf_mask, params)
+
+
+def frozen_param_count(params: PyTree, mask: PyTree) -> int:
+    counts = jax.tree.map(
+        lambda p, m: 0 if m else int(p.size), params, mask)
+    return sum(jax.tree.leaves(counts))
+
+
+def trainable_param_count(params: PyTree, mask: PyTree) -> int:
+    counts = jax.tree.map(
+        lambda p, m: int(p.size) if m else 0, params, mask)
+    return sum(jax.tree.leaves(counts))

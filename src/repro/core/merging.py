@@ -1,0 +1,166 @@
+"""Layer merging — paper §2.3 (Fig. 3) and its transformer realization.
+
+Adjacent linear maps with no nonlinearity between them compose into one
+matrix, so after decomposition the factor layers can be *multiplied back
+into their neighbours*: the model keeps the original layer count but the
+parameter/FLOP savings of the decomposition.
+
+Two concrete forms:
+
+* **CNN bottleneck merging** (the paper's Fig. 3): Tucker-decompose only
+  the middle kxk conv; absorb its ``U`` 1x1 factor into the preceding 1x1
+  conv and its ``V`` factor into the following 1x1 conv.  Layer count of
+  the block: unchanged (3 convs); params/FLOPs: reduced.  Exactness
+  caveat: in a real bottleneck a norm+ReLU sits between conv1 and conv2 —
+  merging is exact w.r.t. the *linear* composition; we fold the norm scale
+  through the merge (see :func:`fold_scale`) and the ReLU stays where it
+  was (it acts on the merged layer's output channels, which now live in
+  the Tucker R1 basis).  This matches the paper's accounting (their merged
+  ResNet keeps exactly the original layer count, Table 3).
+
+* **Attention product merging** (DESIGN.md §4): the attention scores see
+  only the *product* W_q W_k^T and the output path only W_v W_o, so a
+  decomposed attention can be re-merged into four thin matrices
+  ``aq (d,H,r) / ak (d,r) / bv (d,r) / bo (r,H,d)`` — same layer count as
+  q/k/v/o, params shrink by ~r/d, and the KV cache shrinks to the shared
+  latent (this is structurally DeepSeek-MLA, which hard-codes the paper's
+  merging).  Initialized from the dense weights by joint SVD of the
+  stacked per-head products.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Plain linear merging
+# ---------------------------------------------------------------------------
+
+def merge_linear(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(C,R) @ (R,S) -> (C,S): undo a decomposition into one dense layer."""
+    return jnp.matmul(a.astype(jnp.float32),
+                      b.astype(jnp.float32)).astype(a.dtype)
+
+
+def merge_conv1x1_into_u(conv1: jax.Array, u: jax.Array) -> jax.Array:
+    """Absorb Tucker's U (C_mid, R1) into the preceding 1x1 conv.
+
+    conv1: (1, 1, C_in, C_mid) HWIO -> (1, 1, C_in, R1).
+    """
+    w = jnp.einsum("hwim,mr->hwir", conv1.astype(jnp.float32),
+                   u.astype(jnp.float32))
+    return w.astype(conv1.dtype)
+
+
+def merge_v_into_conv1x1(v: jax.Array, conv3: jax.Array) -> jax.Array:
+    """Absorb Tucker's V (R2, C_mid) into the following 1x1 conv.
+
+    conv3: (1, 1, C_mid, C_out) -> (1, 1, R2, C_out).
+    """
+    w = jnp.einsum("rm,hwmo->hwro", v.astype(jnp.float32),
+                   conv3.astype(jnp.float32))
+    return w.astype(conv3.dtype)
+
+
+def fold_scale(w: jax.Array, scale: jax.Array, axis: int) -> jax.Array:
+    """Fold a per-channel norm scale through a linear map (merge helper)."""
+    shape = [1] * w.ndim
+    shape[axis] = w.shape[axis]
+    return (w.astype(jnp.float32)
+            * scale.astype(jnp.float32).reshape(shape)).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention product merging (QK^T / V.O joint factorization)
+# ---------------------------------------------------------------------------
+
+class MergedAttnFactors(NamedTuple):
+    aq: jax.Array    # (d, H, qk_rank)
+    ak: jax.Array    # (d, qk_rank)        shared key latent
+    bv: jax.Array    # (d, vo_rank)        shared value latent
+    bo: jax.Array    # (vo_rank, H, d)
+
+
+def merge_attention(wq: jax.Array, wk: jax.Array, wv: jax.Array,
+                    wo: jax.Array, *, num_heads: int, qk_rank: int,
+                    vo_rank: int) -> MergedAttnFactors:
+    """Jointly factorize the per-head products M_h = Wq_h Wk_h^T and
+    P_h = Wv_h Wo_h with latents *shared across heads*.
+
+    The shared right factor comes from the SVD of the head-stacked product
+    matrix; per-head left factors are the projections onto it.  With
+    orthonormal latent columns the per-head recovery is exact for
+    rank >= head_dim and least-squares optimal below.
+
+    Shapes: wq/wk/wv (d, H*hd); wo (H*hd, d).  GQA inputs should be
+    broadcast to full heads by the caller.
+    """
+    d = wq.shape[0]
+    hd = wq.shape[1] // num_heads
+    q = wq.astype(jnp.float32).reshape(d, num_heads, hd)
+    k = wk.astype(jnp.float32).reshape(d, num_heads, hd)
+    v = wv.astype(jnp.float32).reshape(d, num_heads, hd)
+    o = wo.astype(jnp.float32).reshape(num_heads, hd, d)
+
+    # --- QK^T ---------------------------------------------------------
+    m = jnp.einsum("dhe,fhe->hdf", q, k)            # (H, d, d) products
+    stacked = m.reshape(num_heads * d, d)
+    _, _, vt = jnp.linalg.svd(stacked, full_matrices=False)
+    ak = vt[:qk_rank, :].T                          # (d, r) orthonormal
+    aq = jnp.einsum("hdf,fr->dhr", m, ak)           # least-squares left
+
+    # --- V.O ------------------------------------------------------------
+    p = jnp.einsum("dhe,hef->hdf", v, o)            # (H, d, d)
+    stacked_p = jnp.transpose(p, (1, 0, 2)).reshape(d, num_heads * d)
+    uu, _, _ = jnp.linalg.svd(stacked_p, full_matrices=False)
+    bv = uu[:, :vo_rank]                            # (d, r) orthonormal
+    bo = jnp.einsum("dr,hdf->rhf", bv, p)           # (r, H, d)
+
+    dt = wq.dtype
+    return MergedAttnFactors(aq.astype(dt), ak.astype(dt),
+                             bv.astype(dt), bo.astype(dt))
+
+
+def merged_attention_error(wq, wk, wv, wo, f: MergedAttnFactors,
+                           num_heads: int) -> tuple[float, float]:
+    """Relative errors of the QK and VO product reconstructions."""
+    d = wq.shape[0]
+    hd = wq.shape[1] // num_heads
+    q = wq.astype(jnp.float32).reshape(d, num_heads, hd)
+    k = wk.astype(jnp.float32).reshape(d, num_heads, hd)
+    v = wv.astype(jnp.float32).reshape(d, num_heads, hd)
+    o = wo.astype(jnp.float32).reshape(num_heads, hd, d)
+    m = jnp.einsum("dhe,fhe->hdf", q, k)
+    p = jnp.einsum("dhe,hef->hdf", v, o)
+    m_hat = jnp.einsum("dhr,fr->hdf", f.aq.astype(jnp.float32),
+                       f.ak.astype(jnp.float32))
+    p_hat = jnp.einsum("dr,rhf->hdf", f.bv.astype(jnp.float32),
+                       f.bo.astype(jnp.float32))
+    err = lambda a, b: float(jnp.linalg.norm((a - b).ravel())
+                             / (jnp.linalg.norm(a.ravel()) + 1e-30))
+    return err(m, m_hat), err(p, p_hat)
+
+
+def merged_attention_params(d: int, num_heads: int, qk_rank: int,
+                            vo_rank: int) -> int:
+    return d * num_heads * qk_rank + d * qk_rank + d * vo_rank \
+        + vo_rank * num_heads * d
+
+
+def dense_attention_params(d: int, num_heads: int, num_kv_heads: int,
+                           head_dim: int) -> int:
+    return (d * num_heads * head_dim * 2
+            + d * num_kv_heads * head_dim * 2)
+
+
+# ---------------------------------------------------------------------------
+# Factor-into-neighbour merging for decomposed param trees
+# ---------------------------------------------------------------------------
+
+def merge_lowrank_subtree(p: dict) -> dict:
+    """Collapse a {"w0","w1"} pair back to dense {"w"} (used when Algorithm 1
+    decides the decomposed layer is slower, or by the un-decompose path)."""
+    return {"w": merge_linear(p["w0"], p["w1"])}

@@ -1,0 +1,131 @@
+"""Rank selection: ratio ranks, the paper's Algorithm 1, and TPU alignment.
+
+Three ways to pick the rank of a decomposed layer:
+
+* ``ratio_rank``       — from the target compression ratio (paper Eq. 7 /
+                         §2 "desired compression ratio"). Produces "odd"
+                         ranks like 309.
+* ``algorithm1``       — the paper's search (§2.1): time the decomposed
+                         layer at every rank in [R_min, R], find the rank
+                         just below the biggest latency cliff, use it only
+                         if it beats the original layer (else ``ORG``).
+                         The timer is pluggable: TPU cost model
+                         (:mod:`repro.core.cost_model`) or measured
+                         wall-clock (paper-faithful).
+* ``align_rank``       — the closed-form TPU shortcut: on a stepwise
+                         padded-tile cost model, Algorithm 1 provably
+                         returns a rank on a tile boundary, so production
+                         configs just snap down to a multiple of 128.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+from repro.core.svd import compression_of_rank, ratio_rank
+from repro.core import cost_model as cm
+
+
+ORG = -1   # sentinel: keep the original (dense) layer
+
+
+@dataclass(frozen=True)
+class RankDecision:
+    rank: int                 # chosen rank, or ORG
+    t_dense: float            # timer value of the original layer
+    t_chosen: float           # timer value at the chosen rank (== t_dense if ORG)
+    searched: tuple[int, ...] = ()
+
+    @property
+    def keep_original(self) -> bool:
+        return self.rank == ORG
+
+    def speedup(self) -> float:
+        return self.t_dense / self.t_chosen if self.t_chosen > 0 else 1.0
+
+
+def algorithm1(timer: Callable[[int], float], t_dense: float, rank: int,
+               rank_min: int, *, step: int = 1) -> RankDecision:
+    """Paper Algorithm 1 with a pluggable timer.
+
+    Scans r from ``rank`` down to ``rank_min`` recording t(r); the latency
+    drop achieved by stepping *down to* r is ``delta(r) = t(r + step) -
+    t(r)``.  R_opt is the rank with the largest drop (ties -> larger rank,
+    preserving accuracy).  If even t(R_opt) is no faster than the dense
+    layer, the layer stays original (the paper's ``ORG`` rows in Table 2).
+    """
+    rank_min = max(1, rank_min)
+    ranks = list(range(rank, rank_min - 1, -step))
+    times = {r: timer(r) for r in ranks}
+    best_r, best_drop = None, 0.0
+    for r_hi, r_lo in zip(ranks[:-1], ranks[1:]):
+        drop = times[r_hi] - times[r_lo]
+        if drop > best_drop + 1e-30:
+            best_r, best_drop = r_lo, drop
+    if best_r is None:
+        # Monotone / flat t(r): fall back to the fastest rank (largest on tie).
+        best_t = min(times.values())
+        best_r = max(r for r, t in times.items() if t <= best_t * (1 + 1e-12))
+    if times[best_r] < t_dense:
+        return RankDecision(best_r, t_dense, times[best_r], tuple(ranks))
+    return RankDecision(ORG, t_dense, t_dense, tuple(ranks))
+
+
+def align_rank(rank: int, align: int = 128, *, min_rank: int = 8,
+               mode: str = "down") -> int:
+    """Snap a rank to the MXU tile grid (the closed-form TPU Algorithm 1).
+
+    ``down`` snaps toward more compression; ``nearest`` rounds.  Ranks that
+    would vanish snap to the sublane floor ``min_rank`` instead.
+    """
+    if rank <= min_rank:
+        return min_rank
+    if rank < align:
+        # below one tile: snap to sublane granularity
+        snapped = (rank // min_rank) * min_rank if mode == "down" else \
+            int(round(rank / min_rank)) * min_rank
+        return max(min_rank, snapped)
+    if mode == "down":
+        return (rank // align) * align
+    if mode == "nearest":
+        return max(align, int(round(rank / align)) * align)
+    raise ValueError(mode)
+
+
+def select_rank(c: int, s: int, *, compression: float, mode: str,
+                align: int = 128, rank_min_frac: float = 0.25,
+                m_tokens: int = 4096,
+                timer: Callable[[int], float] | None = None,
+                t_dense: float | None = None) -> int:
+    """Unified entry used by surgery.py — returns a rank or ``ORG``.
+
+    mode:
+      "ratio"   — paper's compression-ratio rank, unmodified.
+      "aligned" — ratio rank snapped down to the MXU tile.
+      "search"  — Algorithm 1 (cost-model timer unless one is injected).
+    """
+    r0 = ratio_rank(c, s, compression)
+    if mode == "ratio":
+        return r0
+    if mode == "aligned":
+        r = align_rank(r0, align)
+        # alignment must not *increase* params beyond the dense layer
+        return r if compression_of_rank(c, s, r) > 1.0 else ORG
+    if mode == "search":
+        if timer is None:
+            timer = cm.make_model_timer(m_tokens, c, s)
+        if t_dense is None:
+            t_dense = cm.make_dense_time(m_tokens, c, s)
+        r_min = max(1, int(r0 * rank_min_frac))
+        # step at sublane granularity for tractable search on big layers;
+        # start step-aligned so latency cliffs land exactly on tile
+        # boundaries (the search then returns MXU-aligned ranks).
+        step = 1 if r0 <= 512 else 8
+        r_start = (r0 // step) * step
+        return algorithm1(timer, t_dense, r_start, r_min, step=step).rank
+    raise ValueError(f"unknown rank mode {mode!r}")
+
+
+def max_branches(rank: int, *, min_branch_rank: int = 128) -> int:
+    """Largest N with rank/N >= one MXU tile (DESIGN.md §3: under-fill guard)."""
+    return max(1, rank // min_branch_rank)

@@ -1,0 +1,136 @@
+"""Truncated-SVD low-rank decomposition of linear layers (paper Eq. 1-3).
+
+Each dense weight ``W (C, S)`` decomposes into the balanced factor pair
+
+    W0 = U' sqrt(S'),   W1 = sqrt(S') V'^T          (Eq. 3)
+
+with ``W0 (C, R)``, ``W1 (R, S)``.  The balanced split (sqrt of the singular
+values on both sides) keeps the two factors at comparable norms, which
+matters for fine-tuning stability and for the paper's freezing variant
+(§2.2: the frozen factor is a near-orthogonal transform).
+
+Batched variants (leading expert / branch axes) reuse the same code through
+vmap so MoE expert banks decompose in one call.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SVDFactors(NamedTuple):
+    w0: jax.Array        # (..., C, R)
+    w1: jax.Array        # (..., R, S)
+
+
+def svd_decompose(w: jax.Array, rank: int) -> SVDFactors:
+    """Truncated SVD of ``w (..., C, S)`` into balanced rank-``rank`` factors.
+
+    Computed in float32 regardless of the input dtype (bf16 SVD is
+    numerically useless); factors are cast back to ``w.dtype``.
+    """
+    orig_dtype = w.dtype
+    wf = w.astype(jnp.float32)
+    u, s, vt = jnp.linalg.svd(wf, full_matrices=False)
+    r = min(rank, s.shape[-1])
+    sq = jnp.sqrt(s[..., :r])
+    w0 = u[..., :, :r] * sq[..., None, :]
+    w1 = sq[..., :, None] * vt[..., :r, :]
+    return SVDFactors(w0.astype(orig_dtype), w1.astype(orig_dtype))
+
+
+def reconstruct(f: SVDFactors) -> jax.Array:
+    """W' = W0 @ W1 (paper Eq. 2/3)."""
+    return jnp.matmul(f.w0.astype(jnp.float32),
+                      f.w1.astype(jnp.float32)).astype(f.w0.dtype)
+
+
+def approximation_error(w: jax.Array, f: SVDFactors) -> float:
+    """Relative Frobenius error ||W - W0 W1||_F / ||W||_F."""
+    wf = w.astype(jnp.float32)
+    err = jnp.linalg.norm(wf - reconstruct(f).astype(jnp.float32))
+    return float(err / (jnp.linalg.norm(wf) + 1e-30))
+
+
+def energy_rank(w: jax.Array, energy: float) -> int:
+    """Smallest rank whose singular values keep ``energy`` of sum sigma_i^2."""
+    s = jnp.linalg.svd(w.astype(jnp.float32), compute_uv=False)
+    e = jnp.cumsum(s**2)
+    e = e / e[-1]
+    return int(jnp.searchsorted(e, energy) + 1)
+
+
+def ratio_rank(c: int, s: int, compression: float) -> int:
+    """Rank giving ``compression``x fewer params: R = C*S / (alpha*(C+S))."""
+    r = int(math.floor(c * s / (compression * (c + s))))
+    return max(1, min(r, min(c, s)))
+
+
+def compression_of_rank(c: int, s: int, rank: int) -> float:
+    """Achieved parameter compression ratio for a rank-R pair."""
+    return (c * s) / (rank * (c + s))
+
+
+def lowrank_params(c: int, s: int, rank: int) -> int:
+    return rank * (c + s)
+
+
+def svd_flops_per_row(c: int, s: int, rank: int) -> float:
+    """Forward matmul FLOPs per input row (2 matmuls through the bottleneck)."""
+    return 2.0 * rank * (c + s)
+
+
+def dense_flops_per_row(c: int, s: int) -> float:
+    return 2.0 * c * s
+
+
+def randomized_svd(w: jax.Array, rank: int, *, oversample: int = 8,
+                   n_iter: int = 2, key: jax.Array | None = None
+                   ) -> SVDFactors:
+    """Halko-style randomized SVD — O(C*S*R) instead of O(C*S*min(C,S)).
+
+    Used by surgery on very large matrices (e.g. 163840x2048 embeddings)
+    where full SVD on host would dominate decomposition time; the paper's
+    "takes only a few seconds" property is preserved this way.
+    """
+    orig_dtype = w.dtype
+    wf = w.astype(jnp.float32)
+    c, s = wf.shape[-2:]
+    k = min(rank + oversample, min(c, s))
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    omega = jax.random.normal(key, (*wf.shape[:-2], s, k), jnp.float32)
+    y = wf @ omega                                     # (..., C, k)
+    for _ in range(n_iter):                            # power iterations
+        y = wf @ (jnp.swapaxes(wf, -1, -2) @ y)
+        y, _ = jnp.linalg.qr(y)
+    q, _ = jnp.linalg.qr(y)                            # (..., C, k)
+    b = jnp.swapaxes(q, -1, -2) @ wf                   # (..., k, S)
+    ub, sb, vtb = jnp.linalg.svd(b, full_matrices=False)
+    r = min(rank, sb.shape[-1])
+    sq = jnp.sqrt(sb[..., :r])
+    w0 = (q @ ub[..., :, :r]) * sq[..., None, :]
+    w1 = sq[..., :, None] * vtb[..., :r, :]
+    return SVDFactors(w0.astype(orig_dtype), w1.astype(orig_dtype))
+
+
+def decompose_auto(w: jax.Array, rank: int, *, randomized_threshold: int = 4096,
+                   key: jax.Array | None = None) -> SVDFactors:
+    """Full SVD for small matrices, randomized for big ones."""
+    c, s = int(w.shape[-2]), int(w.shape[-1])
+    if min(c, s) > randomized_threshold and rank < min(c, s) // 4:
+        return randomized_svd(w, rank, key=key)
+    return svd_decompose(w, rank)
+
+
+def host_svd_decompose(w: np.ndarray, rank: int) -> tuple[np.ndarray, np.ndarray]:
+    """NumPy twin for checkpoint-surgery paths that never touch devices."""
+    u, s, vt = np.linalg.svd(w.astype(np.float32), full_matrices=False)
+    r = min(rank, s.shape[-1])
+    sq = np.sqrt(s[:r])
+    return (u[:, :r] * sq[None, :]).astype(w.dtype), \
+           (sq[:, None] * vt[:r, :]).astype(w.dtype)

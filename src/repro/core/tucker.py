@@ -1,0 +1,101 @@
+"""Tucker-2 decomposition of conv weight tensors (paper Eq. 4-6, Fig. 1b).
+
+A conv kernel ``W (C, S, k, k)`` (in-ch, out-ch, spatial) decomposes into
+
+    1x1 conv  U  (C, R1)
+    k x k core X (R1, R2, k, k)
+    1x1 conv  V  (R2, S)
+
+via HOSVD: mode-C and mode-S unfoldings give the factor matrices, the core
+is the double contraction of W with them.  This is the "Tucker2" used by
+the paper (spatial modes too small to be worth decomposing).
+
+Layout note: we store conv weights as (k, k, C, S) = HWIO (the JAX
+``conv_general_dilated`` rhs convention); the math below unfolds on the
+I/O modes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TuckerFactors(NamedTuple):
+    u: jax.Array      # (C, R1)   first 1x1
+    core: jax.Array   # (k, k, R1, R2)
+    v: jax.Array      # (R2, S)   last 1x1
+
+
+def tucker2_decompose(w: jax.Array, r1: int, r2: int) -> TuckerFactors:
+    """HOSVD Tucker-2 of ``w (k, k, C, S)`` with channel ranks (r1, r2)."""
+    orig_dtype = w.dtype
+    wf = w.astype(jnp.float32)
+    kh, kw, c, s = wf.shape
+    r1 = min(r1, c)
+    r2 = min(r2, s)
+    # Mode-C unfolding: (C, k*k*S)
+    unfold_c = jnp.transpose(wf, (2, 0, 1, 3)).reshape(c, -1)
+    uc, _, _ = jnp.linalg.svd(unfold_c, full_matrices=False)
+    u = uc[:, :r1]                                          # (C, R1)
+    # Mode-S unfolding: (S, k*k*C)
+    unfold_s = jnp.transpose(wf, (3, 0, 1, 2)).reshape(s, -1)
+    us, _, _ = jnp.linalg.svd(unfold_s, full_matrices=False)
+    v = us[:, :r2]                                          # (S, R2)
+    # Core: contract both channel modes with the factor transposes.
+    core = jnp.einsum("hwcs,cp,sq->hwpq", wf, u, v)         # (k,k,R1,R2)
+    return TuckerFactors(u.astype(orig_dtype), core.astype(orig_dtype),
+                         jnp.transpose(v).astype(orig_dtype))
+
+
+def reconstruct(f: TuckerFactors) -> jax.Array:
+    """W' = core ×_C U ×_S V (paper Eq. 4)."""
+    cf = f.core.astype(jnp.float32)
+    return jnp.einsum("hwpq,cp,qs->hwcs", cf, f.u.astype(jnp.float32),
+                      f.v.astype(jnp.float32)).astype(f.core.dtype)
+
+
+def approximation_error(w: jax.Array, f: TuckerFactors) -> float:
+    wf = w.astype(jnp.float32)
+    err = jnp.linalg.norm((wf - reconstruct(f).astype(jnp.float32)).ravel())
+    return float(err / (jnp.linalg.norm(wf.ravel()) + 1e-30))
+
+
+def tucker2_params(c: int, s: int, k: int, r1: int, r2: int) -> int:
+    return c * r1 + r1 * r2 * k * k + r2 * s
+
+
+def dense_conv_params(c: int, s: int, k: int) -> int:
+    return c * s * k * k
+
+
+def tucker2_flops(c: int, s: int, k: int, r1: int, r2: int,
+                  out_hw: int) -> float:
+    """Forward FLOPs for one image at output spatial size out_hw^2."""
+    m = out_hw * out_hw
+    return 2.0 * m * (c * r1 + r1 * r2 * k * k + r2 * s)
+
+
+def dense_conv_flops(c: int, s: int, k: int, out_hw: int) -> float:
+    return 2.0 * out_hw * out_hw * c * s * k * k
+
+
+def ratio_ranks(c: int, s: int, k: int, compression: float,
+                beta: float | None = None) -> tuple[int, int]:
+    """Ranks (r1, r2) hitting a target compression ratio (paper Eq. 7).
+
+    ``beta = r2/r1`` defaults to S/C (keeps the core square-ish in the
+    same aspect ratio as the layer).  Solves
+        c*r1 + beta*k^2*r1^2 + beta*r1*s = c*s*k^2 / alpha
+    for r1 (positive quadratic root — Eq. 7 of the paper).
+    """
+    if beta is None:
+        beta = s / c
+    a = beta * k * k
+    b = c + beta * s
+    rhs = c * s * k * k / compression
+    r1 = (-b + (b * b + 4.0 * a * rhs) ** 0.5) / (2.0 * a)
+    r1 = max(1, min(int(r1), c))
+    r2 = max(1, min(int(round(beta * r1)), s))
+    return r1, r2

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+* :mod:`repro.kernels.lowrank_matmul` — fused ``(x@W0)@W1`` (the SVD pair
+  of paper Eq. 3) keeping the rank-bottleneck intermediate in VMEM.
+* :mod:`repro.kernels.branched_matmul` — block-diagonal grouped matmul
+  (the paper's branched Tucker, Fig. 4, adapted to the MXU).
+* :mod:`repro.kernels.ops` — jit'd wrappers with padding + dispatch.
+* :mod:`repro.kernels.ref` — pure-jnp oracles for the allclose tests.
+
+Validated with ``interpret=True`` on CPU; compiled path targets TPU.
+"""

@@ -1,0 +1,87 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Handles:
+* leading-batch flattening (``(..., C) -> (M, C)``),
+* padding M/S up to tile multiples (and slicing back),
+* interpret-mode on CPU (the container target) vs compiled on TPU,
+* VMEM-fit dispatch — oversize geometries fall back to the jnp reference
+  (which XLA fuses reasonably); the kernel covers the production-common
+  block sizes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import branched_matmul as bk
+from repro.kernels import lowrank_matmul as lk
+from repro.kernels import ref
+
+# v5e practical per-core VMEM working-set budget (conservative).
+VMEM_BUDGET = 64 * 1024 * 1024
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> tuple[jax.Array, int]:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def lowrank_matmul(x: jax.Array, w0: jax.Array, w1: jax.Array, *,
+                   bm: int = lk.DEFAULT_BM, bn: int = lk.DEFAULT_BN,
+                   force_kernel: bool = False) -> jax.Array:
+    """y = (x @ w0) @ w1 with the fused kernel when it fits VMEM."""
+    lead = x.shape[:-1]
+    c = x.shape[-1]
+    r, s = w1.shape
+    x2 = x.reshape(-1, c)
+    m = x2.shape[0]
+    bm_eff = min(bm, max(8, m))
+    fits = lk.vmem_bytes(bm_eff, c, r, min(bn, s)) <= VMEM_BUDGET
+    if not (fits or force_kernel):
+        return ref.lowrank_matmul_ref(x, w0, w1)
+    x2, pad_m = _pad_to(x2, 0, bm_eff)
+    w1p, pad_s = _pad_to(w1, 1, bn)
+    y = lk.lowrank_matmul(x2, w0, w1p, bm=bm_eff, bn=min(bn, w1p.shape[1]),
+                          interpret=not _on_tpu())
+    if pad_m:
+        y = y[:m]
+    if pad_s:
+        y = y[:, :s]
+    return y.reshape(*lead, s)
+
+
+def branched_matmul(x: jax.Array, u: jax.Array, xc: jax.Array,
+                    v: jax.Array, *, bm: int = bk.DEFAULT_BM,
+                    bn: int = bk.DEFAULT_BN,
+                    force_kernel: bool = False) -> jax.Array:
+    """y = sum_n ((x @ u_n) @ xc_n) @ v_n with the grouped kernel."""
+    lead = x.shape[:-1]
+    c = x.shape[-1]
+    n, _, r1 = u.shape
+    _, _, r2 = xc.shape
+    s = v.shape[-1]
+    x2 = x.reshape(-1, c)
+    m = x2.shape[0]
+    bm_eff = min(bm, max(8, m))
+    fits = bk.vmem_bytes(bm_eff, c, r1, r2, min(bn, s)) <= VMEM_BUDGET
+    if not (fits or force_kernel):
+        return ref.branched_matmul_ref(x, u, xc, v)
+    x2, pad_m = _pad_to(x2, 0, bm_eff)
+    vp, pad_s = _pad_to(v, 2, bn)
+    y = bk.branched_matmul(x2, u, xc, vp, bm=bm_eff,
+                           bn=min(bn, vp.shape[2]),
+                           interpret=not _on_tpu())
+    if pad_m:
+        y = y[:m]
+    if pad_s:
+        y = y[:, :s]
+    return y.reshape(*lead, s)

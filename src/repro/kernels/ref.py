@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lowrank_matmul_ref(x: jax.Array, w0: jax.Array, w1: jax.Array,
+                       accum_dtype=jnp.float32) -> jax.Array:
+    """y = (x @ w0) @ w1 through the rank bottleneck. x (M,C) -> (M,S)."""
+    h = jnp.matmul(x, w0, preferred_element_type=accum_dtype)
+    y = jnp.matmul(h.astype(x.dtype), w1, preferred_element_type=accum_dtype)
+    return y.astype(x.dtype)
+
+
+def branched_matmul_ref(x: jax.Array, u: jax.Array, xc: jax.Array,
+                        v: jax.Array, accum_dtype=jnp.float32) -> jax.Array:
+    """y = sum_n ((x @ u_n) @ xc_n) @ v_n  (paper Eq. 17).
+
+    x (M,C); u (N,C,r1); xc (N,r1,r2); v (N,r2,S) -> (M,S).
+    """
+    h = jnp.einsum("mc,ncr->nmr", x, u, preferred_element_type=accum_dtype)
+    h = h.astype(x.dtype)
+    h = jnp.einsum("nmr,nrs->nms", h, xc, preferred_element_type=accum_dtype)
+    h = h.astype(x.dtype)
+    y = jnp.einsum("nms,nso->mo", h, v, preferred_element_type=accum_dtype)
+    return y.astype(x.dtype)

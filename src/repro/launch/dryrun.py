@@ -1,0 +1,412 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count at first initialization, and the production meshes
+need 512 placeholder host devices.  Do not import this module from tests.
+
+Worker mode (one cell)::
+
+    python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k \
+        [--multi-pod] [--rank-mode ratio|aligned|none] [--branches N] \
+        [--freeze] [--shard-rank] [--out cell.json] [--save-hlo cell.hlo.gz]
+
+Sweep mode (all cells, subprocess per cell, resumable)::
+
+    python -m repro.launch.dryrun --sweep --out-dir results/dryrun \
+        [--multi-pod] [--jobs 4]
+
+Each cell records: lower/compile wall time, ``memory_analysis()`` (bytes
+per device — proves it fits), ``cost_analysis()``, and the parsed roofline
+terms (compute / memory / collective seconds + bottleneck) from
+:mod:`repro.analysis.roofline`.
+"""
+import argparse
+import dataclasses
+import gzip
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.analysis import roofline as rl
+from repro.analysis.hw_specs import DEFAULT as HW
+from repro.configs import registry
+from repro.configs.base import (LRDConfig, RunConfig, SHAPES, ShapeConfig,
+                                applicable_shapes, skip_reason)
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import get_model, input_specs
+from repro.parallel import sharding as shd
+from repro.train import steps as steps_mod
+from repro.train.optim import OptimConfig
+
+
+def build_lrd(args) -> LRDConfig:
+    if args.rank_mode == "none":
+        return LRDConfig(enabled=False)
+    return LRDConfig(enabled=True, compression=args.compression,
+                     rank_mode=args.rank_mode, branches=args.branches,
+                     freeze=args.freeze, rank_align=args.rank_align)
+
+
+def _shape_tree(model, init_fn):
+    """eval_shape for params while capturing the (static) axes tree."""
+    box = {}
+
+    def only_params(key):
+        p, a = init_fn(key)
+        box["axes"] = a
+        return p
+
+    sds = jax.eval_shape(only_params, jax.random.PRNGKey(0))
+    return sds, box["axes"]
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             lrd: LRDConfig, shard_rank: bool = False,
+             seq_shard: bool | None = None,
+             remat: str | None = None,
+             moe_groups: int | None = None,
+             fsdp: bool | None = None,
+             grad_accum: int | None = None,
+             save_hlo: str | None = None) -> dict:
+    t_start = time.time()
+    entry = registry.get(arch)
+    cfg = entry.full
+    if moe_groups is not None:
+        cfg = dataclasses.replace(cfg, moe_dispatch_groups=moe_groups)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi_pod" if multi_pod else "single_pod",
+                "status": "skip", "reason": reason}
+
+    parallel = entry.parallel(shape.kind)
+    parallel = dataclasses.replace(
+        parallel, multi_pod=multi_pod, shard_rank=shard_rank,
+        **({"seq_shard": seq_shard} if seq_shard is not None else {}),
+        **({"fsdp": fsdp} if fsdp is not None else {}),
+        **({"grad_accum": grad_accum} if grad_accum is not None else {}),
+        **({"remat": remat} if remat is not None else {}))
+    run = RunConfig(model=cfg, lrd=lrd, parallel=parallel)
+    model = get_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_devices = mesh.size
+    notes: list[str] = []
+
+    def init_fn(key):
+        p, a = model.init(key)
+        if lrd.enabled:
+            from repro.core.surgery import decompose_model
+            p, a, report = decompose_model(p, a, lrd,
+                                           m_tokens=shape.seq_len)
+            init_fn.report = report          # type: ignore[attr-defined]
+        return p, a
+
+    with mesh:
+        shd.install_activation_rules(mesh, parallel)
+        try:
+            params_sds, axes = _shape_tree(model, init_fn)
+            surgery = getattr(init_fn, "report", None)
+            p_shardings = shd.make_param_shardings(mesh, params_sds, axes,
+                                                   parallel, notes)
+            specs = input_specs(cfg, shape)
+            in_shd = shd.input_shardings(mesh, specs, parallel)
+
+            if shape.kind == "train":
+                opt_sds = jax.eval_shape(
+                    lambda p: steps_mod.init_opt_state(
+                        model, run, p, OptimConfig()), params_sds)
+                o_shardings = _opt_shardings(mesh, opt_sds, p_shardings)
+                step = steps_mod.make_train_step(model, run, OptimConfig(),
+                                                 mesh)
+                jit_step = jax.jit(
+                    step,
+                    in_shardings=(p_shardings, o_shardings,
+                                  {k: in_shd[k] for k in specs}),
+                    donate_argnums=(0, 1))
+                args_sds = (params_sds, opt_sds, specs)
+            elif shape.kind == "prefill":
+                cache_sds = (model.cache_spec(shape.global_batch,
+                                              shape.seq_len)
+                             if cfg.has_decode else None)
+                if cache_sds is None:   # encoder: forward pass, no cache
+                    step = steps_mod.make_forward_step(model, run)
+                    jit_step = jax.jit(step, in_shardings=(p_shardings,
+                                                           in_shd))
+                    args_sds = (params_sds, dict(specs))
+                else:
+                    c_shd = shd.cache_shardings(mesh, cache_sds, parallel,
+                                                shape.global_batch,
+                                                shape.seq_len)
+                    step = steps_mod.make_prefill_step(model, run)
+                    jit_step = jax.jit(
+                        step, in_shardings=(p_shardings, in_shd, c_shd),
+                        donate_argnums=(2,))
+                    args_sds = (params_sds, specs, cache_sds)
+            else:  # decode
+                cache_sds = model.cache_spec(shape.global_batch,
+                                             shape.seq_len)
+                c_shd = shd.cache_shardings(mesh, cache_sds, parallel,
+                                            shape.global_batch,
+                                            shape.seq_len)
+                step = steps_mod.make_decode_step(model, run)
+                jit_step = jax.jit(
+                    step,
+                    in_shardings=(p_shardings, in_shd["tokens"],
+                                  in_shd["positions"], c_shd),
+                    donate_argnums=(3,))
+                args_sds = (params_sds, specs["tokens"],
+                            specs["positions"], cache_sds)
+
+            t0 = time.time()
+            lowered = jit_step.lower(*args_sds)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+
+            mem = compiled.memory_analysis()
+            try:
+                ca = compiled.cost_analysis() or {}
+            except Exception:
+                ca = {}
+            hlo = compiled.as_text()
+            costs = rl.analyze_hlo(hlo, n_devices)
+            upcast = rl.cpu_bf16_upcast_bytes(hlo)
+            if shape.kind == "train":
+                model_flops = cfg.flops_per_token() * shape.global_batch \
+                    * shape.seq_len
+            elif shape.kind == "prefill":
+                model_flops = cfg.flops_per_token() / 3.0 \
+                    * shape.global_batch * shape.seq_len
+            else:
+                model_flops = cfg.flops_per_token() / 3.0 \
+                    * shape.global_batch
+            roof = rl.roofline(costs, n_devices=n_devices,
+                               model_flops_global=model_flops, spec=HW)
+            if save_hlo:
+                with gzip.open(save_hlo, "wt") as f:
+                    f.write(hlo)
+            result = {
+                "arch": arch, "shape": shape_name,
+                "mesh": "multi_pod" if multi_pod else "single_pod",
+                "status": "ok",
+                "n_devices": n_devices,
+                "lower_s": round(t_lower, 2),
+                "compile_s": round(t_compile, 2),
+                "memory": {
+                    "argument_bytes": mem.argument_size_in_bytes,
+                    "output_bytes": mem.output_size_in_bytes,
+                    "temp_bytes": mem.temp_size_in_bytes,
+                    "peak_bytes": mem.argument_size_in_bytes
+                    + mem.temp_size_in_bytes,
+                    # XLA *CPU* materializes f32 copies of bf16 weights /
+                    # caches (no native bf16 dot); TPU doesn't. Corrected
+                    # peak subtracts those buffers (see roofline.py).
+                    "cpu_bf16_upcast_bytes": upcast,
+                    "peak_bytes_tpu_corrected": max(
+                        0, mem.argument_size_in_bytes
+                        + mem.temp_size_in_bytes - upcast),
+                    "fits_hbm": (mem.argument_size_in_bytes
+                                 + mem.temp_size_in_bytes - upcast)
+                    < HW.hbm_bytes,
+                },
+                "xla_cost_analysis": {k: ca.get(k) for k in
+                                      ("flops", "bytes accessed")},
+                "costs": {
+                    "flops_per_device": costs.flops,
+                    "hbm_bytes_per_device": costs.hbm_bytes,
+                    "collective_bytes_per_device": costs.collective_bytes,
+                    "collective_detail": costs.collective_detail,
+                    "while_trips": costs.while_trips,
+                },
+                "roofline": {
+                    "compute_s": roof.compute_s,
+                    "memory_s": roof.memory_s,
+                    "collective_s": roof.collective_s,
+                    "step_s": roof.step_s,
+                    "bottleneck": roof.bottleneck,
+                    "model_flops_per_device": roof.model_flops,
+                    "useful_flops_ratio": roof.useful_ratio,
+                    "roofline_fraction": roof.roofline_fraction,
+                },
+                "surgery": surgery.summary() if surgery else None,
+                "sharding_notes": notes[:20],
+                "total_s": round(time.time() - t_start, 2),
+            }
+            return result
+        finally:
+            shd.clear_activation_rules()
+
+
+def _opt_shardings(mesh, opt_sds, p_shardings):
+    """Adam m/v follow the param shardings; scalars/zero-size replicate."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rep = NamedSharding(mesh, P())
+    out = {}
+    for k, v in opt_sds.items():
+        if k == "adam":
+            out[k] = {
+                "step": rep,
+                "m": jax.tree.map(
+                    lambda s, p: p if s.ndim and s.shape != (0,) else rep,
+                    v["m"], p_shardings),
+                "v": jax.tree.map(
+                    lambda s, p: p if s.ndim and s.shape != (0,) else rep,
+                    v["v"], p_shardings),
+            }
+        elif k == "ef":
+            out[k] = jax.tree.map(lambda _: rep, v)
+        else:
+            out[k] = jax.tree.map(lambda _: rep, v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sweep driver
+# ---------------------------------------------------------------------------
+
+def all_cells() -> list[tuple[str, str]]:
+    cells = []
+    for arch in registry.assigned_names():
+        cfg = registry.get(arch).full
+        for shape in applicable_shapes(cfg):
+            cells.append((arch, shape.name))
+        for shape in SHAPES.values():
+            if skip_reason(cfg, shape):
+                cells.append((arch, shape.name))   # recorded as skip
+    return cells
+
+
+def sweep(args) -> int:
+    import os as _os
+    _os.makedirs(args.out_dir, exist_ok=True)
+    cells = all_cells()
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    jobs: list[tuple[str, str, bool, str]] = []
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+            if args.tag_suffix:
+                tag += f"__{args.tag_suffix}"
+            out = _os.path.join(args.out_dir, tag + ".json")
+            if _os.path.exists(out) and not args.force:
+                continue
+            jobs.append((arch, shape, mp, out))
+    print(f"[sweep] {len(jobs)} cells to run "
+          f"({len(cells) * len(meshes)} total)")
+    running: list[tuple[subprocess.Popen, str]] = []
+    failed = 0
+
+    def drain(block: bool):
+        nonlocal failed
+        done = []
+        for proc, out in running:
+            if proc.poll() is None and not block:
+                continue
+            proc.wait()
+            done.append((proc, out))
+            ok = proc.returncode == 0 and _os.path.exists(out)
+            status = "?"
+            if ok:
+                with open(out) as f:
+                    status = json.load(f).get("status")
+            else:
+                failed += 1
+            print(f"[sweep] {out}: rc={proc.returncode} status={status}",
+                  flush=True)
+        for d in done:
+            running.remove(d)
+
+    for arch, shape, mp, out in jobs:
+        while len(running) >= args.jobs:
+            drain(block=False)
+            time.sleep(1)
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--out", out,
+               "--rank-mode", args.rank_mode,
+               "--compression", str(args.compression),
+               "--branches", str(args.branches)]
+        if mp:
+            cmd.append("--multi-pod")
+        if args.freeze:
+            cmd.append("--freeze")
+        if args.shard_rank:
+            cmd.append("--shard-rank")
+        env = dict(_os.environ)
+        env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+        proc = subprocess.Popen(cmd, env=env,
+                                stdout=subprocess.DEVNULL,
+                                stderr=subprocess.PIPE)
+        running.append((proc, out))
+        print(f"[sweep] launched {out}", flush=True)
+    while running:
+        drain(block=True)
+    return failed
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--rank-mode", default="ratio",
+                    choices=["none", "ratio", "aligned", "search"])
+    ap.add_argument("--compression", type=float, default=2.0)
+    ap.add_argument("--rank-align", type=int, default=128)
+    ap.add_argument("--branches", type=int, default=1)
+    ap.add_argument("--freeze", action="store_true")
+    ap.add_argument("--shard-rank", action="store_true")
+    ap.add_argument("--seq-shard", type=int, default=-1,
+                    help="-1 keep arch default; 0/1 override")
+    ap.add_argument("--moe-groups", type=int, default=-1,
+                    help="-1 keep config; N = hierarchical dispatch groups")
+    ap.add_argument("--fsdp", type=int, default=-1,
+                    help="-1 keep config; 0/1 override")
+    ap.add_argument("--grad-accum", type=int, default=-1)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--out-dir", default="results/dryrun")
+    ap.add_argument("--tag-suffix", default="")
+    ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.sweep:
+        sys.exit(1 if sweep(args) else 0)
+
+    try:
+        result = run_cell(
+            args.arch, args.shape, multi_pod=args.multi_pod,
+            lrd=build_lrd(args), shard_rank=args.shard_rank,
+            seq_shard=None if args.seq_shard < 0 else bool(args.seq_shard),
+            remat=args.remat,
+            moe_groups=None if args.moe_groups < 0 else args.moe_groups,
+            fsdp=None if args.fsdp < 0 else bool(args.fsdp),
+            grad_accum=None if args.grad_accum < 0 else args.grad_accum,
+            save_hlo=args.save_hlo)
+    except Exception:
+        result = {"arch": args.arch, "shape": args.shape,
+                  "mesh": "multi_pod" if args.multi_pod else "single_pod",
+                  "status": "error", "error": traceback.format_exc()}
+    out = json.dumps(result, indent=2, default=float)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(out)
+    print(out if len(out) < 8000 else out[:8000])
+    if result["status"] == "error":
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Serving launcher: load (or init+decompose) a model and serve a batch of
+synthetic requests through the continuous-batching engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+        [--ckpt-dir DIR] [--requests 8] [--max-new 32]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import registry
+from repro.configs.base import LRDConfig, RunConfig
+from repro.core.surgery import decompose_model
+from repro.models.api import get_model
+from repro.serve.engine import Request, ServeEngine
+from repro.train import checkpoint as ckpt
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=registry.names())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--lrd", default="aligned",
+                    choices=["none", "ratio", "aligned", "search"])
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="restore params from a training checkpoint")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    entry = registry.get(args.arch)
+    cfg = entry.smoke if args.smoke else entry.full
+    if not cfg.has_decode:
+        raise SystemExit(f"{args.arch} is encoder-only: nothing to serve")
+    model = get_model(cfg)
+    params, axes = model.init(jax.random.PRNGKey(0))
+    lrd = LRDConfig()
+    if args.lrd != "none":
+        lrd = LRDConfig(enabled=True, rank_mode=args.lrd,
+                        min_dim=32 if args.smoke else 256)
+        params, _, rep = decompose_model(params, axes, lrd)
+        print(f"[lrd] {rep.summary()}")
+    if args.ckpt_dir:
+        got = ckpt.restore_latest(args.ckpt_dir, {"params": params})
+        if got:
+            params = got[0]["params"]
+            print(f"[restore] step {got[1]['step']}")
+
+    run = RunConfig(model=cfg, lrd=lrd, parallel=entry.parallel("decode"))
+    eng = ServeEngine(run, params, slots=args.slots, max_seq=args.max_seq)
+    key = jax.random.PRNGKey(7)
+    for i in range(args.requests):
+        key, sub = jax.random.split(key)
+        n = 3 + int(jax.random.randint(sub, (), 0, 6))
+        prompt = jax.random.randint(sub, (n,), 0, cfg.vocab_size).tolist()
+        eng.add_request(Request(uid=i, prompt=prompt,
+                                max_new_tokens=args.max_new,
+                                temperature=args.temperature))
+    eng.run_until_done()
+    print(f"[throughput] {eng.throughput()}")
+
+
+if __name__ == "__main__":
+    main()

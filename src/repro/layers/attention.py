@@ -1,0 +1,423 @@
+"""Attention: RoPE, GQA (train/prefill/decode), MLA (DeepSeek-V2), cross-attn.
+
+Prefill/train attention is computed with a *query-chunked* online pass
+(`scan` over query blocks, full KV per block, f32 logits) so the logits
+tensor never exceeds ``chunk x kv_len`` per (batch, head) — the jnp analogue
+of flash attention, and the shape the TPU splash kernel would take.
+
+Decode attends one token against a cache of ``S`` slots; the new token's K/V
+is written at ``pos`` via dynamic_update_slice (works on sharded dims under
+GSPMD).
+
+All projections go through :func:`repro.layers.param.apply_linear`, so LRD
+surgery (SVD pairs / branched factors) applies transparently — and the
+*merged attention* variant (paper §2.3 mapped to QK^T/V·O joint
+factorization, DESIGN.md §4) lives here as ``init_merged_attention``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.layers.param import (
+    ParamBuilder, apply_linear, init_linear, shard_act,
+    BATCH, SEQ, EMBED, QKV, RANK, HEADS, KV_HEADS, HEAD_DIM,
+)
+from repro.layers.norm import init_rms_norm, rms_norm
+
+Q_CHUNK = 1024
+
+
+class AttnOpts(NamedTuple):
+    freeze_factors: bool = False
+    use_pallas: bool = False
+    softcap: float = 0.0
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_sincos(positions: jax.Array, dim: int, theta: float):
+    """positions (...,) -> sin/cos (..., dim/2) in f32."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x (..., S, n_heads, dim); sin/cos (..., S, dim/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :].astype(jnp.float32)
+    c = cos[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Core softmax-attention passes
+# ---------------------------------------------------------------------------
+
+def _scaled_logits(q, k, scale, softcap):
+    # q (B,Sq,KH,G,hd) k (B,Skv,KH,hd) -> (B,KH,G,Sq,Skv), f32
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    return s
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, q_offset: jax.Array | int = 0,
+                      softcap: float = 0.0, q_chunk: int = Q_CHUNK,
+                      scale: float | None = None) -> jax.Array:
+    """q (B,Sq,H,hd), k/v (B,Skv,KH,hd) -> (B,Sq,H,hd).
+
+    Query-chunked: memory O(q_chunk * Skv) per (b, kv-head-group).
+    ``q_offset`` is the absolute position of q[0] for causal masking.
+    """
+    b, sq, h, hd = q.shape
+    _, skv, kh, _ = k.shape
+    g = h // kh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, sq, kh, g, hd)
+
+    def attend(qc, qpos):
+        s = _scaled_logits(qc, k, scale, softcap)          # (B,KH,G,qc,Skv)
+        if causal:
+            kpos = jnp.arange(skv)
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+        return o.reshape(b, qc.shape[1], h, hd)
+
+    if sq <= q_chunk:
+        qpos = q_offset + jnp.arange(sq)
+        return attend(qg, qpos)
+
+    n_chunks = sq // q_chunk
+    assert sq % q_chunk == 0, (sq, q_chunk)
+    qs = qg.reshape(b, n_chunks, q_chunk, kh, g, hd)
+
+    def body(_, xs):
+        qc, idx = xs                     # qc (B, q_chunk, KH, G, hd)
+        qpos = q_offset + idx * q_chunk + jnp.arange(q_chunk)
+        return None, attend(qc, qpos)
+
+    _, out = lax.scan(body, None,
+                      (jnp.moveaxis(qs, 1, 0), jnp.arange(n_chunks)))
+    # out (n_chunks, B, q_chunk, H, hd) -> (B, Sq, H, hd)
+    return jnp.moveaxis(out, 0, 1).reshape(b, sq, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def init_attention(pb: ParamBuilder, name: str, d_model: int, num_heads: int,
+                   num_kv_heads: int, head_dim: int) -> None:
+    sub = pb.child(name)
+    init_linear(sub, "q", d_model, num_heads * head_dim, EMBED, QKV)
+    init_linear(sub, "k", d_model, num_kv_heads * head_dim, EMBED, QKV)
+    init_linear(sub, "v", d_model, num_kv_heads * head_dim, EMBED, QKV)
+    init_linear(sub, "o", num_heads * head_dim, d_model, QKV, EMBED)
+
+
+def init_kv_cache(batch: int, seq_len: int, num_kv_heads: int, head_dim: int,
+                  dtype) -> dict:
+    shape = (batch, seq_len, num_kv_heads, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def kv_cache_spec(batch: int, seq_len: int, num_kv_heads: int, head_dim: int,
+                  dtype) -> dict:
+    shape = (batch, seq_len, num_kv_heads, head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def apply_attention(p: dict, x: jax.Array, *, num_heads: int,
+                    num_kv_heads: int, head_dim: int, rope_theta: float,
+                    positions: jax.Array, causal: bool = True,
+                    cache: dict | None = None,
+                    cache_pos: jax.Array | None = None,
+                    opts: AttnOpts = AttnOpts()) -> tuple[jax.Array, dict | None]:
+    """Self-attention. Returns (output, updated_cache).
+
+    * train:   cache=None — pure causal attention over x.
+    * prefill: cache provided (zeros) — fills cache[0:S], causal.
+    * decode:  x has Sq=1, cache full; writes K/V at ``cache_pos`` and
+               attends over the whole cache.
+    """
+    b, sq, _ = x.shape
+    kw = dict(freeze_factors=opts.freeze_factors, use_pallas=opts.use_pallas)
+    q = apply_linear(p["q"], x, **kw).reshape(b, sq, num_heads, head_dim)
+    k = apply_linear(p["k"], x, **kw).reshape(b, sq, num_kv_heads, head_dim)
+    v = apply_linear(p["v"], x, **kw).reshape(b, sq, num_kv_heads, head_dim)
+
+    sin, cos = rope_sincos(positions, head_dim, rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    q = shard_act(q, BATCH, SEQ, HEADS, HEAD_DIM)
+    k = shard_act(k, BATCH, SEQ, KV_HEADS, HEAD_DIM)
+    v = shard_act(v, BATCH, SEQ, KV_HEADS, HEAD_DIM)
+
+    new_cache = None
+    if cache is None:
+        o = chunked_attention(q, k, v, causal=causal, softcap=opts.softcap)
+    elif cache_pos is None:  # prefill (any length, incl. 1-token prompts)
+        new_cache = {"k": lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1),
+                     "v": lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1)}
+        o = chunked_attention(q, k, v, causal=causal, softcap=opts.softcap)
+    else:  # decode: per-example positions (B,) — scatter into cache slots
+        assert sq == 1, sq
+        bidx = jnp.arange(b)
+        ck = cache["k"].at[bidx, cache_pos].set(k[:, 0])
+        cv = cache["v"].at[bidx, cache_pos].set(v[:, 0])
+        new_cache = {"k": ck, "v": cv}
+        skv = ck.shape[1]
+        # mask out slots beyond each example's position
+        valid = jnp.arange(skv)[None, :] <= cache_pos[:, None]   # (B,S)
+        o = _decode_attention(q, ck, cv, valid, opts.softcap)
+    o = o.reshape(b, sq, num_heads * head_dim)
+    out = apply_linear(p["o"], o, **kw)
+    return out, new_cache
+
+
+def _decode_attention(q, k, v, valid, softcap):
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    qg = q.reshape(b, sq, kh, h // kh, hd)
+    s = _scaled_logits(qg, k, 1.0 / math.sqrt(hd), softcap)
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)   # valid (B,Skv)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return o.reshape(b, sq, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# Merged attention (paper §2.3 mapped to transformers, DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+def init_merged_attention(pb: ParamBuilder, name: str, d_model: int,
+                          num_heads: int, head_dim: int, qk_rank: int,
+                          vo_rank: int) -> None:
+    """Joint factorization of the weight *products* W_q W_k^T and W_v W_o.
+
+    Per head group: logits = (x A_q)(x A_k)^T with A_q (d, H, qk_rank),
+    A_k (d, qk_rank) shared latent (MLA-style); context = attn · (x B_v) and
+    out = ctx · B_o with a vo_rank bottleneck.  Layer count matches the
+    original attention (4 matmuls), parameters shrink by rank/d — the
+    transformer realization of "layer merging keeps the original depth".
+    """
+    sub = pb.child(name)
+    sub.param("aq", (d_model, num_heads, qk_rank), (EMBED, HEADS, RANK))
+    sub.param("ak", (d_model, qk_rank), (EMBED, RANK))
+    sub.param("bv", (d_model, vo_rank), (EMBED, RANK))
+    sub.param("bo", (vo_rank, num_heads, d_model), (RANK, HEADS, EMBED))
+
+
+def apply_merged_attention(p: dict, x: jax.Array, *, positions: jax.Array,
+                           causal: bool = True,
+                           opts: AttnOpts = AttnOpts()) -> jax.Array:
+    b, s, d = x.shape
+    h = p["aq"].shape[1]
+    r = p["aq"].shape[2]
+    aq, ak, bv, bo = p["aq"], p["ak"], p["bv"], p["bo"]
+    if opts.freeze_factors:
+        ak = lax.stop_gradient(ak)
+        bv = lax.stop_gradient(bv)
+    q = jnp.einsum("bsd,dhr->bshr", x, aq)          # (B,S,H,r)
+    k = jnp.einsum("bsd,dr->bsr", x, ak)            # shared latent keys
+    sin, cos = rope_sincos(positions, r, 1e4)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k[:, :, None, :], sin, cos)[:, :, 0]
+    vlat = jnp.einsum("bsd,dr->bsr", x, bv)         # (B,S,vo_rank)
+    o = chunked_attention(q, k[:, :, None, :],
+                          vlat[:, :, None, :], causal=causal,
+                          softcap=opts.softcap, scale=1.0 / math.sqrt(r))
+    out = jnp.einsum("bshr,rhd->bsd", o.reshape(b, s, h, -1), bo)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2) — inherently the paper's merged/low-rank attention
+# ---------------------------------------------------------------------------
+
+def init_mla(pb: ParamBuilder, name: str, cfg) -> None:
+    sub = pb.child(name)
+    d = cfg.d_model
+    h = cfg.num_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        init_linear(sub, "q_a", d, cfg.q_lora_rank, EMBED, RANK)
+        init_rms_norm(sub, "q_norm", cfg.q_lora_rank)
+        init_linear(sub, "q_b", cfg.q_lora_rank, h * qk, RANK, QKV)
+    else:
+        init_linear(sub, "q_b", d, h * qk, EMBED, QKV)
+    init_linear(sub, "kv_a", d, cfg.kv_lora_rank + cfg.qk_rope_dim, EMBED, RANK)
+    init_rms_norm(sub, "kv_norm", cfg.kv_lora_rank)
+    init_linear(sub, "kv_b", cfg.kv_lora_rank,
+                h * (cfg.qk_nope_dim + cfg.v_head_dim), RANK, QKV)
+    init_linear(sub, "o", h * cfg.v_head_dim, d, QKV, EMBED)
+
+
+def mla_cache_spec(batch: int, seq_len: int, cfg, dtype) -> dict:
+    return {
+        "ckv": jax.ShapeDtypeStruct((batch, seq_len, cfg.kv_lora_rank), dtype),
+        "krope": jax.ShapeDtypeStruct((batch, seq_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def init_mla_cache(batch: int, seq_len: int, cfg, dtype) -> dict:
+    return {"ckv": jnp.zeros((batch, seq_len, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, seq_len, cfg.qk_rope_dim), dtype)}
+
+
+def _mla_qkr(p, x, cfg, positions, kw):
+    b, sq, _ = x.shape
+    h = cfg.num_heads
+    if cfg.q_lora_rank:
+        qa = rms_norm(p["q_norm"], apply_linear(p["q_a"], x, **kw),
+                      cfg.norm_eps)
+        q = apply_linear(p["q_b"], qa, **kw)
+    else:
+        q = apply_linear(p["q_b"], x, **kw)
+    q = q.reshape(b, sq, h, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    sin, cos = rope_sincos(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, sin, cos)
+    kva = apply_linear(p["kv_a"], x, **kw)
+    ckv, k_rope = jnp.split(kva, [cfg.kv_lora_rank], axis=-1)
+    ckv = rms_norm(p["kv_norm"], ckv, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], sin, cos)[:, :, 0]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def apply_mla(p: dict, x: jax.Array, cfg, *, positions: jax.Array,
+              causal: bool = True, cache: dict | None = None,
+              cache_pos: jax.Array | None = None,
+              opts: AttnOpts = AttnOpts()) -> tuple[jax.Array, dict | None]:
+    """Multi-head latent attention. Decode uses the *absorbed* form:
+    queries projected into the kv_lora latent space, attention runs entirely
+    against the cached latents (never materializing per-head K/V) — this is
+    exactly the paper's layer-merging executed at inference time.
+    """
+    b, sq, _ = x.shape
+    h, nope, rope_d = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    vd = cfg.v_head_dim
+    kw = dict(freeze_factors=opts.freeze_factors, use_pallas=opts.use_pallas)
+    q_nope, q_rope, ckv, k_rope = _mla_qkr(p, x, cfg, positions, kw)
+    scale = 1.0 / math.sqrt(nope + rope_d)
+
+    new_cache = None
+    if cache is not None and cache_pos is not None:  # absorbed decode
+        bidx = jnp.arange(b)
+        cc = cache["ckv"].at[bidx, cache_pos].set(ckv[:, 0])
+        cr = cache["krope"].at[bidx, cache_pos].set(k_rope[:, 0])
+        new_cache = {"ckv": cc, "krope": cr}
+        # Absorbed decode: fold kv_b's K-half into q, V-half into output.
+        wkv = _kv_b_matrix(p["kv_b"], cfg)             # (lora, h, nope+vd)
+        wk, wv = wkv[..., :nope], wkv[..., nope:]
+        q_lat = jnp.einsum("bqhn,lhn->bqhl", q_nope, wk)     # (B,1,H,lora)
+        s = (jnp.einsum("bqhl,bsl->bhqs", q_lat, cc,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bqhr,bsr->bhqs", q_rope, cr,
+                          preferred_element_type=jnp.float32)) * scale
+        valid = jnp.arange(cc.shape[1])[None, :] <= cache_pos[:, None]
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
+        attn = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        ctx_lat = jnp.einsum("bhqs,bsl->bqhl", attn, cc)     # (B,1,H,lora)
+        o = jnp.einsum("bqhl,lhv->bqhv", ctx_lat, wv)
+    else:
+        if cache is not None:  # prefill: fill latent cache
+            new_cache = {
+                "ckv": lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, 0, 1),
+                "krope": lax.dynamic_update_slice_in_dim(cache["krope"],
+                                                         k_rope, 0, 1)}
+        kv = apply_linear(p["kv_b"], ckv, **kw).reshape(b, sq, h, nope + vd)
+        k_nope, v = kv[..., :nope], kv[..., nope:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, sq, h, rope_d))], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # pad v to qk dim for the shared attention kernel, then slice
+        o = chunked_attention(q, k, _pad_last(v, nope + rope_d - vd),
+                              causal=causal, softcap=opts.softcap,
+                              scale=scale)[..., :vd]
+    out = apply_linear(p["o"], o.reshape(b, sq, h * vd), **kw)
+    return out, new_cache
+
+
+def _kv_b_matrix(p: dict, cfg) -> jax.Array:
+    """kv_b as a dense (lora, h, nope+vd) tensor (recompose if decomposed)."""
+    from repro.layers.param import linear_kind
+    if linear_kind(p) == "dense":
+        w = p["w"]
+    elif linear_kind(p) == "lowrank":
+        w = p["w0"] @ p["w1"]
+    else:
+        w = jnp.einsum("ncr,nrs,nso->co", p["u"], p["xc"], p["v"])
+    return w.reshape(cfg.kv_lora_rank, cfg.num_heads,
+                     cfg.qk_nope_dim + cfg.v_head_dim)
+
+
+def _pad_last(x, n):
+    if n <= 0:
+        return x
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, n)]
+    return jnp.pad(x, pad)
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (VLM): queries from text, K/V from image embeddings
+# ---------------------------------------------------------------------------
+
+def init_cross_attention(pb: ParamBuilder, name: str, d_model: int,
+                         num_heads: int, num_kv_heads: int,
+                         head_dim: int, kv_dim: int) -> None:
+    sub = pb.child(name)
+    init_linear(sub, "q", d_model, num_heads * head_dim, EMBED, QKV)
+    init_linear(sub, "k", kv_dim, num_kv_heads * head_dim, EMBED, QKV)
+    init_linear(sub, "v", kv_dim, num_kv_heads * head_dim, EMBED, QKV)
+    init_linear(sub, "o", num_heads * head_dim, d_model, QKV, EMBED)
+    sub.param("gate", (), (), init="zeros")
+
+
+def cross_attn_kv(p: dict, kv_feats: jax.Array, *, num_kv_heads: int,
+                  head_dim: int, opts: AttnOpts = AttnOpts()) -> dict:
+    """Precompute cross-attention K/V from image features (cached at
+    prefill — image tokens never change during decode)."""
+    b, t, _ = kv_feats.shape
+    kw = dict(freeze_factors=opts.freeze_factors, use_pallas=opts.use_pallas)
+    k = apply_linear(p["k"], kv_feats, **kw).reshape(b, t, num_kv_heads,
+                                                     head_dim)
+    v = apply_linear(p["v"], kv_feats, **kw).reshape(b, t, num_kv_heads,
+                                                     head_dim)
+    return {"k": k, "v": v}
+
+
+def apply_cross_attention(p: dict, x: jax.Array,
+                          kv_feats: jax.Array | None = None, *,
+                          num_heads: int, num_kv_heads: int, head_dim: int,
+                          kv: dict | None = None,
+                          opts: AttnOpts = AttnOpts()) -> jax.Array:
+    b, sq, _ = x.shape
+    kw = dict(freeze_factors=opts.freeze_factors, use_pallas=opts.use_pallas)
+    if kv is None:
+        kv = cross_attn_kv(p, kv_feats, num_kv_heads=num_kv_heads,
+                           head_dim=head_dim, opts=opts)
+    q = apply_linear(p["q"], x, **kw).reshape(b, sq, num_heads, head_dim)
+    o = chunked_attention(q, kv["k"], kv["v"], causal=False,
+                          softcap=opts.softcap)
+    o = apply_linear(p["o"], o.reshape(b, sq, num_heads * head_dim), **kw)
+    return jnp.tanh(p["gate"].astype(jnp.float32)).astype(x.dtype) * o

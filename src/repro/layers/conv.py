@@ -1,0 +1,82 @@
+"""Conv ops with LRD dispatch (dense | Tucker-2 | branched Tucker).
+
+Weights are HWIO ``(k, k, C, S)``; activations NHWC.  The LRD surgery
+rewrites a conv subtree to the Tucker triple (paper Fig. 1b) or its
+branched form (Fig. 4); :func:`apply_conv` dispatches on the keys present,
+so ResNet model code is decomposition-agnostic — the same seam as
+``apply_linear``.
+
+The branched core runs as a *grouped convolution*
+(``feature_group_count=N``) exactly as the paper's Fig. 4 equivalence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.layers.param import ParamBuilder, CONV, EMBED, FFN
+
+
+def init_conv(pb: ParamBuilder, name: str, c_in: int, c_out: int, k: int,
+              scale: float | None = None) -> None:
+    sub = pb.child(name)
+    fan_in = c_in * k * k
+    sub.param("w", (k, k, c_in, c_out), (CONV, CONV, EMBED, FFN),
+              scale=scale if scale is not None else fan_in ** -0.5)
+
+
+def _conv(x: jax.Array, w: jax.Array, stride: int, groups: int = 1,
+          padding: str = "SAME") -> jax.Array:
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def apply_conv(p: dict, x: jax.Array, *, stride: int = 1,
+               padding: str = "SAME",
+               freeze_factors: bool = False) -> jax.Array:
+    """NHWC conv through a (possibly decomposed) weight subtree."""
+    if "w" in p:                                   # dense
+        return _conv(x, p["w"], stride, padding=padding)
+    if "w0" in p:                                  # 1x1 conv = SVD pair
+        w0, w1 = p["w0"], p["w1"]
+        if freeze_factors:
+            w0 = lax.stop_gradient(w0)
+        h = _conv(x, w0[None, None, :, :], stride, padding="VALID")
+        return _conv(h, w1[None, None, :, :], 1, padding="VALID")
+    if "tucker_u" in p:                            # Tucker-2 triple
+        u, core, v = p["tucker_u"], p["core"], p["tucker_v"]
+        if freeze_factors:
+            u = lax.stop_gradient(u)
+            v = lax.stop_gradient(v)
+        h = _conv(x, u[None, None, :, :], 1, padding="VALID")
+        h = _conv(h, core, stride, padding=padding)
+        return _conv(h, v[None, None, :, :], 1, padding="VALID")
+    # Branched Tucker: u (N,C,r1), core (N,k,k,r1,r2), v (N,r2,S).
+    u, core, v = p["u"], p["core"], p["v"]
+    if freeze_factors:
+        u = lax.stop_gradient(u)
+        v = lax.stop_gradient(v)
+    n, c, r1 = u.shape
+    _, kh, kw, _, r2 = core.shape
+    s = v.shape[-1]
+    # 1) project into all branches at once: (C, N*r1)
+    u_cat = jnp.moveaxis(u, 0, 1).reshape(c, n * r1)
+    h = _conv(x, u_cat[None, None, :, :], 1, padding="VALID")
+    # 2) grouped kxk conv: block-diagonal core == feature_group_count=N
+    #    HWIO for grouped conv wants I = r1 (per-group), O = N*r2.
+    core_g = jnp.concatenate([core[j] for j in range(n)], axis=-1)
+    h = _conv(h, core_g, stride, groups=n, padding=padding)
+    # 3) combine branches: block-diag (N*r2, S) == sum_j h_j @ v_j
+    v_cat = v.reshape(n * r2, s)
+    return _conv(h, v_cat[None, None, :, :], 1, padding="VALID")
+
+
+def conv_out_channels(p: dict) -> int:
+    if "w" in p:
+        return p["w"].shape[-1]
+    if "tucker_u" in p:
+        return p["tucker_v"].shape[-1]
+    return p["v"].shape[-1]

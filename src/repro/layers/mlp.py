@@ -1,0 +1,35 @@
+"""Feed-forward blocks (SwiGLU / GELU) over the linear-op dispatch seam."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.param import (
+    ParamBuilder, apply_linear, init_linear, shard_act,
+    BATCH, SEQ, EMBED, FFN,
+)
+
+
+def init_mlp(pb: ParamBuilder, name: str, d_model: int, d_ff: int,
+             act: str = "swiglu") -> None:
+    sub = pb.child(name)
+    init_linear(sub, "up", d_model, d_ff, EMBED, FFN)
+    if act == "swiglu":
+        init_linear(sub, "gate", d_model, d_ff, EMBED, FFN)
+    init_linear(sub, "down", d_ff, d_model, FFN, EMBED)
+
+
+def apply_mlp(p: dict, x: jax.Array, act: str = "swiglu", *,
+              freeze_factors: bool = False,
+              use_pallas: bool = False) -> jax.Array:
+    kw = dict(freeze_factors=freeze_factors, use_pallas=use_pallas)
+    up = apply_linear(p["up"], x, **kw)
+    if act == "swiglu":
+        gate = apply_linear(p["gate"], x, **kw)
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    else:
+        raise ValueError(f"unknown act {act}")
+    h = shard_act(h, BATCH, SEQ, FFN)
+    return apply_linear(p["down"], h, **kw)

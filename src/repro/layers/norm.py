@@ -1,0 +1,43 @@
+"""Normalization layers (RMSNorm / LayerNorm), f32 internals."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.param import ParamBuilder, EMBED
+
+
+def init_rms_norm(pb: ParamBuilder, name: str, dim: int) -> None:
+    sub = pb.child(name)
+    sub.param("scale", (dim,), (EMBED,), init="ones")
+
+
+def rms_norm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layer_norm(pb: ParamBuilder, name: str, dim: int) -> None:
+    sub = pb.child(name)
+    sub.param("scale", (dim,), (EMBED,), init="ones")
+    sub.param("bias", (dim,), (EMBED,), init="zeros")
+
+
+def layer_norm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def gated_rms_norm(p: dict, x: jax.Array, gate: jax.Array,
+                   eps: float = 1e-5) -> jax.Array:
+    """Mamba2's RMSNormGated: normalize(x * silu(gate))."""
+    xf = x.astype(jnp.float32) * jax.nn.silu(gate.astype(jnp.float32))
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)

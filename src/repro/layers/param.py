@@ -1,0 +1,205 @@
+"""Parameter construction + the linear-op dispatch seam.
+
+Params are plain nested dicts of ``jnp`` arrays.  Every init function builds
+two parallel trees through :class:`ParamBuilder`:
+
+* ``params`` — the arrays (or ShapeDtypeStructs under ``jax.eval_shape``),
+* ``axes``  — matching tuples of *logical axis names* used by
+  ``repro.parallel.sharding`` to resolve ``NamedSharding``s.
+
+The LRD surgery (repro.core.surgery) replaces a dense leaf ``{"w": W}`` with
+``{"w0": ..., "w1": ...}`` (SVD pair) or ``{"u": ..., "xc": ..., "v": ...}``
+(branched, block-diagonal core).  :func:`apply_linear` dispatches on the keys
+present so *model code never changes* when a layer is decomposed — the
+paper's technique is a pure parameter-tree transform.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+PyTree = Any
+
+# Logical axis names (resolved to mesh axes by parallel/sharding.py).
+LAYERS = "layers"        # stacked-layer leading axis (scan dim; never sharded)
+BATCH = "batch"
+SEQ = "seq"
+EMBED = "embed"          # d_model
+FFN = "ffn"              # hidden / intermediate
+HEADS = "heads"          # query heads
+KV_HEADS = "kv_heads"
+HEAD_DIM = "head_dim"
+QKV = "qkv"              # flattened heads*head_dim projection output
+VOCAB = "vocab"
+EXPERTS = "experts"
+RANK = "rank"            # low-rank inner dimension
+BRANCH = "branch"        # branched-LRD branch axis
+CONV = "conv"            # conv spatial/window dims
+STATE = "state"          # SSM state dim
+INNER = "inner"          # SSM d_inner
+NONE = None
+
+
+class ParamBuilder:
+    """Builds ``(params, axes)`` trees with per-leaf RNG splitting."""
+
+    def __init__(self, key: jax.Array, dtype: jnp.dtype):
+        self._key = key
+        self.dtype = dtype
+        self.params: dict = {}
+        self.axes: dict = {}
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(self, name: str, shape: tuple[int, ...], axes: tuple,
+              init: str = "normal", scale: float | None = None,
+              dtype: jnp.dtype | None = None) -> None:
+        assert len(shape) == len(axes), (name, shape, axes)
+        dtype = dtype or self.dtype
+        if init == "normal":
+            fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+            std = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+            v = (jax.random.normal(self._next_key(), shape, jnp.float32) * std)
+        elif init == "zeros":
+            v = jnp.zeros(shape, jnp.float32)
+        elif init == "ones":
+            v = jnp.ones(shape, jnp.float32)
+        elif init == "embed":
+            std = scale if scale is not None else 1.0
+            v = jax.random.normal(self._next_key(), shape, jnp.float32) * std
+        else:
+            raise ValueError(f"unknown init {init}")
+        self.params[name] = v.astype(dtype)
+        self.axes[name] = tuple(axes)
+
+    def child(self, name: str) -> "ParamBuilder":
+        sub = ParamBuilder(self._next_key(), self.dtype)
+        self.params[name] = sub.params
+        self.axes[name] = sub.axes
+        return sub
+
+    def attach(self, name: str, params: PyTree, axes: PyTree) -> None:
+        self.params[name] = params
+        self.axes[name] = axes
+
+
+# ---------------------------------------------------------------------------
+# Linear-op dispatch (dense | low-rank | branched low-rank)
+# ---------------------------------------------------------------------------
+
+def init_linear(pb: ParamBuilder, name: str, d_in: int, d_out: int,
+                axes_in, axes_out, scale: float | None = None) -> None:
+    """A dense linear op; LRD surgery may later rewrite the subtree."""
+    sub = pb.child(name)
+    sub.param("w", (d_in, d_out), (axes_in, axes_out), scale=scale)
+
+
+def linear_kind(p: dict) -> str:
+    if "w" in p:
+        return "dense"
+    if "xc" in p:
+        return "branched"
+    if "w0" in p:
+        return "lowrank"
+    raise ValueError(f"not a linear param subtree: {list(p)}")
+
+
+def apply_linear(p: dict, x: jax.Array, *,
+                 freeze_factors: bool = False,
+                 use_pallas: bool = False,
+                 accum_dtype=jnp.float32) -> jax.Array:
+    """Apply a (possibly decomposed) linear op to ``x`` (..., d_in).
+
+    ``freeze_factors`` implements paper §2.2: the teacher-derived factors
+    (``w0`` for SVD pairs; ``u``/``v`` for branched) receive no gradient.
+    """
+    kind = linear_kind(p)
+    if kind == "dense":
+        return _matmul(x, p["w"], accum_dtype)
+    if kind == "lowrank":
+        w0, w1 = p["w0"], p["w1"]
+        if freeze_factors:
+            w0 = lax.stop_gradient(w0)
+        if use_pallas and x.ndim == 2:
+            from repro.kernels import ops as kops
+            return kops.lowrank_matmul(x, w0, w1)
+        h = _matmul(x, w0, accum_dtype)
+        return _matmul(h, w1, accum_dtype)
+    # Branched: u (N, d_in, r1), xc (N, r1, r2), v (N, r2, d_out);
+    # y = sum_j ((x @ u_j) @ xc_j) @ v_j      (paper Eq. 17)
+    u, xc, v = p["u"], p["xc"], p["v"]
+    if freeze_factors:
+        u = lax.stop_gradient(u)
+        v = lax.stop_gradient(v)
+    if use_pallas and x.ndim == 2:
+        from repro.kernels import ops as kops
+        return kops.branched_matmul(x, u, xc, v)
+    h = jnp.einsum("...d,ndr->n...r", x, u,
+                   preferred_element_type=accum_dtype).astype(x.dtype)
+    h = jnp.einsum("n...r,nrs->n...s", h, xc,
+                   preferred_element_type=accum_dtype).astype(x.dtype)
+    y = jnp.einsum("n...s,nso->...o", h, v,
+                   preferred_element_type=accum_dtype)
+    return y.astype(x.dtype)
+
+
+def _matmul(x: jax.Array, w: jax.Array, accum_dtype) -> jax.Array:
+    y = jnp.einsum("...d,do->...o", x, w, preferred_element_type=accum_dtype)
+    return y.astype(x.dtype)
+
+
+def linear_out_dim(p: dict) -> int:
+    kind = linear_kind(p)
+    if kind == "dense":
+        return p["w"].shape[-1]
+    if kind == "lowrank":
+        return p["w1"].shape[-1]
+    return p["v"].shape[-1]
+
+
+def linear_param_count(p: dict) -> int:
+    return sum(int(math.prod(v.shape)) for v in jax.tree.leaves(p))
+
+
+def linear_flops(p: dict, n_tokens: int) -> float:
+    """Forward matmul FLOPs for ``n_tokens`` rows through this op."""
+    kind = linear_kind(p)
+    if kind == "dense":
+        c, s = p["w"].shape
+        return 2.0 * n_tokens * c * s
+    if kind == "lowrank":
+        c, r = p["w0"].shape
+        _, s = p["w1"].shape
+        return 2.0 * n_tokens * r * (c + s)
+    n, c, r1 = p["u"].shape
+    _, _, r2 = p["xc"].shape
+    _, _, s = p["v"].shape
+    return 2.0 * n_tokens * n * (c * r1 + r1 * r2 + r2 * s)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (resolved lazily; no-op without a mesh)
+# ---------------------------------------------------------------------------
+
+_ACT_RESOLVER: Callable | None = None
+
+
+def set_activation_resolver(fn: Callable | None) -> None:
+    """parallel.sharding installs a (logical axes -> NamedSharding) resolver."""
+    global _ACT_RESOLVER
+    _ACT_RESOLVER = fn
+
+
+def shard_act(x: jax.Array, *logical_axes) -> jax.Array:
+    if _ACT_RESOLVER is None:
+        return x
+    sharding = _ACT_RESOLVER(logical_axes, x.shape)
+    if sharding is None:
+        return x
+    return lax.with_sharding_constraint(x, sharding)

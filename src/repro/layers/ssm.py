@@ -1,0 +1,260 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Train/prefill run the *chunked* SSD algorithm: within-chunk attention-like
+diagonal blocks plus an inter-chunk recurrence over chunk states carried by
+``lax.scan``.  Memory is O(S * d_inner + n_chunks * d_state) — this is what
+makes the ``long_500k`` cell feasible for the SSM/hybrid archs.
+
+Decode keeps a per-layer recurrent state ``(B, nh, hd, N)`` plus a small
+conv ring buffer; one step is O(1) in sequence length.
+
+The in/out projections go through :func:`apply_linear`, so the paper's LRD
+targets them (``ssm_in`` / ``ssm_out``); the depthwise conv1d is already
+diagonal (each channel its own filter) and is *not decomposable further* —
+DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.layers.param import (
+    ParamBuilder, apply_linear, init_linear, shard_act,
+    BATCH, SEQ, EMBED, INNER, STATE, CONV,
+)
+from repro.layers.norm import init_rms_norm, gated_rms_norm
+
+
+class SSMOpts(NamedTuple):
+    freeze_factors: bool = False
+    use_pallas: bool = False
+
+
+class SSMDims(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    d_state: int
+    conv_width: int
+    chunk: int
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+    @property
+    def in_dim(self) -> int:
+        # [z (di), x (di), B (N), C (N), dt (nh)]
+        return 2 * self.d_inner + 2 * self.d_state + self.n_heads
+
+
+def dims_from_config(cfg) -> SSMDims:
+    di = cfg.d_inner
+    nh = cfg.resolved_ssm_heads
+    return SSMDims(cfg.d_model, di, nh, di // nh, cfg.ssm_state,
+                   cfg.ssm_conv_width, cfg.ssm_chunk)
+
+
+def init_ssm(pb: ParamBuilder, name: str, dims: SSMDims) -> None:
+    """The input projection is *split by consumer* (z | x | BC | dt) so the
+    TP sharding of d_inner never slices across an unaligned concat boundary
+    (GSPMD would reshard); XLA fuses the four dots back together."""
+    sub = pb.child(name)
+    init_linear(sub, "in_proj", dims.d_model, 2 * dims.d_inner, EMBED, INNER)
+    init_linear(sub, "bc_proj", dims.d_model, 2 * dims.d_state, EMBED, None)
+    init_linear(sub, "dt_proj", dims.d_model, dims.n_heads, EMBED, None)
+    sub.param("conv_x_w", (dims.conv_width, dims.d_inner), (CONV, INNER),
+              scale=1.0 / dims.conv_width)
+    sub.param("conv_x_b", (dims.d_inner,), (INNER,), init="zeros")
+    sub.param("conv_bc_w", (dims.conv_width, 2 * dims.d_state), (CONV, None),
+              scale=1.0 / dims.conv_width)
+    sub.param("conv_bc_b", (2 * dims.d_state,), (None,), init="zeros")
+    sub.param("a_log", (dims.n_heads,), (None,), init="zeros")
+    sub.param("d_skip", (dims.n_heads,), (None,), init="ones")
+    sub.param("dt_bias", (dims.n_heads,), (None,), init="zeros")
+    init_rms_norm(sub, "norm", dims.d_inner)
+    init_linear(sub, "out_proj", dims.d_inner, dims.d_model, INNER, EMBED)
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD scan (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _ssd_chunked(x, dt, a, b, c, dims: SSMDims, init_state=None):
+    """SSD over full sequences, scanned one chunk at a time.
+
+    x (B,S,nh,hd); dt (B,S,nh) post-softplus; a (nh,) negative;
+    b,c (B,S,N).  Returns (y (B,S,nh,hd), final_state (B,nh,hd,N)).
+
+    Live memory is one chunk's (B,Q,Q,nh) decay block — sequence length
+    only enters through the scan trip count, which is what makes the
+    500k-context cell feasible.
+    """
+    bsz, s_orig, nh, hd = x.shape
+    n = dims.d_state
+    q = min(dims.chunk, s_orig)
+    # Pad to a chunk multiple with dt=0 tokens: zero dt means zero state
+    # contribution and no decay, so padding is exact (outputs sliced off).
+    pad = (-s_orig) % q
+    if pad:
+        padfn = lambda t: jnp.pad(t, [(0, 0), (0, pad)]
+                                  + [(0, 0)] * (t.ndim - 2))
+        x, dt, b, c = padfn(x), padfn(dt), padfn(b), padfn(c)
+    s = s_orig + pad
+    nc = s // q
+    mask = jnp.tril(jnp.ones((q, q), bool))
+
+    def chunk_body(carry, inp):
+        # carry (B,nh,hd,N) f32 — state *before* this chunk
+        xq, dtq, bq, cq = inp          # (B,Q,nh,hd),(B,Q,nh),(B,Q,N),(B,Q,N)
+        da = dtq * a[None, None, :]                        # (B,Q,nh) f32
+        seg = jnp.cumsum(da, axis=1)                       # inclusive
+        total = seg[:, -1, :]                              # (B,nh)
+        # within-chunk: att[i,j] = C_i.B_j exp(seg_i-seg_j) dt_j  (i>=j)
+        rel = seg[:, :, None, :] - seg[:, None, :, :]      # (B,Q,Q,nh)
+        decay = jnp.exp(jnp.where(mask[None, :, :, None], rel, -jnp.inf))
+        cb = jnp.einsum("bin,bjn->bij", cq, bq)            # (B,Q,Q)
+        att = cb[..., None] * decay * dtq[:, None, :, :]   # (B,Q,Q,nh)
+        y_diag = jnp.einsum("bijh,bjhd->bihd",
+                            att.astype(x.dtype), xq)
+        # inter-chunk: y_i += C_i exp(seg_i) . state_before
+        y_inter = jnp.einsum("bin,bih,bhdn->bihd", cq,
+                             jnp.exp(seg).astype(jnp.float32),
+                             carry).astype(x.dtype)
+        # state update: exp(total) state + sum_j exp(total-seg_j) dt_j B_j x_j
+        w = jnp.exp(total[:, None, :] - seg) * dtq         # (B,Q,nh)
+        st = jnp.einsum("bjh,bjn,bjhd->bhdn", w, bq,
+                        xq.astype(jnp.float32))
+        new = jnp.exp(total)[:, :, None, None] * carry + st
+        return new, y_diag + y_inter
+
+    s0 = (jnp.zeros((bsz, nh, hd, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    to_chunks = lambda t: jnp.moveaxis(
+        t.reshape(bsz, nc, q, *t.shape[2:]), 1, 0)
+    final, y = lax.scan(
+        chunk_body, s0,
+        (to_chunks(x), to_chunks(dt.astype(jnp.float32)),
+         to_chunks(b.astype(jnp.float32)), to_chunks(c.astype(jnp.float32))))
+    y = jnp.moveaxis(y, 0, 1).reshape(bsz, s, nh, hd)[:, :s_orig]
+    return y, final.astype(x.dtype)
+
+
+def _causal_conv(seq: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv1d. seq (B,S,D), w (K,D) -> (B,S,D).
+
+    ``tail`` (B,K-1,D) holds the previous tokens' inputs (decode/chunked
+    prefill); zeros when absent.
+    """
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((seq.shape[0], k - 1, seq.shape[-1]), seq.dtype)
+    padded = jnp.concatenate([tail, seq], axis=1)         # (B,S+K-1,D)
+    out = sum(padded[:, i:i + seq.shape[1], :]
+              * w[i][None, None, :] for i in range(k))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def apply_ssm(p: dict, x: jax.Array, dims: SSMDims, *,
+              state: dict | None = None, opts: SSMOpts = SSMOpts(),
+              norm_eps: float = 1e-5) -> tuple[jax.Array, dict | None]:
+    """Full-sequence SSD (train / prefill).  Returns (y, final_state|None).
+
+    ``state`` (if given) receives the final recurrent state + conv tail so
+    decode can continue the sequence.
+    """
+    bsz, s, _ = x.shape
+    kw = dict(freeze_factors=opts.freeze_factors, use_pallas=opts.use_pallas)
+    di, n, nh = dims.d_inner, dims.d_state, dims.n_heads
+    zx = apply_linear(p["in_proj"], x, **kw)              # (B,S,2di)
+    z, xc = jnp.split(zx, [di], axis=-1)
+    bc = apply_linear(p["bc_proj"], x, **kw)              # (B,S,2N)
+    dt = apply_linear(p["dt_proj"], x, **kw)              # (B,S,nh)
+
+    xc = _causal_conv(xc, p["conv_x_w"], p["conv_x_b"])
+    bc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"])
+    b, c = jnp.split(bc, [n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xc.reshape(bsz, s, nh, dims.head_dim)
+    xh = shard_act(xh, BATCH, SEQ, INNER, None)
+
+    y, final = _ssd_chunked(xh, dt, a, b.astype(jnp.float32),
+                            c.astype(jnp.float32), dims)
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, di)
+    y = gated_rms_norm(p["norm"], y, z, norm_eps)
+    out = apply_linear(p["out_proj"], y, **kw)
+
+    new_state = None
+    if state is not None:
+        tail = dims.conv_width - 1
+        # note: tails hold the *pre-conv* streams (inputs to the window)
+        new_state = {"ssm": final,
+                     "conv_x": zx[:, -tail:, di:],
+                     "conv_bc": apply_linear(p["bc_proj"], x[:, -tail:, :],
+                                             **kw)}
+    return out, new_state
+
+
+def init_ssm_state(batch: int, dims: SSMDims, dtype) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        ssm_state_spec(batch, dims, dtype))
+
+
+def ssm_state_spec(batch: int, dims: SSMDims, dtype) -> dict:
+    tail = dims.conv_width - 1
+    return {
+        "ssm": jax.ShapeDtypeStruct(
+            (batch, dims.n_heads, dims.head_dim, dims.d_state), dtype),
+        "conv_x": jax.ShapeDtypeStruct((batch, tail, dims.d_inner), dtype),
+        "conv_bc": jax.ShapeDtypeStruct((batch, tail, 2 * dims.d_state),
+                                        dtype),
+    }
+
+
+def apply_ssm_decode(p: dict, x: jax.Array, dims: SSMDims, state: dict, *,
+                     opts: SSMOpts = SSMOpts(), norm_eps: float = 1e-5
+                     ) -> tuple[jax.Array, dict]:
+    """One decode step. x (B,1,d); state {"ssm","conv_x","conv_bc"};
+    O(1) in sequence length."""
+    bsz = x.shape[0]
+    kw = dict(freeze_factors=opts.freeze_factors, use_pallas=opts.use_pallas)
+    di, n, nh = dims.d_inner, dims.d_state, dims.n_heads
+    zx = apply_linear(p["in_proj"], x, **kw)
+    z, xc = jnp.split(zx, [di], axis=-1)
+    bc = apply_linear(p["bc_proj"], x, **kw)
+    dt = apply_linear(p["dt_proj"], x, **kw)
+
+    new_conv_x = jnp.concatenate([state["conv_x"], xc], axis=1)[:, 1:, :]
+    new_conv_bc = jnp.concatenate([state["conv_bc"], bc], axis=1)[:, 1:, :]
+    xc = _causal_conv(xc, p["conv_x_w"], p["conv_x_b"], tail=state["conv_x"])
+    bc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"],
+                      tail=state["conv_bc"])
+    b, c = jnp.split(bc, [n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,1,nh)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt[:, 0, :] * a[None, :])                # (B,nh)
+    xh = xc[:, 0].reshape(bsz, nh, dims.head_dim)
+
+    # state' = exp(dt a) state + dt * B x^T ; y = C . state' + D x
+    sf = state["ssm"].astype(jnp.float32)
+    upd = jnp.einsum("bh,bn,bhd->bhdn", dt[:, 0, :], b[:, 0].astype(jnp.float32),
+                     xh.astype(jnp.float32))
+    new_ssm = da[:, :, None, None] * sf + upd
+    y = jnp.einsum("bn,bhdn->bhd", c[:, 0].astype(jnp.float32), new_ssm)
+    y = y.astype(x.dtype) + xh * p["d_skip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(bsz, 1, di)
+    y = gated_rms_norm(p["norm"], y, z, norm_eps)
+    out = apply_linear(p["out_proj"], y, **kw)
+    return out, {"ssm": new_ssm.astype(state["ssm"].dtype),
+                 "conv_x": new_conv_x, "conv_bc": new_conv_bc}

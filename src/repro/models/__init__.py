@@ -1,0 +1,1 @@
+from repro.models.api import get_model  # noqa: F401

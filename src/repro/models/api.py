@@ -1,0 +1,74 @@
+"""Model construction + input specs (the ShapeDtypeStruct seam).
+
+``input_specs(cfg, shape)`` returns stand-ins for every model input of an
+(architecture x shape) cell: weak-type-correct, shardable, no device
+allocation — the dry-run lowers ``train_step`` / ``serve_step`` against
+these.  Modality frontends are STUBS per the assignment: ``[audio]``
+provides precomputed frame embeddings, ``[vlm]`` precomputed patch
+embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def get_model(cfg: ModelConfig):
+    if cfg.family == "resnet":
+        from repro.models.resnet import ResNetModel
+        return ResNetModel(cfg)
+    from repro.models.lm import LMModel
+    return LMModel(cfg)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                *, with_labels: bool = True) -> dict[str, Any]:
+    """ShapeDtypeStructs for one (arch x shape) cell's step inputs."""
+    sds = jax.ShapeDtypeStruct
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+
+    if cfg.family == "resnet":
+        out = {"images": sds((b, cfg.img_size, cfg.img_size, 3), dt)}
+        if with_labels:
+            out["labels"] = sds((b,), jnp.int32)
+        return out
+
+    if shape.kind == "decode":
+        return {"tokens": sds((b, 1), jnp.int32),
+                "positions": sds((b,), jnp.int32)}
+
+    if cfg.family == "encoder":
+        out = {"frames": sds((b, s, cfg.frontend_dim or cfg.d_model), dt)}
+        if with_labels:
+            out["labels"] = sds((b, s), jnp.int32)
+        return out
+
+    out = {"tokens": sds((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        out["image_embeds"] = sds(
+            (b, cfg.num_image_tokens, cfg.vision_d_model or cfg.d_model), dt)
+    return out
+
+
+def synth_inputs(cfg: ModelConfig, shape: ShapeConfig, key: jax.Array,
+                 *, with_labels: bool = True) -> dict[str, jax.Array]:
+    """Random concrete inputs matching :func:`input_specs` (smoke tests)."""
+    specs = input_specs(cfg, shape, with_labels=with_labels)
+    out = {}
+    for name, spec in specs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(spec.dtype, jnp.integer):
+            hi = cfg.num_classes if cfg.family == "resnet" else cfg.vocab_size
+            if name == "positions":
+                hi = shape.seq_len - 1
+            out[name] = jax.random.randint(sub, spec.shape, 0, hi,
+                                           dtype=spec.dtype)
+        else:
+            out[name] = jax.random.normal(sub, spec.shape,
+                                          jnp.float32).astype(spec.dtype) * 0.2
+    return out

@@ -1,0 +1,196 @@
+"""Bottleneck ResNet-50/101/152 — the paper's own benchmark architectures.
+
+Built on the same ``(params, axes)`` trees and the conv/linear dispatch
+seams, so the LRD surgery (SVD on 1x1 convs + fc, Tucker-2 on 3x3 convs)
+applies unchanged — this is the model Tables 1 and 3-6 of the paper are
+measured on.
+
+Norms are per-channel scale/bias ("frozen-stats batch norm"): the paper
+fine-tunes from a pre-trained model, where folding BN running stats into
+scale/bias is standard; it also keeps :func:`merge_bottleneck` exact.
+
+``merge_bottleneck`` implements the paper's Fig. 3 layer merging: after
+Tucker-decomposing the 3x3 conv, its U factor is absorbed into the
+preceding 1x1 conv and its V factor into the following 1x1 conv, restoring
+the original layer count.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.conv import apply_conv, init_conv
+from repro.layers.param import ParamBuilder, apply_linear, init_linear, EMBED, VOCAB
+from repro.core import merging
+
+PyTree = Any
+
+
+def _stage_widths(cfg: ModelConfig) -> list[tuple[int, int, int]]:
+    w = cfg.resnet_width
+    return [(w * 2**i, w * 2**i * 4, 1 if i == 0 else 2)
+            for i in range(len(cfg.resnet_stage_blocks))]
+
+
+def analytic_param_count(cfg: ModelConfig) -> int:
+    total = 3 * cfg.resnet_width * 49 + cfg.resnet_width * 2   # stem + norm
+    c_in = cfg.resnet_width
+    for (mid, out, _), n in zip(_stage_widths(cfg), cfg.resnet_stage_blocks):
+        for b in range(n):
+            total += c_in * mid + mid * mid * 9 + mid * out
+            total += 2 * (mid + mid + out)
+            if b == 0:
+                total += c_in * out + 2 * out
+            c_in = out
+    total += c_in * cfg.num_classes + cfg.num_classes
+    return total
+
+
+class ResNetModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # -- init -----------------------------------------------------------------
+
+    def init(self, key: jax.Array) -> tuple[PyTree, PyTree]:
+        cfg = self.cfg
+        pb = ParamBuilder(key, self.dtype)
+        init_conv(pb, "stem", 3, cfg.resnet_width, 7)
+        self._init_norm(pb, "stem_norm", cfg.resnet_width)
+        c_in = cfg.resnet_width
+        for si, ((mid, out, _), n) in enumerate(
+                zip(_stage_widths(cfg), cfg.resnet_stage_blocks)):
+            stage = pb.child(f"stage{si}")
+            for bi in range(n):
+                blk = stage.child(f"block{bi}")
+                init_conv(blk, "conv1", c_in, mid, 1)
+                self._init_norm(blk, "norm1", mid)
+                init_conv(blk, "conv2", mid, mid, 3)
+                self._init_norm(blk, "norm2", mid)
+                init_conv(blk, "conv3", mid, out, 1)
+                self._init_norm(blk, "norm3", out)
+                if bi == 0:
+                    init_conv(blk, "downsample", c_in, out, 1)
+                    self._init_norm(blk, "ds_norm", out)
+                c_in = out
+        init_linear(pb, "fc", c_in, cfg.num_classes, EMBED, VOCAB)
+        pb.param("fc_bias", (cfg.num_classes,), (VOCAB,), init="zeros")
+        return pb.params, pb.axes
+
+    @staticmethod
+    def _init_norm(pb: ParamBuilder, name: str, dim: int) -> None:
+        sub = pb.child(name)
+        sub.param("scale", (dim,), (EMBED,), init="ones")
+        sub.param("bias", (dim,), (EMBED,), init="zeros")
+
+    @staticmethod
+    def _norm(p: dict, x: jax.Array) -> jax.Array:
+        return x * p["scale"][None, None, None, :] \
+            + p["bias"][None, None, None, :]
+
+    # -- forward ----------------------------------------------------------------
+
+    def forward(self, params: PyTree, images: jax.Array, *,
+                freeze_factors: bool = False) -> jax.Array:
+        cfg = self.cfg
+        kw = dict(freeze_factors=freeze_factors)
+        x = apply_conv(params["stem"], images, stride=2, **kw)
+        x = jax.nn.relu(self._norm(params["stem_norm"], x))
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1),
+            "SAME")
+        for si, ((mid, out, stride), n) in enumerate(
+                zip(_stage_widths(cfg), cfg.resnet_stage_blocks)):
+            stage = params[f"stage{si}"]
+            for bi in range(n):
+                blk = stage[f"block{bi}"]
+                s = stride if bi == 0 else 1
+                h = apply_conv(blk["conv1"], x, stride=1, **kw)
+                h = jax.nn.relu(self._norm(blk["norm1"], h))
+                h = apply_conv(blk["conv2"], h, stride=s, **kw)
+                h = jax.nn.relu(self._norm(blk["norm2"], h))
+                h = apply_conv(blk["conv3"], h, stride=1, **kw)
+                h = self._norm(blk["norm3"], h)
+                if "downsample" in blk:
+                    x = apply_conv(blk["downsample"], x, stride=s, **kw)
+                    x = self._norm(blk["ds_norm"], x)
+                x = jax.nn.relu(x + h)
+        x = jnp.mean(x, axis=(1, 2))
+        logits = apply_linear(params["fc"], x, freeze_factors=freeze_factors,
+                              accum_dtype=jnp.float32)
+        return logits.astype(jnp.float32) + params["fc_bias"]
+
+    def loss(self, params: PyTree, batch: dict, **kw) -> tuple[jax.Array, dict]:
+        logits = self.forward(params, batch["images"],
+                              freeze_factors=kw.get("freeze_factors", False))
+        labels = batch["labels"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        loss = jnp.mean(logz - gold)
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return loss, {"ce": loss, "acc": acc}
+
+    def layer_count(self, params: PyTree) -> int:
+        """Weighted-layer count as the paper counts it (convs + fc)."""
+        count = 0
+        def visit(p):
+            nonlocal count
+            if isinstance(p, dict):
+                keys = set(p)
+                if keys & {"w"} and p["w"].ndim >= 2:
+                    count += 1
+                elif "tucker_u" in keys:
+                    count += 3
+                elif "core" in keys and "u" in keys:
+                    count += 3
+                elif "w0" in keys:
+                    count += 2
+                elif "u" in keys and "xc" in keys:
+                    count += 3
+                else:
+                    for v in p.values():
+                        visit(v)
+        visit(params)
+        return count
+
+
+def merge_bottleneck(params: PyTree) -> PyTree:
+    """Paper §2.3 / Fig. 3: absorb Tucker 1x1 factors into the neighbouring
+    1x1 convs of every bottleneck, restoring the original layer count.
+
+    Expects conv2 subtrees decomposed as {"tucker_u","core","tucker_v"};
+    conv1/conv3 must still be dense.  Returns a rewritten tree where
+
+        conv1' = conv1 @ U,  conv2' = core,  conv3' = V @ conv3.
+    """
+    import copy
+    out = copy.deepcopy(jax.tree.map(lambda x: x, params))
+    for sk, stage in out.items():
+        if not (isinstance(stage, dict) and sk.startswith("stage")):
+            continue
+        for bk, blk in stage.items():
+            if not (isinstance(blk, dict) and "conv2" in blk):
+                continue
+            c2 = blk["conv2"]
+            if "tucker_u" not in c2:
+                continue
+            assert "w" in blk["conv1"] and "w" in blk["conv3"], \
+                "merging needs dense 1x1 neighbours"
+            blk["conv1"] = {"w": merging.merge_conv1x1_into_u(
+                blk["conv1"]["w"], c2["tucker_u"])}
+            blk["conv3"] = {"w": merging.merge_v_into_conv1x1(
+                c2["tucker_v"], blk["conv3"]["w"])}
+            # norm1 now lives in the R1 basis: reset to identity scale of R1
+            r1 = c2["core"].shape[-2]
+            r2 = c2["core"].shape[-1]
+            dt = c2["core"].dtype
+            blk["norm1"] = {"scale": jnp.ones((r1,), dt),
+                            "bias": jnp.zeros((r1,), dt)}
+            blk["norm2"] = {"scale": jnp.ones((r2,), dt),
+                            "bias": jnp.zeros((r2,), dt)}
+            blk["conv2"] = {"w": c2["core"]}
+    return out

@@ -1,0 +1,271 @@
+"""Logical-axis -> NamedSharding resolution (DP / FSDP / TP / EP / SP).
+
+Every parameter carries a tuple of *logical* axis names (built by
+``ParamBuilder``); this module resolves them onto the production mesh
+``(pod, data, model)`` per a rule table derived from ``ParallelConfig``:
+
+    vocab    -> model         (TP on embed/unembed; replicate if indivisible)
+    ffn/qkv  -> model         (megatron col/row pattern falls out of the
+                               in/out logical names on each weight)
+    inner    -> model         (SSM d_inner TP)
+    experts  -> model         (EP: expert banks shard over chips)
+    embed    -> data if FSDP  (param + optimizer-state sharding)
+    rank     -> None          (default: factors inherit the dense layer's
+                               sharding; the partial-sum all-reduce then
+                               moves M x R bytes instead of M x d — the
+                               low-rank collective win, see EXPERIMENTS.md)
+             -> model if ``shard_rank`` (the hillclimb variant: W0
+                               col-sharded, GSPMD inserts an M x R
+                               all-gather before W1)
+    batch    -> (pod, data)   pure DP across pods, DP+FSDP within
+    seq      -> model if SP   (activation sequence sharding)
+
+A mesh axis is used at most once per tensor; conflicts resolve by a fixed
+priority (EP > vocab > ffn/qkv/inner > rank).  Dims not divisible by their
+mesh-axis size fall back to replication (recorded, surfaced by the
+dry-run).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ParallelConfig
+from repro.layers import param as lp
+
+PyTree = Any
+
+# Priority for claiming the `model` axis when several logical axes on one
+# tensor map to it (a mesh axis may appear only once per PartitionSpec).
+_MODEL_PRIORITY = {
+    lp.EXPERTS: 0, lp.VOCAB: 1, lp.FFN: 2, lp.QKV: 2, lp.INNER: 2,
+    lp.HEADS: 3, lp.KV_HEADS: 3, lp.RANK: 4,
+}
+
+
+def _rules(parallel: ParallelConfig) -> dict[str, Any]:
+    """logical axis -> mesh axis (or None) for *parameters*."""
+    rules: dict[str, Any] = {
+        lp.VOCAB: "model",
+        lp.FFN: "model",
+        lp.QKV: "model",
+        lp.INNER: "model",
+        lp.EXPERTS: "model",
+        lp.EMBED: "data" if parallel.fsdp else None,
+        # RANK: the factor that lost its EMBED/FFN dim must still FSDP-shard
+        # (else its f32 optimizer moments replicate over `data` — observed
+        # +125 GB/device on deepseek-v2).  Priority rules keep one axis use.
+        lp.RANK: "model" if parallel.shard_rank
+        else ("data" if parallel.fsdp else None),
+        lp.HEADS: "model",
+        lp.KV_HEADS: "model",
+        lp.LAYERS: None,
+        lp.BRANCH: None,
+        lp.CONV: None,
+        lp.STATE: None,
+        lp.HEAD_DIM: None,
+        lp.BATCH: None,
+        lp.SEQ: None,
+        None: None,
+    }
+    if not parallel.shard_vocab:
+        rules[lp.VOCAB] = None
+    return rules
+
+
+def _spec_for(axes: tuple, shape: tuple[int, ...], rules: dict,
+              mesh: Mesh, notes: list[str] | None = None,
+              path: str = "") -> P:
+    assert len(axes) == len(shape), (axes, shape)
+    used: set[str] = set()
+    entries = []
+    # resolve high-priority dims first, then fill in order
+    order = sorted(range(len(axes)),
+                   key=lambda i: _MODEL_PRIORITY.get(axes[i], 9))
+    resolved: dict[int, Any] = {}
+    for i in order:
+        ax = rules.get(axes[i], None)
+        if ax is None:
+            resolved[i] = None
+            continue
+        ax_names = ax if isinstance(ax, tuple) else (ax,)
+        if any(a in used for a in ax_names):
+            resolved[i] = None
+            continue
+        size = int(np.prod([mesh.shape[a] for a in ax_names]))
+        if shape[i] % size != 0:
+            if notes is not None:
+                notes.append(f"{path}: dim {i} ({axes[i]}={shape[i]}) "
+                             f"not divisible by {ax}={size}; replicated")
+            resolved[i] = None
+            continue
+        used.update(ax_names)
+        resolved[i] = ax
+    for i in range(len(axes)):
+        entries.append(resolved[i])
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def make_param_shardings(mesh: Mesh, params: PyTree, axes: PyTree,
+                         parallel: ParallelConfig,
+                         notes: list[str] | None = None) -> PyTree:
+    """NamedSharding tree matching ``params`` (leaves may be arrays or
+    ShapeDtypeStructs)."""
+    rules = _rules(parallel)
+
+    def resolve(path, leaf, ax):
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        spec = _spec_for(tuple(ax), tuple(leaf.shape), rules, mesh,
+                         notes, pstr)
+        return NamedSharding(mesh, spec)
+
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_a = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(flat_p) == len(flat_a), (len(flat_p), len(flat_a))
+    shardings = [resolve(p, l, a) for (p, l), a in zip(flat_p, flat_a)]
+    treedef = jax.tree.structure(params)
+    return jax.tree.unflatten(treedef, shardings)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def _data_axes(mesh: Mesh) -> Any:
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def activation_resolver(mesh: Mesh, parallel: ParallelConfig
+                        ) -> Callable:
+    """Returns fn(logical_axes, shape) -> NamedSharding|None for shard_act."""
+    data = _data_axes(mesh)
+    data_size = int(np.prod([mesh.shape[a] for a in
+                             (data if isinstance(data, tuple) else (data,))]))
+    model_size = mesh.shape["model"]
+
+    def rule(axes: tuple, shape: tuple[int, ...]):
+        entries = []
+        used = set()
+        for ax, dim in zip(axes, shape):
+            tgt = None
+            if ax == lp.BATCH and "d" not in used and dim % data_size == 0:
+                tgt = data
+                used.add("d")
+            elif ax == lp.SEQ and parallel.seq_shard and "m" not in used \
+                    and dim % model_size == 0:
+                tgt = "model"
+                used.add("m")
+            elif ax in (lp.FFN, lp.QKV, lp.HEADS, lp.KV_HEADS, lp.EXPERTS,
+                        lp.VOCAB, lp.INNER) \
+                    and "m" not in used and dim % model_size == 0:
+                tgt = "model"
+                used.add("m")
+            entries.append(tgt)
+        while entries and entries[-1] is None:
+            entries.pop()
+        if not entries:
+            return None
+        return NamedSharding(mesh, P(*entries))
+
+    return rule
+
+
+def install_activation_rules(mesh: Mesh, parallel: ParallelConfig) -> None:
+    lp.set_activation_resolver(activation_resolver(mesh, parallel))
+
+
+def clear_activation_rules() -> None:
+    lp.set_activation_resolver(None)
+
+
+# ---------------------------------------------------------------------------
+# Inputs / caches
+# ---------------------------------------------------------------------------
+
+def batch_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P(_data_axes(mesh)))
+
+
+def input_shardings(mesh: Mesh, specs: dict,
+                    parallel: ParallelConfig) -> dict:
+    """Shard every step input along its leading (batch) dim where divisible."""
+    data = _data_axes(mesh)
+    data_size = int(np.prod([mesh.shape[a] for a in
+                             (data if isinstance(data, tuple) else (data,))]))
+    out = {}
+    for name, spec in specs.items():
+        if spec.shape and spec.shape[0] % data_size == 0:
+            out[name] = NamedSharding(mesh, P(data))
+        else:
+            out[name] = NamedSharding(mesh, P())
+    return out
+
+
+def cache_shardings(mesh: Mesh, cache_spec: PyTree,
+                    parallel: ParallelConfig, batch: int,
+                    seq_len: int | None = None) -> PyTree:
+    """KV caches / SSM states.
+
+    Attention caches shard **batch over data, cache-seq over model**
+    (sequence-sharded KV: each chip holds S/model slots; the softmax
+    reduction over the sharded axis is a cheap scalar-sized all-reduce).
+    Sharding kv-heads or head_dim instead forces GSPMD into full cache
+    rematerialization per step (observed: involuntary-remat warnings +
+    8.5 GB/step all-gathers on the decode cells).
+
+    When batch is unshardable (B=1 long-context decode) and
+    ``decode_seq_shard`` is set, the seq dim takes BOTH axes.
+
+    SSM states have no seq dim: heads shard over model (matching the
+    d_inner TP of the SSD einsums), batch over data.
+    """
+    data = _data_axes(mesh)
+    data_size = int(np.prod([mesh.shape[a] for a in
+                             (data if isinstance(data, tuple) else (data,))]))
+    model_size = mesh.shape["model"]
+
+    def leaf(spec):
+        # Layouts (leading stack dims first):
+        #   KV cache      (L.., B, S, KH, hd)
+        #   MLA cache     (L.., B, S, lora)
+        #   SSM state     (L,  B, nh, hd, N)
+        #   conv tail     (L,  B, w-1, d_inner or 2N)
+        shape = spec.shape
+        entries: list[Any] = [None] * len(shape)
+        try:
+            bi = next(i for i, d in enumerate(shape) if d == batch)
+        except StopIteration:
+            return NamedSharding(mesh, P())
+        has_seq = (seq_len is not None and len(shape) > bi + 1
+                   and shape[bi + 1] == seq_len)
+        batch_shardable = batch % data_size == 0
+        if batch_shardable:
+            entries[bi] = data
+        if has_seq:
+            si = bi + 1
+            if not batch_shardable and parallel.decode_seq_shard:
+                both = ((*data, "model") if isinstance(data, tuple)
+                        else (data, "model"))
+                if shape[si] % (data_size * model_size) == 0:
+                    entries[si] = both
+                elif shape[si] % model_size == 0:
+                    entries[si] = "model"
+            elif shape[si] % model_size == 0:
+                entries[si] = "model"
+        else:
+            # SSM state: shard the heads dim (first dim after batch
+            # divisible by model) to match d_inner TP
+            for i in range(bi + 1, len(shape)):
+                if shape[i] % model_size == 0 and shape[i] >= model_size:
+                    entries[i] = "model"
+                    break
+        while entries and entries[-1] is None:
+            entries.pop()
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(leaf, cache_spec)

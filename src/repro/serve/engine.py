@@ -1,0 +1,175 @@
+"""Batched serving engine: continuous batching over a fixed slot pool.
+
+The cache pytree is laid out ``(..., B_slots, S_max, ...)``; each request
+owns one batch slot.  Admission: a new request is prefilled with batch=1
+and its cache *inserted* into its slot (a pytree scatter on the batch dim);
+decode then advances **all active slots together** with per-slot positions
+(our attention decode supports per-example ``cache_pos``).  Finished slots
+free immediately and are refilled from the queue — no wave barriers.
+
+Sampling: greedy or temperature; stop on EOS or max tokens.  Throughput
+stats per step are kept for the benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.models.api import get_model
+from repro.train.steps import block_opts
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    eos_id: int | None = None
+    # filled by the engine:
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, run: RunConfig, params: PyTree, *, slots: int = 4,
+                 max_seq: int = 512, seed: int = 0):
+        self.run = run
+        self.model = get_model(run.model)
+        assert run.model.has_decode, "serving needs a decoder"
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.opts = block_opts(run)
+        self.cache = self.model.init_cache(slots, max_seq)
+        self.positions = np.zeros((slots,), np.int32)   # next write pos
+        self.active: list[Request | None] = [None] * slots
+        self.queue: list[Request] = []
+        self.key = jax.random.PRNGKey(seed)
+        self.stats: list[dict] = []
+
+        mdl, opts = self.model, self.opts
+
+        def _prefill1(params, batch, cache1):
+            return mdl.prefill(params, batch, cache1, opts=opts)
+
+        def _decode(params, tokens, positions, cache):
+            return mdl.decode_step(params, tokens, positions, cache,
+                                   opts=opts)
+
+        self._jit_prefill = jax.jit(_prefill1)
+        self._jit_decode = jax.jit(_decode)
+        self._jit_insert = jax.jit(self._insert_slot, donate_argnums=(0,))
+
+    # -- slot management -----------------------------------------------------
+
+    @staticmethod
+    def _insert_slot(cache: PyTree, cache1: PyTree, slot: jax.Array
+                     ) -> PyTree:
+        """Scatter a batch=1 cache into slot ``slot`` of the pool.
+
+        Batch dim = the dim where pool and single differ (single == 1).
+        """
+        def leaf(pool, one):
+            diff = [i for i, (a, b) in
+                    enumerate(zip(pool.shape, one.shape)) if a != b]
+            if not diff:                 # slots == 1: whole-pool replace
+                return one.astype(pool.dtype)
+            start = [0] * pool.ndim
+            start[diff[0]] = slot
+            return jax.lax.dynamic_update_slice(
+                pool, one.astype(pool.dtype), tuple(start))
+        return jax.tree.map(leaf, cache, cache1)
+
+    def add_request(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    def _admit(self) -> None:
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            cache1 = self.model.init_cache(1, self.max_seq)
+            if self.run.model.family == "vlm":
+                batch = {"tokens": prompt,
+                         "image_embeds": jnp.zeros(
+                             (1, self.run.model.num_image_tokens,
+                              self.run.model.d_model), self.model.dtype)}
+            else:
+                batch = {"tokens": prompt}
+            logits, cache1 = self._jit_prefill(self.params, batch, cache1)
+            tok = self._sample(logits[:, -1, :], req)
+            req.output.append(int(tok[0]))
+            self.cache = self._jit_insert(self.cache, cache1,
+                                          jnp.asarray(slot, jnp.int32))
+            self.positions[slot] = len(req.prompt)
+            self.active[slot] = req
+
+    def _sample(self, logits: jax.Array, req: Request) -> np.ndarray:
+        if req.temperature <= 0:
+            return np.asarray(jnp.argmax(logits, -1))
+        self.key, sub = jax.random.split(self.key)
+        return np.asarray(jax.random.categorical(
+            sub, logits / req.temperature, axis=-1))
+
+    # -- main loop ----------------------------------------------------------
+
+    def step(self) -> int:
+        """Admit + one decode step for all active slots.  Returns the
+        number of tokens produced."""
+        self._admit()
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return 0
+        t0 = time.perf_counter()
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for i in live:
+            tokens[i, 0] = self.active[i].output[-1]
+        logits, self.cache = self._jit_decode(
+            self.params, jnp.asarray(tokens),
+            jnp.asarray(self.positions), self.cache)
+        produced = 0
+        lg = logits[:, 0, :]
+        for i in live:
+            req = self.active[i]
+            tok = int(self._sample(lg[i:i + 1], req)[0])
+            req.output.append(tok)
+            produced += 1
+            self.positions[i] += 1
+            ended = (req.eos_id is not None and tok == req.eos_id)
+            full = len(req.output) >= req.max_new_tokens \
+                or self.positions[i] >= self.max_seq - 1
+            if ended or full:
+                req.done = True
+                self.active[i] = None
+        self.stats.append({"live": len(live), "tokens": produced,
+                           "seconds": time.perf_counter() - t0})
+        return produced
+
+    def run_until_done(self, max_steps: int = 10_000) -> list[Request]:
+        finished: list[Request] = []
+        for _ in range(max_steps):
+            if not self.queue and all(r is None for r in self.active):
+                break
+            self.step()
+        return finished
+
+    def throughput(self) -> dict:
+        if not self.stats:
+            return {"tokens_per_s": 0.0, "steps": 0}
+        tok = sum(s["tokens"] for s in self.stats)
+        sec = sum(s["seconds"] for s in self.stats)
+        return {"tokens_per_s": tok / max(sec, 1e-9), "steps": len(self.stats),
+                "mean_batch": tok / len(self.stats)}

@@ -1,0 +1,127 @@
+"""The training loop: jit + shardings + checkpoints + fault tolerance.
+
+``train()`` is the single entry used by examples and tests.  It:
+
+1. builds (or restores) params/opt-state with their NamedShardings,
+2. jits the train step with donated state,
+3. steps the data pipeline with an explicit cursor,
+4. checkpoints asynchronously every ``ckpt_every`` (atomic commits),
+5. auto-resumes from the latest valid checkpoint (``resume=True``),
+6. honours preemption (checkpoint now, exit), tracks stragglers,
+7. optionally crashes on cue (``fault_hook``) for the restart tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.models.api import get_model
+from repro.parallel.sharding import (install_activation_rules,
+                                     make_param_shardings)
+from repro.train import checkpoint as ckpt
+from repro.train import steps as steps_mod
+from repro.train.data import DataState
+from repro.train.fault_tolerance import PreemptionHandler, StragglerDetector
+from repro.train.optim import OptimConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainResult:
+    step: int
+    metrics: dict
+    losses: list[float]
+    straggler_report: dict
+    resumed_from: int | None = None
+
+
+def train(run: RunConfig, data, *, num_steps: int,
+          optim_cfg: OptimConfig | None = None,
+          mesh: jax.sharding.Mesh | None = None,
+          ckpt_dir: str | None = None, ckpt_every: int = 0,
+          resume: bool = True, log_every: int = 10,
+          decompose: bool = True,
+          fault_hook: Callable[[int], None] | None = None,
+          preemption: PreemptionHandler | None = None,
+          log_fn: Callable[[str], None] = print) -> TrainResult:
+    model = get_model(run.model)
+    optim_cfg = optim_cfg or OptimConfig(total_steps=num_steps)
+
+    # ---- init params (+ LRD surgery) -----------------------------------
+    params, axes = model.init(jax.random.PRNGKey(run.seed))
+    if decompose and run.lrd.enabled:
+        from repro.core.surgery import decompose_model
+        params, axes, report = decompose_model(params, axes, run.lrd)
+        log_fn(f"[lrd] {report.summary()}")
+    opt_state = steps_mod.init_opt_state(model, run, params, optim_cfg)
+    data_state = DataState()
+
+    # ---- shardings ------------------------------------------------------
+    if mesh is not None:
+        install_activation_rules(mesh, run.parallel)
+        p_shard = make_param_shardings(mesh, params, axes, run.parallel)
+        params = jax.tree.map(jax.device_put, params, p_shard)
+
+    # ---- resume ----------------------------------------------------------
+    resumed_from = None
+    if ckpt_dir and resume:
+        template = {"params": params, "opt": opt_state,
+                    "data": data_state.to_dict()}
+        got = ckpt.restore_latest(ckpt_dir, template)
+        if got is not None:
+            tree, manifest = got
+            params, opt_state = tree["params"], tree["opt"]
+            data_state = DataState.from_dict(tree["data"])
+            resumed_from = manifest["step"]
+            log_fn(f"[resume] step {resumed_from}")
+
+    train_step = steps_mod.make_train_step(model, run, optim_cfg, mesh)
+    jit_step = jax.jit(train_step, donate_argnums=(0, 1))
+
+    writer = ckpt.AsyncCheckpointer(ckpt_dir) if (ckpt_dir and ckpt_every) \
+        else None
+    detector = StragglerDetector()
+    losses: list[float] = []
+    metrics: dict = {}
+    stream = data.stream(data_state)
+
+    start = int(np.asarray(opt_state["adam"]["step"]))
+    step = start
+    try:
+        for step in range(start, num_steps):
+            if fault_hook is not None:
+                fault_hook(step)
+            batch, data_state = next(stream)
+            detector.start()
+            params, opt_state, metrics = jit_step(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            detector.stop(step)
+            loss = float(np.asarray(metrics["loss"]))
+            losses.append(loss)
+            if log_every and (step % log_every == 0 or step == num_steps - 1):
+                log_fn(f"[train] step={step + 1} loss={loss:.4f} "
+                       f"lr={float(np.asarray(metrics['lr'])):.2e}")
+            done = step + 1
+            want_ckpt = writer and (done % ckpt_every == 0
+                                    or done == num_steps)
+            if preemption is not None and preemption.preempted:
+                log_fn(f"[preempt] checkpointing at step {done} and exiting")
+                want_ckpt = writer is not None
+            if want_ckpt:
+                writer.save(done, {"params": params, "opt": opt_state,
+                                   "data": data_state.to_dict()},
+                            meta={"loss": loss})
+            if preemption is not None and preemption.preempted:
+                break
+    finally:
+        if writer:
+            writer.close()
+
+    return TrainResult(step=step + 1, metrics=metrics, losses=losses,
+                       straggler_report=detector.report(),
+                       resumed_from=resumed_from)

@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests (deliverable f): reduced config of each
+family runs one forward/train step on CPU — output shapes + no NaNs —
+plus prefill/decode consistency and LRD surgery round-trips."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import LRDConfig, RunConfig, ShapeConfig
+from repro.core.surgery import decompose_model
+from repro.models.api import get_model, synth_inputs
+from repro.train import steps as steps_mod
+from repro.train.optim import OptimConfig
+
+SMOKE_SHAPE = ShapeConfig("smoke", 64, 2, "train")
+ASSIGNED = registry.assigned_names()
+
+
+@pytest.mark.parametrize("arch", ASSIGNED + ["resnet50"])
+def test_forward_loss_no_nan(arch):
+    cfg = registry.get(arch).smoke
+    m = get_model(cfg)
+    params, axes = m.init(jax.random.PRNGKey(0))
+    batch = synth_inputs(cfg, SMOKE_SHAPE, jax.random.PRNGKey(1))
+    loss, metrics = m.loss(params, batch)
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss))
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_train_step_improves_loss(arch):
+    cfg = registry.get(arch).smoke
+    entry = registry.get(arch)
+    run = RunConfig(model=cfg,
+                    parallel=dataclasses.replace(entry.parallel("train"),
+                                                 seq_shard=False,
+                                                 fsdp=False, remat="none"))
+    m = get_model(cfg)
+    params, axes = m.init(jax.random.PRNGKey(0))
+    opt_cfg = OptimConfig(peak_lr=3e-3, warmup_steps=1, total_steps=6)
+    opt = steps_mod.init_opt_state(m, run, params, opt_cfg)
+    step = jax.jit(steps_mod.make_train_step(m, run, opt_cfg))
+    batch = synth_inputs(cfg, SMOKE_SHAPE, jax.random.PRNGKey(1))
+    losses = []
+    for _ in range(4):
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+        assert not jnp.isnan(metrics["loss"])
+    assert losses[-1] < losses[0]     # memorizes the repeated batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_lrd_surgery_runs_and_shrinks(arch):
+    """The paper's technique applies to every assigned arch (or records a
+    principled skip) and the decomposed model still runs."""
+    cfg = registry.get(arch).smoke
+    m = get_model(cfg)
+    params, axes = m.init(jax.random.PRNGKey(0))
+    lrd = LRDConfig(enabled=True, compression=2.0, rank_mode="ratio",
+                    min_dim=32)
+    p2, a2, report = decompose_model(params, axes, lrd)
+    assert report.params_after <= report.params_before
+    assert len(report.decomposed) > 0, "no layer decomposed"
+    batch = synth_inputs(cfg, SMOKE_SHAPE, jax.random.PRNGKey(1))
+    loss, _ = m.loss(p2, batch)
+    assert not bool(jnp.isnan(loss))
+
+
+@pytest.mark.parametrize("arch", [a for a in ASSIGNED
+                                  if registry.get(a).smoke.has_decode])
+def test_prefill_decode_matches_forward(arch):
+    cfg = registry.get(arch).smoke
+    if cfg.moe_num_experts:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 32
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S + 3), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks[:, :S]}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = (jax.random.normal(
+            jax.random.PRNGKey(4),
+            (B, cfg.num_image_tokens, cfg.d_model), jnp.float32) * 0.2
+        ).astype(m.dtype)
+    full, _ = m.forward(params, dict(batch, tokens=toks))
+    logits_full = m.logits(params, full)
+    cache = m.init_cache(B, S + 3)
+    lg, cache = m.prefill(params, batch, cache)
+    errs = [float(jnp.abs(lg[:, 0] - logits_full[:, S - 1]).max())]
+    for t in range(S, S + 2):
+        lg, cache = m.decode_step(params, toks[:, t:t + 1],
+                                  jnp.full((B,), t, jnp.int32), cache)
+        errs.append(float(jnp.abs(lg[:, 0] - logits_full[:, t]).max()))
+    scale = float(jnp.abs(logits_full).max()) + 1e-6
+    assert max(errs) / scale < 0.05, errs
+
+
+def test_registry_complete():
+    assert len(ASSIGNED) == 10
+    for arch in ASSIGNED:
+        e = registry.get(arch)
+        assert e.full.name and e.smoke.num_layers <= 8
+
+
+def test_shape_cells_spec():
+    """40 assigned cells: skips recorded exactly per the assignment."""
+    from repro.configs.base import SHAPES, applicable_shapes, skip_reason
+    total = live = 0
+    for arch in ASSIGNED:
+        cfg = registry.get(arch).full
+        for shape in SHAPES.values():
+            total += 1
+            if skip_reason(cfg, shape) is None:
+                live += 1
+                assert shape in applicable_shapes(cfg)
+    assert total == 40
+    # encoder: -2 (no decode); 7 full-attention archs: -1 (long_500k)
+    assert live == 40 - 2 - 7
+
+
+@pytest.mark.parametrize("arch", ["resnet50", "resnet101", "resnet152"])
+def test_resnet_param_counts_match_paper_table1(arch):
+    """Paper Table 1: 25.56M / 44.55M / 60.19M."""
+    cfg = registry.get(arch).full
+    want = {"resnet50": 25.56e6, "resnet101": 44.55e6,
+            "resnet152": 60.19e6}[arch]
+    assert abs(cfg.param_count() - want) / want < 0.005

@@ -1,0 +1,79 @@
+"""Algorithm 1 (paper §2.1), the TPU cost model, and rank alignment."""
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+from repro.core import rank_selection as rs
+
+
+class TestCostModel:
+    def test_staircase(self):
+        """t(r) under the MXU model is flat within a 128-tile and jumps
+        across the boundary — the paper's Fig. 2 cliff."""
+        t = cm.make_model_timer(4096, 2048, 8192)
+        # within one tile row (compute-bound regime): flat in padded dim
+        assert t(300) == pytest.approx(t(384), rel=0.02)
+        # across the boundary: strictly cheaper
+        assert t(256) < t(257)
+
+    def test_dense_vs_lowrank_crossover(self):
+        """Big FC layers win from LRD; tiny layers don't (paper's ORG)."""
+        big = cm.lowrank_layer_time(4096, 4096, 16384, 1024)
+        assert big < cm.dense_layer_time(4096, 4096, 16384)
+        small = cm.lowrank_layer_time(4096, 256, 256, 64)
+        assert small > cm.dense_layer_time(4096, 256, 256) * 0.9
+
+    def test_branched_core_shrinks_time(self):
+        base = cm.branched_layer_time(4096, 2048, 2048, 1024, 1024, 1)
+        branched = cm.branched_layer_time(4096, 2048, 2048, 1024, 1024, 4)
+        assert branched < base
+
+
+class TestAlgorithm1:
+    def test_finds_tile_boundary(self):
+        """On the stepwise cost model the search returns an MXU-aligned
+        rank (the closed-form align_rank shortcut is provably what the
+        paper's search finds on TPU)."""
+        m, c, s = 4096, 2048, 8192
+        timer = cm.make_model_timer(m, c, s)
+        dec = rs.algorithm1(timer, cm.make_dense_time(m, c, s), 1309, 300)
+        assert dec.rank % 128 == 0
+        assert dec.rank == rs.align_rank(1309, 128)
+
+    def test_org_when_dense_faster(self):
+        """Memory-bound small layer: decomposition never wins -> ORG
+        (paper Table 2, layer1.0.conv1)."""
+        m, c, s = 4096, 512, 512
+        timer = cm.make_model_timer(m, c, s)
+        dec = rs.algorithm1(timer, cm.make_dense_time(m, c, s), 128, 32)
+        assert dec.keep_original
+
+    def test_speedup_reported(self):
+        m, c, s = 4096, 4096, 16384
+        timer = cm.make_model_timer(m, c, s)
+        dec = rs.algorithm1(timer, cm.make_dense_time(m, c, s), 1024, 256)
+        assert not dec.keep_original
+        assert dec.speedup() > 1.0
+
+    @given(rank=st.integers(1, 4096))
+    @settings(max_examples=60, deadline=None)
+    def test_align_rank_properties(self, rank):
+        r = rs.align_rank(rank, 128)
+        assert r >= 8
+        assert r <= max(rank, 8)
+        if rank >= 128:
+            assert r % 128 == 0
+
+    def test_select_rank_modes(self):
+        r_ratio = rs.select_rank(2048, 8192, compression=2.0, mode="ratio")
+        r_aligned = rs.select_rank(2048, 8192, compression=2.0,
+                                   mode="aligned")
+        assert r_aligned % 128 == 0
+        assert r_aligned <= r_ratio
+        r_search = rs.select_rank(2048, 8192, compression=2.0, mode="search")
+        assert r_search == rs.ORG or r_search % 8 == 0
+
+    def test_max_branches_guard(self):
+        assert rs.max_branches(1024) == 8
+        assert rs.max_branches(100) == 1

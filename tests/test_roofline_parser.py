@@ -1,0 +1,88 @@
+"""Roofline HLO parser: exact FLOPs / collective bytes / trip scaling,
+validated against hand-computed workloads compiled on the host."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.roofline import analyze_hlo, parse_hlo, roofline
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+class TestParser:
+    def test_single_dot_flops(self):
+        txt = _compile(lambda a, b: a @ b,
+                       jax.ShapeDtypeStruct((128, 256), jnp.float32),
+                       jax.ShapeDtypeStruct((256, 512), jnp.float32))
+        costs = analyze_hlo(txt, 1)
+        assert costs.flops == pytest.approx(2 * 128 * 256 * 512, rel=0.01)
+
+    def test_scan_trip_scaling(self):
+        def f(x, w):
+            def body(c, _):
+                return jnp.tanh(c @ w), None
+            y, _ = jax.lax.scan(body, x, None, length=7)
+            return y
+        txt = _compile(f, jax.ShapeDtypeStruct((32, 64), jnp.float32),
+                       jax.ShapeDtypeStruct((64, 64), jnp.float32))
+        costs = analyze_hlo(txt, 1)
+        assert costs.flops == pytest.approx(7 * 2 * 32 * 64 * 64, rel=0.02)
+        assert 7 in costs.while_trips.values()
+
+    def test_nested_scan(self):
+        def f(x, w):
+            def outer(c, _):
+                def inner(c2, _):
+                    return c2 @ w, None
+                c2, _ = jax.lax.scan(inner, c, None, length=3)
+                return c2, None
+            y, _ = jax.lax.scan(outer, x, None, length=5)
+            return y
+        txt = _compile(f, jax.ShapeDtypeStruct((16, 32), jnp.float32),
+                       jax.ShapeDtypeStruct((32, 32), jnp.float32))
+        costs = analyze_hlo(txt, 1)
+        assert costs.flops == pytest.approx(15 * 2 * 16 * 32 * 32, rel=0.02)
+
+    def test_conv_flops(self):
+        def f(x, w):
+            return jax.lax.conv_general_dilated(
+                x, w, (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        txt = _compile(f, jax.ShapeDtypeStruct((2, 8, 8, 16), jnp.float32),
+                       jax.ShapeDtypeStruct((3, 3, 16, 32), jnp.float32))
+        costs = analyze_hlo(txt, 1)
+        want = 2 * (2 * 8 * 8 * 32) * (3 * 3 * 16)
+        assert costs.flops == pytest.approx(want, rel=0.05)
+
+    def test_memory_traffic_positive_and_sane(self):
+        txt = _compile(lambda a, b: a @ b,
+                       jax.ShapeDtypeStruct((128, 256), jnp.float32),
+                       jax.ShapeDtypeStruct((256, 512), jnp.float32))
+        costs = analyze_hlo(txt, 1)
+        io_bytes = 4 * (128 * 256 + 256 * 512 + 128 * 512)
+        assert io_bytes * 0.5 <= costs.hbm_bytes <= io_bytes * 4
+
+
+class TestRoofline:
+    def test_bottleneck_selection(self):
+        from repro.analysis.roofline import HloCosts
+        c = HloCosts(flops=1e12, hbm_bytes=1e6, collective_bytes=0)
+        r = roofline(c, n_devices=1, model_flops_global=5e11)
+        assert r.bottleneck == "compute"
+        assert r.useful_ratio == pytest.approx(0.5)
+        c2 = HloCosts(flops=1e9, hbm_bytes=1e12, collective_bytes=0)
+        assert roofline(c2, n_devices=1,
+                        model_flops_global=1e9).bottleneck == "memory"
+
+    def test_terms_use_hw_constants(self):
+        from repro.analysis.hw_specs import TPU_V5E
+        from repro.analysis.roofline import HloCosts
+        c = HloCosts(flops=TPU_V5E.peak_flops_bf16,
+                     hbm_bytes=TPU_V5E.hbm_bandwidth,
+                     collective_bytes=TPU_V5E.ici_link_bandwidth)
+        r = roofline(c, n_devices=1, model_flops_global=1.0)
+        assert r.compute_s == pytest.approx(1.0)
+        assert r.memory_s == pytest.approx(1.0)
+        assert r.collective_s == pytest.approx(1.0)

@@ -1,0 +1,114 @@
+"""Sharding-rule unit tests on a tiny host mesh (no forced device count)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ParallelConfig
+from repro.layers.param import (EMBED, EXPERTS, FFN, LAYERS, QKV, RANK,
+                                VOCAB)
+from repro.parallel import sharding as shd
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single CPU device: (1, 1) mesh — rule resolution is shape-logic only
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def spec_of(mesh, axes, shape, parallel):
+    tree_p = {"x": jax.ShapeDtypeStruct(shape, jnp.float32)}
+    tree_a = {"x": axes}
+    s = shd.make_param_shardings(mesh, tree_p, tree_a, parallel)
+    return s["x"].spec
+
+
+class TestParamRules:
+    def test_megatron_pattern(self, mesh):
+        par = ParallelConfig()
+        assert spec_of(mesh, (EMBED, FFN), (64, 128), par) == P(None, "model")
+        assert spec_of(mesh, (FFN, EMBED), (128, 64), par) == P("model")
+
+    def test_fsdp_2d(self, mesh):
+        par = ParallelConfig(fsdp=True)
+        assert spec_of(mesh, (EMBED, FFN), (64, 128), par) \
+            == P("data", "model")
+
+    def test_rank_inherits_fsdp(self, mesh):
+        par = ParallelConfig(fsdp=True)
+        # w1 of an expert bank: (EXPERTS, RANK, FFN)
+        got = spec_of(mesh, (EXPERTS, RANK, FFN), (4, 8, 128), par)
+        assert got == P("model", "data")  # EP + rank-FSDP; FFN loses model
+
+    def test_rank_replicated_by_default(self, mesh):
+        par = ParallelConfig()
+        assert spec_of(mesh, (EMBED, RANK), (64, 8), par) == P()
+
+    def test_shard_rank_variant(self, mesh):
+        par = ParallelConfig(shard_rank=True)
+        assert spec_of(mesh, (EMBED, RANK), (64, 8), par) == P(None, "model")
+        # conflict: output dim wins the model axis over rank
+        assert spec_of(mesh, (RANK, FFN), (8, 128), par) == P(None, "model")
+
+    def test_indivisible_replicates_with_note(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        par = ParallelConfig()
+        notes = []
+        tree_p = {"x": jax.ShapeDtypeStruct((7, 13), jnp.float32)}
+        tree_a = {"x": (VOCAB, EMBED)}
+        # fake a mesh dim >1 via a purpose-built check: use model size 1 ->
+        # always divisible; so instead check the note machinery directly
+        from repro.parallel.sharding import _spec_for
+
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+        got = _spec_for((VOCAB, EMBED), (50280, 64), {VOCAB: "model",
+                                                      EMBED: None},
+                        FakeMesh(), notes, "embed/w")
+        assert got == P()
+        assert notes and "not divisible" in notes[0]
+
+    def test_layer_stack_axis_never_sharded(self, mesh):
+        par = ParallelConfig(fsdp=True)
+        got = spec_of(mesh, (LAYERS, EMBED, QKV), (4, 64, 128), par)
+        assert got == P(None, "data", "model")
+
+
+class TestCacheRules:
+    def test_kv_cache_seq_over_model(self, mesh):
+        par = ParallelConfig()
+        spec = {"k": jax.ShapeDtypeStruct((4, 8, 128, 2, 16), jnp.bfloat16)}
+        got = shd.cache_shardings(mesh, spec, par, batch=8, seq_len=128)
+        assert got["k"].spec == P(None, "data", "model")
+
+    def test_b1_decode_seq_both_axes(self):
+        # abstract 16x16 mesh: B=1 is NOT divisible by data -> the seq dim
+        # takes both axes (the long_500k decode layout)
+        mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+        par = ParallelConfig(decode_seq_shard=True)
+        spec = {"k": jax.ShapeDtypeStruct((2, 1, 512, 2, 16), jnp.bfloat16)}
+        got = shd.cache_shardings(mesh, spec, par, batch=1, seq_len=512)
+        assert got["k"].spec == P(None, None, ("data", "model"))
+
+    def test_ssm_state_heads_over_model(self, mesh):
+        par = ParallelConfig()
+        spec = {"ssm": jax.ShapeDtypeStruct((4, 8, 16, 8, 4), jnp.float32)}
+        got = shd.cache_shardings(mesh, spec, par, batch=8, seq_len=999)
+        assert got["ssm"].spec == P(None, "data", "model")
+
+
+class TestActivationRules:
+    def test_batch_and_ffn(self, mesh):
+        par = ParallelConfig()
+        rule = shd.activation_resolver(mesh, par)
+        from repro.layers.param import BATCH, SEQ
+        s = rule((BATCH, SEQ, FFN), (8, 16, 64))
+        assert s.spec == P("data", None, "model")
+
+    def test_seq_shard_toggle(self, mesh):
+        from repro.layers.param import BATCH, SEQ
+        on = shd.activation_resolver(mesh, ParallelConfig(seq_shard=True))
+        off = shd.activation_resolver(mesh, ParallelConfig())
+        assert on((BATCH, SEQ, EMBED), (8, 16, 64)).spec \
+            == P("data", "model")
+        assert off((BATCH, SEQ, EMBED), (8, 16, 64)).spec == P("data")
