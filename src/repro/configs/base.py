@@ -227,6 +227,14 @@ class LRDConfig:
     branches: int = 1                 # §2.4 branched (block-diagonal) LRD; 1=off
     # Kernel dispatch.
     use_pallas: bool = False          # route low-rank matmuls through kernels/
+    # Factor quantization (repro/quant): serve-time weight-only compression
+    # of the decomposed factors — the second compression axis on top of
+    # the rank reduction.  "int8" = per-channel symmetric int8; "fp8" =
+    # e4m3 (emulated in bf16 storage when the dtype is unavailable).
+    quantize: str = "none"            # "none" | "int8" | "fp8"
+    quant_targets: Sequence[str] = (  # which factor keys to quantize
+        "w0", "w1", "u", "xc", "v", "tucker_u", "core", "tucker_v",
+    )
 
 
 # ---------------------------------------------------------------------------

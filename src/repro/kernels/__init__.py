@@ -4,6 +4,8 @@
   of paper Eq. 3) keeping the rank-bottleneck intermediate in VMEM.
 * :mod:`repro.kernels.branched_matmul` — block-diagonal grouped matmul
   (the paper's branched Tucker, Fig. 4, adapted to the MXU).
+* :mod:`repro.kernels.lowrank_matmul_q` — weight-only quantized variant:
+  int8/fp8 factor tiles dequantized in VMEM (see repro/quant/).
 * :mod:`repro.kernels.ops` — jit'd wrappers with padding + dispatch.
 * :mod:`repro.kernels.ref` — pure-jnp oracles for the allclose tests.
 

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import branched_matmul as bk
 from repro.kernels import lowrank_matmul as lk
+from repro.kernels import lowrank_matmul_q as qk
 from repro.kernels import ref
 
 # v5e practical per-core VMEM working-set budget (conservative).
@@ -52,6 +53,35 @@ def lowrank_matmul(x: jax.Array, w0: jax.Array, w1: jax.Array, *,
     w1p, pad_s = _pad_to(w1, 1, bn)
     y = lk.lowrank_matmul(x2, w0, w1p, bm=bm_eff, bn=min(bn, w1p.shape[1]),
                           interpret=not _on_tpu())
+    if pad_m:
+        y = y[:m]
+    if pad_s:
+        y = y[:, :s]
+    return y.reshape(*lead, s)
+
+
+def lowrank_matmul_q(x: jax.Array, w0_q: jax.Array, w0_scale: jax.Array,
+                     w1_q: jax.Array, w1_scale: jax.Array, *,
+                     bm: int = qk.DEFAULT_BM, bn: int = qk.DEFAULT_BN,
+                     force_kernel: bool = False) -> jax.Array:
+    """y = (x @ dq(w0)) @ dq(w1) with the fused quantized kernel."""
+    lead = x.shape[:-1]
+    c = x.shape[-1]
+    r, s = w1_q.shape
+    x2 = x.reshape(-1, c)
+    m = x2.shape[0]
+    bm_eff = min(bm, max(8, m))
+    q_bytes = jnp.dtype(w0_q.dtype).itemsize
+    fits = qk.vmem_bytes(bm_eff, c, r, min(bn, s),
+                         q_bytes=q_bytes) <= VMEM_BUDGET
+    if not (fits or force_kernel):
+        return ref.lowrank_matmul_q_ref(x, w0_q, w0_scale, w1_q, w1_scale)
+    x2, pad_m = _pad_to(x2, 0, bm_eff)
+    w1p, pad_s = _pad_to(w1_q, 1, bn)
+    w1sp, _ = _pad_to(w1_scale, 1, bn)     # zero scales -> zero columns
+    y = qk.lowrank_matmul_q(x2, w0_q, w0_scale, w1p, w1sp,
+                            bm=bm_eff, bn=min(bn, w1p.shape[1]),
+                            interpret=not _on_tpu())
     if pad_m:
         y = y[:m]
     if pad_s:

@@ -13,6 +13,19 @@ def lowrank_matmul_ref(x: jax.Array, w0: jax.Array, w1: jax.Array,
     return y.astype(x.dtype)
 
 
+def lowrank_matmul_q_ref(x: jax.Array, w0_q: jax.Array, w0_scale: jax.Array,
+                         w1_q: jax.Array, w1_scale: jax.Array,
+                         accum_dtype=jnp.float32) -> jax.Array:
+    """Dequantize-then-matmul oracle for the fused quantized kernel.
+
+    Dequantizes each factor to ``x.dtype`` first (matching the kernel's
+    in-VMEM dequant) and reuses the bf16 reference chain.
+    """
+    w0 = (w0_q.astype(accum_dtype) * w0_scale).astype(x.dtype)
+    w1 = (w1_q.astype(accum_dtype) * w1_scale).astype(x.dtype)
+    return lowrank_matmul_ref(x, w0, w1, accum_dtype)
+
+
 def branched_matmul_ref(x: jax.Array, u: jax.Array, xc: jax.Array,
                         v: jax.Array, accum_dtype=jnp.float32) -> jax.Array:
     """y = sum_n ((x @ u_n) @ xc_n) @ v_n  (paper Eq. 17).

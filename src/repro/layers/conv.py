@@ -38,6 +38,10 @@ def apply_conv(p: dict, x: jax.Array, *, stride: int = 1,
                padding: str = "SAME",
                freeze_factors: bool = False) -> jax.Array:
     """NHWC conv through a (possibly decomposed) weight subtree."""
+    from repro.quant.quantize import dequantize_subtree, is_quantized
+    if is_quantized(p):
+        p = dequantize_subtree(p, x.dtype)
+        freeze_factors = False                     # serve-time, no grads
     if "w" in p:                                   # dense
         return _conv(x, p["w"], stride, padding=padding)
     if "w0" in p:                                  # 1x1 conv = SVD pair
@@ -75,8 +79,7 @@ def apply_conv(p: dict, x: jax.Array, *, stride: int = 1,
 
 
 def conv_out_channels(p: dict) -> int:
-    if "w" in p:
-        return p["w"].shape[-1]
-    if "tucker_u" in p:
-        return p["tucker_v"].shape[-1]
-    return p["v"].shape[-1]
+    for key in ("w", "tucker_v", "tucker_v_q", "w1", "w1_q", "v", "v_q"):
+        if key in p:
+            return p[key].shape[-1]
+    raise ValueError(f"not a conv param subtree: {list(p)}")

@@ -1,0 +1,17 @@
+"""Quantized low-rank factors: the second compression axis.
+
+* :mod:`repro.quant.quantize` — per-channel symmetric int8 / fp8-emulated
+  quantization of decomposed factors, plus the ``quantize_tree`` /
+  ``dequantize_tree`` pytree transforms that mirror the surgery's
+  key-rewriting conventions.
+* The matching serving hot path lives in
+  :mod:`repro.kernels.lowrank_matmul_q` (fused kernel that dequantizes
+  int8 factor tiles in VMEM) behind ``repro.kernels.ops.lowrank_matmul_q``.
+
+See ``src/repro/quant/README.md`` for the design and config knobs.
+"""
+from repro.quant.quantize import (  # noqa: F401
+    FACTOR_KEYS, MODES, QUANT_SUFFIX, SCALE_SUFFIX,
+    dequantize_array, dequantize_subtree, dequantize_tree, is_quantized,
+    quantize_array, quantize_tree, relative_error, tree_bytes,
+)

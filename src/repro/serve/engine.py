@@ -41,10 +41,22 @@ class Request:
 
 class ServeEngine:
     def __init__(self, run: RunConfig, params: PyTree, *, slots: int = 4,
-                 max_seq: int = 512, seed: int = 0):
+                 max_seq: int = 512, seed: int = 0,
+                 quantize: str | None = None):
+        """``quantize`` ("int8" | "fp8") quantizes the decomposed factors
+        at load via :mod:`repro.quant` — apply_linear then dispatches on
+        the rewritten keys, so the model/step code is untouched.  Defaults
+        to ``run.lrd.quantize``."""
         self.run = run
         self.model = get_model(run.model)
         assert run.model.has_decode, "serving needs a decoder"
+        if quantize is None:
+            quantize = run.lrd.quantize
+        if quantize and quantize != "none":
+            from repro.quant import quantize_tree
+            params = quantize_tree(params, mode=quantize,
+                                   targets=run.lrd.quant_targets)
+        self.quantize = quantize
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
@@ -53,6 +65,7 @@ class ServeEngine:
         self.positions = np.zeros((slots,), np.int32)   # next write pos
         self.active: list[Request | None] = [None] * slots
         self.queue: list[Request] = []
+        self.finished: list[Request] = []
         self.key = jax.random.PRNGKey(seed)
         self.stats: list[dict] = []
 
@@ -153,18 +166,21 @@ class ServeEngine:
                 or self.positions[i] >= self.max_seq - 1
             if ended or full:
                 req.done = True
+                self.finished.append(req)
                 self.active[i] = None
         self.stats.append({"live": len(live), "tokens": produced,
                            "seconds": time.perf_counter() - t0})
         return produced
 
     def run_until_done(self, max_steps: int = 10_000) -> list[Request]:
-        finished: list[Request] = []
+        """Drive the engine until queue + slots drain; returns the
+        requests that completed during this call (in completion order)."""
+        start = len(self.finished)
         for _ in range(max_steps):
             if not self.queue and all(r is None for r in self.active):
                 break
             self.step()
-        return finished
+        return self.finished[start:]
 
     def throughput(self) -> dict:
         if not self.stats:

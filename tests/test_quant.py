@@ -1,0 +1,268 @@
+"""Quantized factor subsystem: round-trip bounds, kernel parity, serving.
+
+Covers the acceptance criteria: ``lowrank_matmul_q`` matches the bf16
+reference within int8 tolerance (rel err <= 5e-2) in interpret mode, and
+``ServeEngine(quantize="int8")`` produces token streams end-to-end.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.layers.param import apply_linear, linear_flops, linear_out_dim
+from repro.quant import (dequantize_array, dequantize_tree, is_quantized,
+                         quantize_array, quantize_tree, relative_error,
+                         tree_bytes)
+
+INT8_BOUND = 0.02       # per-channel symmetric int8 on gaussian factors
+FP8_BOUND = 0.06        # e4m3 has ~3 mantissa bits
+
+
+# Factor leaves per kind, as the surgery produces them.
+FACTOR_SHAPES = {
+    "w0": (256, 64), "w1": (64, 256),
+    "u": (4, 128, 32), "xc": (4, 32, 32), "v": (4, 32, 128),
+    "tucker_u": (64, 16), "core": (3, 3, 16, 16), "tucker_v": (16, 64),
+}
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("key,shape", sorted(FACTOR_SHAPES.items()))
+    @pytest.mark.parametrize("mode", ["int8", "fp8"])
+    def test_error_bound_per_factor_kind(self, key, shape, mode, rng):
+        w = jax.random.normal(jax.random.fold_in(rng, hash(key) % 97),
+                              shape) * 0.05
+        bound = INT8_BOUND if mode == "int8" else FP8_BOUND
+        assert relative_error(w, mode) <= bound, (key, mode)
+
+    def test_scale_shapes_per_output_channel(self, rng):
+        w = jax.random.normal(rng, (4, 128, 32))
+        q, scale = quantize_array(w)
+        assert q.shape == w.shape and q.dtype == jnp.int8
+        assert scale.shape == (4, 1, 32) and scale.dtype == jnp.float32
+
+    def test_zero_channels_roundtrip_exactly(self):
+        w = jnp.zeros((32, 16))
+        q, scale = quantize_array(w)
+        np.testing.assert_array_equal(
+            np.asarray(dequantize_array(q, scale, jnp.float32)), 0.0)
+
+    def test_tree_rewrites_factor_keys_only(self, rng):
+        tree = {
+            "mlp": {"up": {"w0": jax.random.normal(rng, (64, 16)),
+                           "w1": jax.random.normal(rng, (16, 64))}},
+            "norm": {"scale": jnp.ones((64,))},
+            "dense": {"w": jax.random.normal(rng, (64, 64))},
+        }
+        qt = quantize_tree(tree)
+        up = qt["mlp"]["up"]
+        assert set(up) == {"w0_q", "w0_scale", "w1_q", "w1_scale"}
+        assert is_quantized(up)
+        assert "w" in qt["dense"] and "scale" in qt["norm"]  # untouched
+        assert tree_bytes(qt) < tree_bytes(tree)
+        # idempotent
+        assert jax.tree.structure(quantize_tree(qt)) \
+            == jax.tree.structure(qt)
+
+    def test_dequantize_tree_inverts(self, rng):
+        w0 = jax.random.normal(rng, (64, 16)) * 0.1
+        tree = {"up": {"w0": w0, "w1": jax.random.normal(rng, (16, 64))}}
+        back = dequantize_tree(quantize_tree(tree), jnp.float32)
+        assert set(back["up"]) == {"w0", "w1"}
+        np.testing.assert_allclose(np.asarray(back["up"]["w0"]),
+                                   np.asarray(w0), atol=2e-3)
+
+
+class TestKernelQ:
+    SHAPES = [
+        (256, 512, 128, 512),
+        (300, 512, 128, 640),     # unaligned M/S -> padding path
+        (8, 128, 16, 384),        # M smaller than a tile
+    ]
+
+    @pytest.mark.parametrize("m,c,r,s", SHAPES)
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_dequant_reference(self, m, c, r, s, dtype, rng):
+        ks = jax.random.split(rng, 3)
+        x = (jax.random.normal(ks[0], (m, c)) * 0.1).astype(dtype)
+        w0q, w0s = quantize_array(jax.random.normal(ks[1], (c, r)) * 0.05)
+        w1q, w1s = quantize_array(jax.random.normal(ks[2], (r, s)) * 0.05)
+        got = ops.lowrank_matmul_q(x, w0q, w0s, w1q, w1s, force_kernel=True)
+        want = ref.lowrank_matmul_q_ref(x, w0q, w0s, w1q, w1s)
+        assert got.dtype == want.dtype and got.shape == want.shape
+        tol = dict(atol=3e-2, rtol=3e-2) if dtype == jnp.bfloat16 \
+            else dict(atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **tol)
+
+    @pytest.mark.parametrize("m,c,r,s", SHAPES)
+    def test_within_int8_tolerance_of_bf16_path(self, m, c, r, s, rng):
+        """Acceptance: rel err <= 5e-2 vs the unquantized bf16 kernel."""
+        ks = jax.random.split(rng, 3)
+        x = (jax.random.normal(ks[0], (m, c)) * 0.1).astype(jnp.bfloat16)
+        w0 = jax.random.normal(ks[1], (c, r)) * 0.05
+        w1 = jax.random.normal(ks[2], (r, s)) * 0.05
+        w0q, w0s = quantize_array(w0)
+        w1q, w1s = quantize_array(w1)
+        got = ops.lowrank_matmul_q(x, w0q, w0s, w1q, w1s, force_kernel=True)
+        want = ref.lowrank_matmul_ref(x, w0.astype(jnp.bfloat16),
+                                      w1.astype(jnp.bfloat16))
+        rel = float(jnp.linalg.norm((got - want).astype(jnp.float32))
+                    / jnp.linalg.norm(want.astype(jnp.float32)))
+        assert rel <= 5e-2, rel
+
+    def test_oversize_falls_back_to_ref(self, rng):
+        x = jax.random.normal(rng, (16, 16384), jnp.float32)
+        w0q, w0s = quantize_array(
+            jax.random.normal(rng, (16384, 4096)) * 0.01)
+        w1q, w1s = quantize_array(
+            jax.random.normal(rng, (4096, 8192)) * 0.01)
+        got = ops.lowrank_matmul_q(x, w0q, w0s, w1q, w1s)  # no force
+        want = ref.lowrank_matmul_q_ref(x, w0q, w0s, w1q, w1s)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_fp8_factors_through_wrapper(self, rng):
+        ks = jax.random.split(rng, 3)
+        x = (jax.random.normal(ks[0], (64, 128)) * 0.1).astype(jnp.bfloat16)
+        w0q, w0s = quantize_array(jax.random.normal(ks[1], (128, 32)) * 0.05,
+                                  "fp8")
+        w1q, w1s = quantize_array(jax.random.normal(ks[2], (32, 128)) * 0.05,
+                                  "fp8")
+        got = ops.lowrank_matmul_q(x, w0q, w0s, w1q, w1s, force_kernel=True)
+        want = ref.lowrank_matmul_q_ref(x, w0q, w0s, w1q, w1s)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=3e-2, rtol=3e-2)
+
+
+class TestApplyLinearDispatch:
+    def test_lowrank_q_close_to_unquantized(self, rng):
+        ks = jax.random.split(rng, 3)
+        p = {"w0": jax.random.normal(ks[0], (128, 32)) * 0.1,
+             "w1": jax.random.normal(ks[1], (32, 64)) * 0.1}
+        x = jax.random.normal(ks[2], (2, 16, 128)) * 0.1
+        y = apply_linear(p, x)
+        yq = apply_linear(quantize_tree(p), x)
+        assert yq.shape == y.shape
+        rel = float(jnp.linalg.norm(yq - y) / jnp.linalg.norm(y))
+        assert rel <= 5e-2, rel
+
+    def test_lowrank_q_pallas_path(self, rng):
+        ks = jax.random.split(rng, 3)
+        p = quantize_tree({"w0": jax.random.normal(ks[0], (128, 32)) * 0.1,
+                           "w1": jax.random.normal(ks[1], (32, 64)) * 0.1})
+        x = jax.random.normal(ks[2], (16, 128)) * 0.1
+        y_jnp = apply_linear(p, x)
+        y_pl = apply_linear(p, x, use_pallas=True)
+        np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_jnp),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_branched_q_close_to_unquantized(self, rng):
+        ks = jax.random.split(rng, 4)
+        p = {"u": jax.random.normal(ks[0], (4, 128, 16)) * 0.1,
+             "xc": jax.random.normal(ks[1], (4, 16, 16)) * 0.1,
+             "v": jax.random.normal(ks[2], (4, 16, 64)) * 0.1}
+        x = jax.random.normal(ks[3], (8, 128)) * 0.1
+        y = apply_linear(p, x)
+        yq = apply_linear(quantize_tree(p), x)
+        rel = float(jnp.linalg.norm(yq - y) / jnp.linalg.norm(y))
+        assert rel <= 5e-2, rel
+
+    @pytest.mark.parametrize("targets", [("w0",), ("w1",)])
+    def test_partial_quant_targets(self, targets, rng):
+        """quant_targets may select a subset of a subtree's factors."""
+        ks = jax.random.split(rng, 3)
+        p = {"w0": jax.random.normal(ks[0], (128, 32)) * 0.1,
+             "w1": jax.random.normal(ks[1], (32, 64)) * 0.1}
+        pq = quantize_tree(p, targets=targets)
+        x = jax.random.normal(ks[2], (16, 128)) * 0.1
+        y = apply_linear(p, x)
+        for use_pallas in (False, True):
+            yq = apply_linear(pq, x, use_pallas=use_pallas)
+            rel = float(jnp.linalg.norm(yq - y) / jnp.linalg.norm(y))
+            assert rel <= 5e-2, (targets, use_pallas, rel)
+
+    def test_partial_branched_targets(self, rng):
+        ks = jax.random.split(rng, 4)
+        p = {"u": jax.random.normal(ks[0], (2, 64, 16)) * 0.1,
+             "xc": jax.random.normal(ks[1], (2, 16, 16)) * 0.1,
+             "v": jax.random.normal(ks[2], (2, 16, 64)) * 0.1}
+        pq = quantize_tree(p, targets=("u", "v"))
+        x = jax.random.normal(ks[3], (8, 64)) * 0.1
+        y = apply_linear(p, x)
+        yq = apply_linear(pq, x)
+        rel = float(jnp.linalg.norm(yq - y) / jnp.linalg.norm(y))
+        assert rel <= 5e-2, rel
+
+    def test_accounting_on_quant_trees(self, rng):
+        p = {"w0": jax.random.normal(rng, (128, 32)),
+             "w1": jax.random.normal(rng, (32, 64))}
+        pq = quantize_tree(p)
+        assert linear_out_dim(pq) == linear_out_dim(p) == 64
+        assert linear_flops(pq, 7) == linear_flops(p, 7)
+
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    from repro.configs import registry
+    from repro.configs.base import LRDConfig, ParallelConfig, RunConfig
+    from repro.core.surgery import decompose_model
+    from repro.models.api import get_model
+
+    cfg = registry.get("llama3.2-1b").smoke
+    lrd = LRDConfig(enabled=True, rank_mode="ratio", min_dim=32)
+    run = RunConfig(model=cfg, lrd=lrd, parallel=ParallelConfig())
+    m = get_model(cfg)
+    params, axes = m.init(jax.random.PRNGKey(0))
+    p2, _, _ = decompose_model(params, axes, lrd)
+    return run, p2
+
+
+class TestServeQuantized:
+    def test_int8_engine_end_to_end(self, serve_setup):
+        from repro.serve.engine import Request, ServeEngine
+        run, params = serve_setup
+        eng = ServeEngine(run, params, slots=2, max_seq=64,
+                          quantize="int8")
+        assert tree_bytes(eng.params) < tree_bytes(params)
+        reqs = [Request(uid=i, prompt=[i + 1, 2, 3], max_new_tokens=4)
+                for i in range(3)]
+        for r in reqs:
+            eng.add_request(r)
+        done = eng.run_until_done()
+        assert {r.uid for r in done} == {0, 1, 2}
+        assert all(r.done and len(r.output) == 4 for r in reqs)
+
+    def test_config_knob_quantizes_at_load(self, serve_setup):
+        from repro.serve.engine import Request, ServeEngine
+        run, params = serve_setup
+        run_q = run.replace(lrd=dataclasses.replace(run.lrd,
+                                                    quantize="int8"))
+        eng = ServeEngine(run_q, params, slots=1, max_seq=64)
+        assert eng.quantize == "int8"
+        assert tree_bytes(eng.params) < tree_bytes(params)
+        req = Request(uid=0, prompt=[5, 9, 2], max_new_tokens=3)
+        eng.add_request(req)
+        assert [r.uid for r in eng.run_until_done()] == [0]
+
+    def test_run_until_done_returns_finished(self, serve_setup):
+        """Satellite regression: run_until_done used to return []."""
+        from repro.serve.engine import Request, ServeEngine
+        run, params = serve_setup
+        eng = ServeEngine(run, params, slots=2, max_seq=64)
+        first = [Request(uid=i, prompt=[i + 1, 4], max_new_tokens=3)
+                 for i in range(3)]
+        for r in first:
+            eng.add_request(r)
+        done = eng.run_until_done()
+        assert done == first[:len(done)] or \
+            {r.uid for r in done} == {0, 1, 2}
+        assert all(r.done for r in done) and len(done) == 3
+        # a second call reports only newly finished requests
+        late = Request(uid=9, prompt=[7], max_new_tokens=2)
+        eng.add_request(late)
+        assert eng.run_until_done() == [late]

@@ -1,7 +1,7 @@
 """Algorithm 1 (paper §2.1), the TPU cost model, and rank alignment."""
 import jax
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import cost_model as cm
 from repro.core import rank_selection as rs

@@ -84,7 +84,11 @@ class TestCacheRules:
     def test_b1_decode_seq_both_axes(self):
         # abstract 16x16 mesh: B=1 is NOT divisible by data -> the seq dim
         # takes both axes (the long_500k decode layout)
-        mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+        try:
+            mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+        except TypeError:   # older jax: one tuple of (name, size) pairs
+            mesh = jax.sharding.AbstractMesh(
+                (("data", 16), ("model", 16)))
         par = ParallelConfig(decode_seq_shard=True)
         spec = {"k": jax.ShapeDtypeStruct((2, 1, 512, 2, 16), jnp.bfloat16)}
         got = shd.cache_shardings(mesh, spec, par, batch=1, seq_len=512)
