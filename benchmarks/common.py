@@ -23,7 +23,17 @@ def time_jit(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
 
 
 def param_count(tree) -> int:
-    return sum(int(x.size) for x in jax.tree.leaves(tree))
+    """Logical model parameters.  ``*_scale`` leaves (repro/quant) are
+    quantization metadata, not weights — counting them skews the
+    compression ratios reported for quantized trees."""
+    from repro.quant import SCALE_SUFFIX
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        last = str(getattr(path[-1], "key", path[-1])) if path else ""
+        if last.endswith(SCALE_SUFFIX):
+            continue
+        total += int(leaf.size)
+    return total
 
 
 def fwd_flops_resnet(params, img_hw: int) -> float:

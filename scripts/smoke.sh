@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 smoke: the full test suite + the quant benchmark in CPU
+# Tier-1 smoke: the full test suite + the quant benchmarks in CPU
 # interpret mode. This is what CI runs (see .github/workflows/smoke.yml).
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -7,3 +7,4 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 python -m benchmarks.bench_quant --dry-run
+python -m benchmarks.bench_branched_quant --dry-run

@@ -72,6 +72,27 @@ def branched_layer_time(m: int, c: int, s: int, r1: int, r2: int,
     return max(compute, memory)
 
 
+def plan_layer_time(plan, m: int, *, act_bytes: int = 2,
+                    spec: HardwareSpec = DEFAULT) -> float:
+    """Modelled seconds for one :class:`repro.layers.plan.LinearPlan` at
+    ``m`` tokens (rows / output pixels) — the plan-driven, quant-aware
+    generalization of the per-kind timers above.
+
+    Compute walks the plan's matmul chain on MXU-padded dims; memory
+    streams the activations at ``act_bytes`` plus the plan's
+    ``weight_bytes`` — which is where int8/fp8 factors pay off: a
+    quantized plan moves half the weight bytes of its bf16 twin, so the
+    memory-bound decode term drops while compute is unchanged.
+    """
+    mp = mxu_padded(m, spec)
+    flops = sum(2.0 * mult * mp * mxu_padded(k, spec) * mxu_padded(n, spec)
+                for mult, k, n in plan.matmul_chain())
+    compute = flops / spec.peak_flops_bf16
+    memory = (act_bytes * m * (plan.d_in + plan.d_out)
+              + plan.weight_bytes) / spec.hbm_bandwidth
+    return max(compute, memory)
+
+
 def conv_time(m_hw: int, c: int, s: int, k: int, *, dtype_bytes: int = 2,
               spec: HardwareSpec = DEFAULT) -> float:
     """kxk conv at output spatial size m_hw^2 == matmul with K = c*k*k."""

@@ -4,8 +4,11 @@ Handles:
 * leading-batch flattening (``(..., C) -> (M, C)``),
 * padding M/S up to tile multiples (and slicing back),
 * interpret-mode on CPU (the container target) vs compiled on TPU,
-* VMEM-fit dispatch — oversize geometries fall back to the jnp reference
-  (which XLA fuses reasonably); the kernel covers the production-common
+* VMEM-fit dispatch — :func:`kernel_fits` is the single fit predicate;
+  :class:`repro.layers.plan.LinearPlan` consults it for its kernel
+  eligibility decision and the wrappers use it as the fallback check for
+  direct callers.  Oversize geometries fall back to the jnp reference
+  (which XLA fuses reasonably); the kernels cover the production-common
   block sizes.
 """
 from __future__ import annotations
@@ -14,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import branched_matmul as bk
+from repro.kernels import branched_matmul_q as bqk
 from repro.kernels import lowrank_matmul as lk
 from repro.kernels import lowrank_matmul_q as qk
 from repro.kernels import ref
@@ -36,6 +40,37 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> tuple[jax.Array, int]:
     return jnp.pad(x, widths), pad
 
 
+def _bm_eff(bm: int, m: int) -> int:
+    return min(bm, max(8, m))
+
+
+def kernel_fits(kernel: str, m: int, *, c: int, s: int, r: int = 0,
+                r1: int = 0, r2: int = 0, q_bytes: int = 1,
+                bm: int | None = None, bn: int | None = None) -> bool:
+    """Does one grid step of ``kernel`` at this geometry fit the VMEM
+    budget?  The one fit predicate behind plan eligibility and the
+    wrappers' fallback dispatch.  ``bm``/``bn`` default to the kernel's
+    own tile sizes; wrappers pass the caller's so the fit check matches
+    the launch.  The S-block is the full ``bn`` — the wrappers pad S up
+    to a ``bn`` multiple, so the launched block is never narrower."""
+    del s  # padded up to a bn multiple at launch
+    if kernel == "lowrank":
+        return lk.vmem_bytes(_bm_eff(bm or lk.DEFAULT_BM, m), c, r,
+                             bn or lk.DEFAULT_BN) <= VMEM_BUDGET
+    if kernel == "lowrank_q":
+        return qk.vmem_bytes(_bm_eff(bm or qk.DEFAULT_BM, m), c, r,
+                             bn or qk.DEFAULT_BN,
+                             q_bytes=q_bytes) <= VMEM_BUDGET
+    if kernel == "branched":
+        return bk.vmem_bytes(_bm_eff(bm or bk.DEFAULT_BM, m), c, r1, r2,
+                             bn or bk.DEFAULT_BN) <= VMEM_BUDGET
+    if kernel == "branched_q":
+        return bqk.vmem_bytes(_bm_eff(bm or bqk.DEFAULT_BM, m), c, r1, r2,
+                              bn or bqk.DEFAULT_BN,
+                              q_bytes=q_bytes) <= VMEM_BUDGET
+    raise ValueError(f"unknown kernel {kernel!r}")
+
+
 def lowrank_matmul(x: jax.Array, w0: jax.Array, w1: jax.Array, *,
                    bm: int = lk.DEFAULT_BM, bn: int = lk.DEFAULT_BN,
                    force_kernel: bool = False) -> jax.Array:
@@ -45,9 +80,9 @@ def lowrank_matmul(x: jax.Array, w0: jax.Array, w1: jax.Array, *,
     r, s = w1.shape
     x2 = x.reshape(-1, c)
     m = x2.shape[0]
-    bm_eff = min(bm, max(8, m))
-    fits = lk.vmem_bytes(bm_eff, c, r, min(bn, s)) <= VMEM_BUDGET
-    if not (fits or force_kernel):
+    bm_eff = _bm_eff(bm, m)
+    if not (force_kernel or kernel_fits("lowrank", m, c=c, r=r, s=s,
+                                        bm=bm, bn=bn)):
         return ref.lowrank_matmul_ref(x, w0, w1)
     x2, pad_m = _pad_to(x2, 0, bm_eff)
     w1p, pad_s = _pad_to(w1, 1, bn)
@@ -70,11 +105,11 @@ def lowrank_matmul_q(x: jax.Array, w0_q: jax.Array, w0_scale: jax.Array,
     r, s = w1_q.shape
     x2 = x.reshape(-1, c)
     m = x2.shape[0]
-    bm_eff = min(bm, max(8, m))
+    bm_eff = _bm_eff(bm, m)
     q_bytes = jnp.dtype(w0_q.dtype).itemsize
-    fits = qk.vmem_bytes(bm_eff, c, r, min(bn, s),
-                         q_bytes=q_bytes) <= VMEM_BUDGET
-    if not (fits or force_kernel):
+    if not (force_kernel or kernel_fits("lowrank_q", m, c=c, r=r, s=s,
+                                        q_bytes=q_bytes, bm=bm,
+                                        bn=bn)):
         return ref.lowrank_matmul_q_ref(x, w0_q, w0_scale, w1_q, w1_scale)
     x2, pad_m = _pad_to(x2, 0, bm_eff)
     w1p, pad_s = _pad_to(w1_q, 1, bn)
@@ -101,15 +136,50 @@ def branched_matmul(x: jax.Array, u: jax.Array, xc: jax.Array,
     s = v.shape[-1]
     x2 = x.reshape(-1, c)
     m = x2.shape[0]
-    bm_eff = min(bm, max(8, m))
-    fits = bk.vmem_bytes(bm_eff, c, r1, r2, min(bn, s)) <= VMEM_BUDGET
-    if not (fits or force_kernel):
-        return ref.branched_matmul_ref(x, u, xc, v)
+    bm_eff = _bm_eff(bm, m)
+    if not (force_kernel or kernel_fits("branched", m, c=c, r1=r1, r2=r2,
+                                        s=s, bm=bm, bn=bn)):
+        return ref.branched_matmul_ref(x2, u, xc, v).reshape(*lead, s)
     x2, pad_m = _pad_to(x2, 0, bm_eff)
     vp, pad_s = _pad_to(v, 2, bn)
     y = bk.branched_matmul(x2, u, xc, vp, bm=bm_eff,
                            bn=min(bn, vp.shape[2]),
                            interpret=not _on_tpu())
+    if pad_m:
+        y = y[:m]
+    if pad_s:
+        y = y[:, :s]
+    return y.reshape(*lead, s)
+
+
+def branched_matmul_q(x: jax.Array, u_q: jax.Array, u_scale: jax.Array,
+                      xc_q: jax.Array, xc_scale: jax.Array,
+                      v_q: jax.Array, v_scale: jax.Array, *,
+                      bm: int = bqk.DEFAULT_BM, bn: int = bqk.DEFAULT_BN,
+                      force_kernel: bool = False) -> jax.Array:
+    """y = sum_n ((x @ dq(u_n)) @ dq(xc_n)) @ dq(v_n) with the fused
+    quantized branched kernel — int8 branch tiles dequantized in VMEM,
+    branch sum in the scratch accumulator."""
+    lead = x.shape[:-1]
+    c = x.shape[-1]
+    n, _, r1 = u_q.shape
+    _, _, r2 = xc_q.shape
+    s = v_q.shape[-1]
+    x2 = x.reshape(-1, c)
+    m = x2.shape[0]
+    bm_eff = _bm_eff(bm, m)
+    q_bytes = jnp.dtype(u_q.dtype).itemsize
+    if not (force_kernel or kernel_fits("branched_q", m, c=c, r1=r1, r2=r2,
+                                        s=s, q_bytes=q_bytes, bm=bm,
+                                        bn=bn)):
+        return ref.branched_matmul_q_ref(x2, u_q, u_scale, xc_q, xc_scale,
+                                         v_q, v_scale).reshape(*lead, s)
+    x2, pad_m = _pad_to(x2, 0, bm_eff)
+    vp, pad_s = _pad_to(v_q, 2, bn)
+    vsp, _ = _pad_to(v_scale, 2, bn)       # zero scales -> zero columns
+    y = bqk.branched_matmul_q(x2, u_q, u_scale, xc_q, xc_scale, vp, vsp,
+                              bm=bm_eff, bn=min(bn, vp.shape[2]),
+                              interpret=not _on_tpu())
     if pad_m:
         y = y[:m]
     if pad_s:

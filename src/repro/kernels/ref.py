@@ -38,3 +38,16 @@ def branched_matmul_ref(x: jax.Array, u: jax.Array, xc: jax.Array,
     h = h.astype(x.dtype)
     y = jnp.einsum("nms,nso->mo", h, v, preferred_element_type=accum_dtype)
     return y.astype(x.dtype)
+
+
+def branched_matmul_q_ref(x: jax.Array, u_q: jax.Array, u_scale: jax.Array,
+                          xc_q: jax.Array, xc_scale: jax.Array,
+                          v_q: jax.Array, v_scale: jax.Array,
+                          accum_dtype=jnp.float32) -> jax.Array:
+    """Dequantize-then-matmul oracle for the fused quantized branched
+    kernel — dequantizes each factor to ``x.dtype`` (matching the
+    kernel's in-VMEM dequant) and reuses the branched reference."""
+    u = (u_q.astype(accum_dtype) * u_scale).astype(x.dtype)
+    xc = (xc_q.astype(accum_dtype) * xc_scale).astype(x.dtype)
+    v = (v_q.astype(accum_dtype) * v_scale).astype(x.dtype)
+    return branched_matmul_ref(x, u, xc, v, accum_dtype)

@@ -37,32 +37,33 @@ def _conv(x: jax.Array, w: jax.Array, stride: int, groups: int = 1,
 def apply_conv(p: dict, x: jax.Array, *, stride: int = 1,
                padding: str = "SAME",
                freeze_factors: bool = False) -> jax.Array:
-    """NHWC conv through a (possibly decomposed) weight subtree."""
-    from repro.quant.quantize import dequantize_subtree, is_quantized
-    if is_quantized(p):
-        p = dequantize_subtree(p, x.dtype)
-        freeze_factors = False                     # serve-time, no grads
-    if "w" in p:                                   # dense
-        return _conv(x, p["w"], stride, padding=padding)
-    if "w0" in p:                                  # 1x1 conv = SVD pair
-        w0, w1 = p["w0"], p["w1"]
-        if freeze_factors:
-            w0 = lax.stop_gradient(w0)
+    """NHWC conv through a (possibly decomposed) weight subtree.
+
+    Thin executor over :class:`repro.layers.plan.LinearPlan` — the plan
+    classifies the subtree (quantized or not) and hands back each factor
+    with on-the-fly dequantization and the §2.2 freeze policy applied
+    (``tucker_u``/``tucker_v`` and branched ``u``/``v`` are the frozen,
+    teacher-derived factors; quantized factors carry no gradient).
+    """
+    from repro.layers import plan as lplan
+    plan = lplan.build_plan(p)
+
+    def get(name: str) -> jax.Array:
+        return plan.value(p, name, x.dtype, freeze=freeze_factors)
+
+    if plan.kind == lplan.KIND_DENSE:
+        return _conv(x, get("w"), stride, padding=padding)
+    if plan.kind == lplan.KIND_LOWRANK:            # 1x1 conv = SVD pair
+        w0, w1 = get("w0"), get("w1")
         h = _conv(x, w0[None, None, :, :], stride, padding="VALID")
         return _conv(h, w1[None, None, :, :], 1, padding="VALID")
-    if "tucker_u" in p:                            # Tucker-2 triple
-        u, core, v = p["tucker_u"], p["core"], p["tucker_v"]
-        if freeze_factors:
-            u = lax.stop_gradient(u)
-            v = lax.stop_gradient(v)
+    if plan.kind == lplan.KIND_TUCKER_CONV:        # Tucker-2 triple
+        u, core, v = get("tucker_u"), get("core"), get("tucker_v")
         h = _conv(x, u[None, None, :, :], 1, padding="VALID")
         h = _conv(h, core, stride, padding=padding)
         return _conv(h, v[None, None, :, :], 1, padding="VALID")
     # Branched Tucker: u (N,C,r1), core (N,k,k,r1,r2), v (N,r2,S).
-    u, core, v = p["u"], p["core"], p["v"]
-    if freeze_factors:
-        u = lax.stop_gradient(u)
-        v = lax.stop_gradient(v)
+    u, core, v = get("u"), get("core"), get("v")
     n, c, r1 = u.shape
     _, kh, kw, _, r2 = core.shape
     s = v.shape[-1]
@@ -79,7 +80,5 @@ def apply_conv(p: dict, x: jax.Array, *, stride: int = 1,
 
 
 def conv_out_channels(p: dict) -> int:
-    for key in ("w", "tucker_v", "tucker_v_q", "w1", "w1_q", "v", "v_q"):
-        if key in p:
-            return p[key].shape[-1]
-    raise ValueError(f"not a conv param subtree: {list(p)}")
+    from repro.layers.plan import build_plan
+    return build_plan(p).d_out

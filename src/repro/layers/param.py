@@ -90,7 +90,7 @@ class ParamBuilder:
 
 
 # ---------------------------------------------------------------------------
-# Linear-op dispatch (dense | low-rank | branched low-rank)
+# Linear-op dispatch — thin wrappers over repro.layers.plan.LinearPlan
 # ---------------------------------------------------------------------------
 
 def init_linear(pb: ParamBuilder, name: str, d_in: int, d_out: int,
@@ -104,23 +104,8 @@ def linear_kind(p: dict) -> str:
     """Classify a linear subtree; quantized trees (repro/quant key
     convention ``k_q``/``k_scale``) map to the same kind as their
     unquantized originals."""
-    if "w" in p:
-        return "dense"
-    if "xc" in p or "xc_q" in p:
-        return "branched"
-    if "w0" in p or "w0_q" in p:
-        return "lowrank"
-    raise ValueError(f"not a linear param subtree: {list(p)}")
-
-
-def _factor(p: dict, key: str, dtype=None) -> jax.Array:
-    """Fetch factor ``key``, dequantizing a ``key_q``/``key_scale`` pair
-    on the fly (dtype defaults to bf16 — the serving activation dtype)."""
-    if key in p:
-        return p[key]
-    from repro.quant.quantize import dequantize_array
-    return dequantize_array(p[key + "_q"], p[key + "_scale"],
-                            dtype or jnp.bfloat16)
+    from repro.layers.plan import classify
+    return classify(p)
 
 
 def apply_linear(p: dict, x: jax.Array, *,
@@ -129,94 +114,46 @@ def apply_linear(p: dict, x: jax.Array, *,
                  accum_dtype=jnp.float32) -> jax.Array:
     """Apply a (possibly decomposed) linear op to ``x`` (..., d_in).
 
-    ``freeze_factors`` implements paper §2.2: the teacher-derived factors
-    (``w0`` for SVD pairs; ``u``/``v`` for branched) receive no gradient.
+    Thin executor over :class:`repro.layers.plan.LinearPlan`: the plan
+    (built once per subtree geometry) owns the kind classification,
+    quantized-pair handling, the §2.2 freeze policy (``w0`` for SVD
+    pairs; ``u``/``v`` for branched receive no gradient) and the fused
+    kernel / reference decision.
     """
-    kind = linear_kind(p)
-    if kind == "dense":
-        return _matmul(x, p["w"], accum_dtype)
-    if kind == "lowrank":
-        if "w0_q" in p or "w1_q" in p:
-            # Quantized factors (repro/quant): serve-time weight-only
-            # int8/fp8 — no gradients flow, so freezing is moot.  The
-            # fused kernel needs both factors quantized; quant_targets
-            # may select a subset, which takes the dequant path.
-            if use_pallas and x.ndim == 2 and "w0_q" in p and "w1_q" in p:
-                from repro.kernels import ops as kops
-                return kops.lowrank_matmul_q(
-                    x, p["w0_q"], p["w0_scale"], p["w1_q"], p["w1_scale"])
-            w0 = _factor(p, "w0", x.dtype)
-            w1 = _factor(p, "w1", x.dtype)
-            h = _matmul(x, w0, accum_dtype)
-            return _matmul(h, w1, accum_dtype)
-        w0, w1 = p["w0"], p["w1"]
-        if freeze_factors:
-            w0 = lax.stop_gradient(w0)
-        if use_pallas and x.ndim == 2:
-            from repro.kernels import ops as kops
-            return kops.lowrank_matmul(x, w0, w1)
-        h = _matmul(x, w0, accum_dtype)
-        return _matmul(h, w1, accum_dtype)
-    # Branched: u (N, d_in, r1), xc (N, r1, r2), v (N, r2, d_out);
-    # y = sum_j ((x @ u_j) @ xc_j) @ v_j      (paper Eq. 17)
-    if any(k in p for k in ("u_q", "xc_q", "v_q")):
-        u = _factor(p, "u", x.dtype)
-        xc = _factor(p, "xc", x.dtype)
-        v = _factor(p, "v", x.dtype)
-        freeze_factors = False
-    else:
-        u, xc, v = p["u"], p["xc"], p["v"]
-    if freeze_factors:
-        u = lax.stop_gradient(u)
-        v = lax.stop_gradient(v)
-    if use_pallas and x.ndim == 2:
-        from repro.kernels import ops as kops
-        return kops.branched_matmul(x, u, xc, v)
-    h = jnp.einsum("...d,ndr->n...r", x, u,
-                   preferred_element_type=accum_dtype).astype(x.dtype)
-    h = jnp.einsum("n...r,nrs->n...s", h, xc,
-                   preferred_element_type=accum_dtype).astype(x.dtype)
-    y = jnp.einsum("n...s,nso->...o", h, v,
-                   preferred_element_type=accum_dtype)
-    return y.astype(x.dtype)
-
-
-def _matmul(x: jax.Array, w: jax.Array, accum_dtype) -> jax.Array:
-    y = jnp.einsum("...d,do->...o", x, w, preferred_element_type=accum_dtype)
-    return y.astype(x.dtype)
-
-
-def _factor_shape(p: dict, key: str) -> tuple[int, ...]:
-    return tuple(p[key].shape if key in p else p[key + "_q"].shape)
+    from repro.layers.plan import build_plan
+    return build_plan(p).execute(p, x, freeze_factors=freeze_factors,
+                                 use_pallas=use_pallas,
+                                 accum_dtype=accum_dtype)
 
 
 def linear_out_dim(p: dict) -> int:
-    kind = linear_kind(p)
-    if kind == "dense":
-        return p["w"].shape[-1]
-    if kind == "lowrank":
-        return _factor_shape(p, "w1")[-1]
-    return _factor_shape(p, "v")[-1]
+    from repro.layers.plan import build_plan
+    return build_plan(p).d_out
 
 
 def linear_param_count(p: dict) -> int:
+    """Logical model parameters of one linear subtree.  ``*_scale``
+    leaves are quantization metadata, not parameters — they are excluded
+    (quantized ``*_q`` values count, at their logical element count)."""
+    from repro.layers.plan import build_plan, is_linear_subtree
+    if is_linear_subtree(p):
+        return build_plan(p).param_count
     return sum(int(math.prod(v.shape)) for v in jax.tree.leaves(p))
+
+
+def linear_quant_bytes(p: dict) -> int:
+    """Bytes of quantized storage (narrow values + scales) in one linear
+    subtree — reported separately from the parameter count."""
+    from repro.layers.plan import build_plan, is_linear_subtree
+    if not is_linear_subtree(p):
+        return 0
+    return build_plan(p).quant_bytes
 
 
 def linear_flops(p: dict, n_tokens: int) -> float:
     """Forward matmul FLOPs for ``n_tokens`` rows through this op."""
-    kind = linear_kind(p)
-    if kind == "dense":
-        c, s = p["w"].shape
-        return 2.0 * n_tokens * c * s
-    if kind == "lowrank":
-        c, r = _factor_shape(p, "w0")
-        _, s = _factor_shape(p, "w1")
-        return 2.0 * n_tokens * r * (c + s)
-    n, c, r1 = _factor_shape(p, "u")
-    _, _, r2 = _factor_shape(p, "xc")
-    _, _, s = _factor_shape(p, "v")
-    return 2.0 * n_tokens * n * (c * r1 + r1 * r2 + r2 * s)
+    from repro.layers.plan import build_plan
+    return build_plan(p).flops_per_token * n_tokens
 
 
 # ---------------------------------------------------------------------------

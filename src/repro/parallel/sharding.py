@@ -115,21 +115,25 @@ def make_param_shardings(mesh: Mesh, params: PyTree, axes: PyTree,
                          parallel: ParallelConfig,
                          notes: list[str] | None = None) -> PyTree:
     """NamedSharding tree matching ``params`` (leaves may be arrays or
-    ShapeDtypeStructs)."""
+    ShapeDtypeStructs).
+
+    Quant-aware: a tree rewritten by ``repro.quant.quantize_tree`` after
+    the axes were built still resolves — ``k_q`` leaves inherit ``k``'s
+    logical axes and ``k_scale`` leaves shard on the out-dim axis (or
+    replicate), via ``repro.quant.align_quantized_axes`` per dict node.
+    """
+    from repro.quant.quantize import align_quantized_axes
     rules = _rules(parallel)
 
-    def resolve(path, leaf, ax):
-        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
-        spec = _spec_for(tuple(ax), tuple(leaf.shape), rules, mesh,
-                         notes, pstr)
+    def walk(p: Any, a: Any, path: tuple[str, ...]) -> Any:
+        if isinstance(p, dict):
+            a2 = align_quantized_axes(p, a) if isinstance(a, dict) else a
+            return {k: walk(p[k], a2[k], (*path, k)) for k in p}
+        spec = _spec_for(tuple(a), tuple(p.shape), rules, mesh,
+                         notes, "/".join(path))
         return NamedSharding(mesh, spec)
 
-    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
-    flat_a = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
-    assert len(flat_p) == len(flat_a), (len(flat_p), len(flat_a))
-    shardings = [resolve(p, l, a) for (p, l), a in zip(flat_p, flat_a)]
-    treedef = jax.tree.structure(params)
-    return jax.tree.unflatten(treedef, shardings)
+    return walk(params, axes, ())
 
 
 # ---------------------------------------------------------------------------

@@ -12,6 +12,7 @@ See ``src/repro/quant/README.md`` for the design and config knobs.
 """
 from repro.quant.quantize import (  # noqa: F401
     FACTOR_KEYS, MODES, QUANT_SUFFIX, SCALE_SUFFIX,
-    dequantize_array, dequantize_subtree, dequantize_tree, is_quantized,
-    quantize_array, quantize_tree, relative_error, tree_bytes,
+    align_quantized_axes, dequantize_array, dequantize_subtree,
+    dequantize_tree, is_quantized, quantize_array, quantize_tree,
+    relative_error, scale_axes, tree_bytes,
 )

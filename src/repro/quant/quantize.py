@@ -104,8 +104,53 @@ def dequantize_subtree(node: dict, dtype=jnp.bfloat16) -> dict:
     return out
 
 
+def scale_axes(axes: tuple) -> tuple:
+    """Logical axes of a ``k_scale`` leaf given factor ``k``'s axes.
+
+    The absmax reduction collapses the input (second-to-last) axis to 1,
+    so the scale keeps ``k``'s axes with that position unsharded (None)
+    and the out-dim axis intact — which is how quantized trees shard:
+    ``k_scale`` follows ``k``'s output dim or replicates.
+    """
+    if len(axes) < 2:
+        raise ValueError(f"factor axes must be 2D+: {axes}")
+    return (*axes[:-2], None, axes[-1])
+
+
+def align_quantized_axes(params_node: dict, axes_node: dict) -> dict:
+    """Axes dict aligned with a (possibly quantized) params dict.
+
+    For every ``k_q``/``k_scale`` key whose axes entry is missing,
+    derives it from factor ``k``'s logical axes: ``k_q`` inherits them
+    verbatim, ``k_scale`` gets :func:`scale_axes`.  This is the one
+    place the ``*_q``/``*_scale`` convention meets the axes trees —
+    ``parallel.sharding.make_param_shardings`` calls it per dict node,
+    so trees quantized *after* the axes were built still resolve.
+    """
+    out = {}
+    for k in params_node:
+        if k in axes_node:
+            out[k] = axes_node[k]
+            continue
+        if k.endswith(QUANT_SUFFIX):
+            base = k[: -len(QUANT_SUFFIX)]
+            if base in axes_node:
+                out[k] = axes_node[base]
+                continue
+        elif k.endswith(SCALE_SUFFIX):
+            base = k[: -len(SCALE_SUFFIX)]
+            if base in axes_node:
+                out[k] = scale_axes(axes_node[base])
+                continue
+        raise KeyError(
+            f"cannot resolve logical axes for param key {k!r} "
+            f"(axes node has {sorted(axes_node)})")
+    return out
+
+
 def quantize_tree(params: PyTree, mode: str = MODE_INT8, *,
-                  targets: Iterable[str] = FACTOR_KEYS) -> PyTree:
+                  targets: Iterable[str] = FACTOR_KEYS,
+                  axes: PyTree | None = None) -> PyTree:
     """Quantize every targeted factor leaf in a param tree.
 
     Walks the nested-dict tree the way the surgery does; only 2D+ array
@@ -113,25 +158,48 @@ def quantize_tree(params: PyTree, mode: str = MODE_INT8, *,
     dense ``w`` layers the surgery kept as ORG, and biases pass through
     untouched).  Already-quantized subtrees are left alone, so the
     transform is idempotent.
+
+    When ``axes`` (the matching logical-axes tree) is given, the rewrite
+    is applied to *both* trees and ``(qparams, qaxes)`` is returned:
+    ``k_q`` inherits ``k``'s axes, ``k_scale`` gets :func:`scale_axes` —
+    so quantized trees keep sharding through
+    ``parallel.sharding.make_param_shardings``.
     """
     targets = set(targets)
 
-    def walk(node: Any) -> Any:
+    def walk(node: Any, ax: Any) -> tuple[Any, Any]:
         if not isinstance(node, dict):
-            return node
+            return node, ax
         if is_quantized(node):
-            return dict(node)
-        out = {}
+            out = dict(node)
+            a_out = (align_quantized_axes(node, ax)
+                     if isinstance(ax, dict) else ax)
+            return out, a_out
+        out, a_out = {}, {}
         for k, v in node.items():
+            if isinstance(ax, dict):
+                if k not in ax:
+                    raise KeyError(
+                        f"axes tree missing entry for param key {k!r} "
+                        f"(axes node has {sorted(ax)})")
+                a_k = ax[k]
+            else:
+                a_k = None
             if (k in targets and hasattr(v, "ndim") and v.ndim >= 2):
                 q, scale = quantize_array(v, mode)
                 out[k + QUANT_SUFFIX] = q
                 out[k + SCALE_SUFFIX] = scale
+                if isinstance(ax, dict):
+                    a_out[k + QUANT_SUFFIX] = a_k
+                    a_out[k + SCALE_SUFFIX] = scale_axes(a_k)
             else:
-                out[k] = walk(v)
-        return out
+                out[k], a_out[k] = walk(v, a_k)
+        return out, a_out
 
-    return walk(params)
+    qparams, qaxes = walk(params, axes)
+    if axes is None:
+        return qparams
+    return qparams, qaxes
 
 
 def dequantize_tree(params: PyTree, dtype=jnp.bfloat16) -> PyTree:

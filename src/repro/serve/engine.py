@@ -58,6 +58,13 @@ class ServeEngine:
                                    targets=run.lrd.quant_targets)
         self.quantize = quantize
         self.params = params
+        # Execution plans, built once at load (not per call): every
+        # linear subtree's kind / quantized-pair / kernel decision is
+        # resolved here, and the aggregate gives honest weight-stream
+        # accounting (param_count excludes scales; quant_bytes separate).
+        from repro.layers import plan as lplan
+        self.plans = lplan.build_plan_tree(params)
+        self.plan_summary = lplan.tree_summary(self.plans)
         self.slots = slots
         self.max_seq = max_seq
         self.opts = block_opts(run)
@@ -78,9 +85,20 @@ class ServeEngine:
             return mdl.decode_step(params, tokens, positions, cache,
                                    opts=opts)
 
+        def _sample_all(key, logits, temps):
+            """One device call samples every slot: greedy argmax rows and
+            temperature rows resolve together; the host indexes the
+            result (no per-slot round-trips on the decode hot path)."""
+            greedy = jnp.argmax(logits, axis=-1)
+            safe = jnp.where(temps > 0, temps, 1.0)
+            sampled = jax.random.categorical(key, logits / safe[:, None],
+                                             axis=-1)
+            return jnp.where(temps > 0, sampled, greedy)
+
         self._jit_prefill = jax.jit(_prefill1)
         self._jit_decode = jax.jit(_decode)
         self._jit_insert = jax.jit(self._insert_slot, donate_argnums=(0,))
+        self._jit_sample_all = jax.jit(_sample_all)
 
     # -- slot management -----------------------------------------------------
 
@@ -155,9 +173,14 @@ class ServeEngine:
             jnp.asarray(self.positions), self.cache)
         produced = 0
         lg = logits[:, 0, :]
+        temps = np.zeros((self.slots,), np.float32)
+        for i in live:
+            temps[i] = max(self.active[i].temperature, 0.0)
+        self.key, sub = jax.random.split(self.key)
+        toks = np.asarray(self._jit_sample_all(sub, lg, jnp.asarray(temps)))
         for i in live:
             req = self.active[i]
-            tok = int(self._sample(lg[i:i + 1], req)[0])
+            tok = int(toks[i])
             req.output.append(tok)
             produced += 1
             self.positions[i] += 1

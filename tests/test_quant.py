@@ -139,6 +139,92 @@ class TestKernelQ:
                                    atol=3e-2, rtol=3e-2)
 
 
+class TestKernelBranchedQ:
+    """Fused quantized branched kernel vs the dequant-outside oracle.
+
+    Acceptance: <= 1e-2 max abs err in interpret mode."""
+
+    SHAPES = [
+        (256, 512, 64, 64, 512, 4),
+        (200, 256, 32, 32, 300, 2),    # unaligned M/S -> padding path
+        (128, 384, 16, 32, 256, 3),    # r1 != r2, odd branch count
+        (8, 128, 16, 16, 384, 2),      # M smaller than a tile
+    ]
+
+    @staticmethod
+    def _factors(rng, n, c, r1, r2, s, mode="int8"):
+        ks = jax.random.split(rng, 3)
+        uq, us = quantize_array(
+            jax.random.normal(ks[0], (n, c, r1)) * 0.05, mode)
+        xcq, xcs = quantize_array(
+            jax.random.normal(ks[1], (n, r1, r2)) * 0.1, mode)
+        vq, vs = quantize_array(
+            jax.random.normal(ks[2], (n, r2, s)) * 0.05, mode)
+        return uq, us, xcq, xcs, vq, vs
+
+    @pytest.mark.parametrize("m,c,r1,r2,s,n", SHAPES)
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_dequant_reference(self, m, c, r1, r2, s, n, dtype, rng):
+        x = (jax.random.normal(jax.random.fold_in(rng, 11), (m, c))
+             * 0.1).astype(dtype)
+        fs = self._factors(rng, n, c, r1, r2, s)
+        got = ops.branched_matmul_q(x, *fs, force_kernel=True)
+        want = ref.branched_matmul_q_ref(x, *fs)
+        assert got.dtype == want.dtype and got.shape == want.shape
+        err = float(jnp.abs(got.astype(jnp.float32)
+                            - want.astype(jnp.float32)).max())
+        assert err <= 1e-2, err
+
+    def test_within_int8_tolerance_of_bf16_path(self, rng):
+        """rel err <= 5e-2 vs the unquantized branched kernel."""
+        m, c, r1, r2, s, n = 64, 256, 32, 32, 256, 4
+        ks = jax.random.split(rng, 4)
+        x = (jax.random.normal(ks[0], (m, c)) * 0.1).astype(jnp.bfloat16)
+        u = jax.random.normal(ks[1], (n, c, r1)) * 0.05
+        xc = jax.random.normal(ks[2], (n, r1, r2)) * 0.1
+        v = jax.random.normal(ks[3], (n, r2, s)) * 0.05
+        uq, us = quantize_array(u)
+        xcq, xcs = quantize_array(xc)
+        vq, vs = quantize_array(v)
+        got = ops.branched_matmul_q(x, uq, us, xcq, xcs, vq, vs,
+                                    force_kernel=True)
+        want = ref.branched_matmul_ref(x, u.astype(jnp.bfloat16),
+                                       xc.astype(jnp.bfloat16),
+                                       v.astype(jnp.bfloat16))
+        rel = float(jnp.linalg.norm((got - want).astype(jnp.float32))
+                    / jnp.linalg.norm(want.astype(jnp.float32)))
+        assert rel <= 5e-2, rel
+
+    def test_oversize_falls_back_to_ref(self, rng):
+        x = jax.random.normal(rng, (16, 16384), jnp.float32)
+        fs = self._factors(rng, 1, 16384, 4096, 64, 8192)
+        got = ops.branched_matmul_q(x, *fs)      # no force
+        want = ref.branched_matmul_q_ref(x, *fs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_oversize_fallback_flattens_leading_dims(self, rng):
+        """Regression: the ref fallback must honour the wrapper's
+        leading-batch-flattening contract (3D decode-shaped x)."""
+        x = jax.random.normal(rng, (2, 1, 16384), jnp.float32)
+        fs = self._factors(rng, 1, 16384, 4096, 64, 8192)
+        got = ops.branched_matmul_q(x, *fs)      # no force -> ref path
+        assert got.shape == (2, 1, 8192)
+        want = ref.branched_matmul_q_ref(x.reshape(2, 16384), *fs)
+        np.testing.assert_allclose(np.asarray(got.reshape(2, 8192)),
+                                   np.asarray(want), rtol=2e-2, atol=2e-2)
+
+    def test_fp8_factors_through_wrapper(self, rng):
+        x = (jax.random.normal(jax.random.fold_in(rng, 13), (64, 128))
+             * 0.1).astype(jnp.bfloat16)
+        fs = self._factors(rng, 2, 128, 16, 16, 128, mode="fp8")
+        got = ops.branched_matmul_q(x, *fs, force_kernel=True)
+        want = ref.branched_matmul_q_ref(x, *fs)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=3e-2, rtol=3e-2)
+
+
 class TestApplyLinearDispatch:
     def test_lowrank_q_close_to_unquantized(self, rng):
         ks = jax.random.split(rng, 3)

@@ -74,6 +74,82 @@ class TestParamRules:
         assert got == P(None, "data", "model")
 
 
+class TestQuantizedParamRules:
+    """Quant-aware sharding: trees rewritten by quantize_tree *after* the
+    axes were built still resolve — ``k_q`` inherits ``k``'s spec,
+    ``k_scale`` shards on the out dim (or replicates)."""
+
+    def _shardings(self, mesh, params, axes, par, **quant_kw):
+        from repro.quant import quantize_tree
+        qp = quantize_tree(params, **quant_kw)
+        return qp, shd.make_param_shardings(mesh, qp, axes, par)
+
+    def test_svd_pair_q_inherits_base_spec(self, mesh):
+        par = ParallelConfig(fsdp=True)
+        params = {"up": {"w0": jnp.ones((64, 8)), "w1": jnp.ones((8, 128))}}
+        axes = {"up": {"w0": (EMBED, RANK), "w1": (RANK, FFN)}}
+        qp, s = self._shardings(mesh, params, axes, par)
+        assert set(qp["up"]) == {"w0_q", "w0_scale", "w1_q", "w1_scale"}
+        base = shd.make_param_shardings(mesh, params, axes, par)
+        assert s["up"]["w0_q"].spec == base["up"]["w0"].spec
+        assert s["up"]["w1_q"].spec == base["up"]["w1"].spec
+        # scales: input axis collapsed to 1 -> out dim shards, rest None
+        assert s["up"]["w1_scale"].spec == P(None, "model")
+        assert s["up"]["w0_scale"].spec == P(None, "data")  # rank FSDP-shards
+
+    def test_branched_q_inherits_base_spec(self, mesh):
+        from repro.layers.param import BRANCH
+        par = ParallelConfig(fsdp=True, shard_rank=True)
+        params = {"u": jnp.ones((4, 64, 8)), "xc": jnp.ones((4, 8, 8)),
+                  "v": jnp.ones((4, 8, 128))}
+        axes = {"u": (BRANCH, EMBED, RANK), "xc": (BRANCH, RANK, RANK),
+                "v": (BRANCH, RANK, FFN)}
+        qp, s = self._shardings(mesh, params, axes, par)
+        base = shd.make_param_shardings(mesh, params, axes, par)
+        for k in ("u", "xc", "v"):
+            assert s[k + "_q"].spec == base[k].spec, k
+        assert s["v_scale"].spec == P(None, None, "model")
+
+    def test_partial_quant_targets_mixed_tree(self, mesh):
+        par = ParallelConfig(fsdp=True)
+        params = {"w0": jnp.ones((64, 8)), "w1": jnp.ones((8, 128))}
+        axes = {"w0": (EMBED, RANK), "w1": (RANK, FFN)}
+        qp, s = self._shardings(mesh, params, axes, par, targets=("w0",))
+        assert set(qp) == {"w0_q", "w0_scale", "w1"}
+        base = shd.make_param_shardings(mesh, params, axes, par)
+        assert s["w0_q"].spec == base["w0"].spec
+        assert s["w1"].spec == base["w1"].spec
+
+    def test_quantize_tree_rewrites_axes_tree(self):
+        from repro.layers.param import NONE
+        from repro.quant import quantize_tree, scale_axes
+        params = {"up": {"w0": jnp.ones((64, 8)), "w1": jnp.ones((8, 128))},
+                  "norm": {"scale": jnp.ones((64,))}}
+        axes = {"up": {"w0": (EMBED, RANK), "w1": (RANK, FFN)},
+                "norm": {"scale": (EMBED,)}}
+        qp, qa = quantize_tree(params, axes=axes)
+        assert qa["up"]["w0_q"] == (EMBED, RANK)
+        assert qa["up"]["w0_scale"] == (NONE, RANK)
+        assert qa["up"]["w1_scale"] == scale_axes((RANK, FFN)) == (NONE, FFN)
+        assert qa["norm"]["scale"] == (EMBED,)          # untouched
+        # rewritten axes resolve without the alignment fallback too
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        s = shd.make_param_shardings(mesh, qp, qa, ParallelConfig(fsdp=True))
+        assert s["up"]["w1_scale"].spec == P(None, "model")
+
+    def test_unresolvable_key_raises(self, mesh):
+        from repro.quant import align_quantized_axes
+        with pytest.raises(KeyError):
+            align_quantized_axes({"mystery": jnp.ones((2, 2))},
+                                 {"w0": (EMBED, RANK)})
+
+    def test_quantize_tree_missing_axes_entry_raises(self):
+        from repro.quant import quantize_tree
+        params = {"w0": jnp.ones((64, 8)), "w1": jnp.ones((8, 128))}
+        with pytest.raises(KeyError, match="w1"):
+            quantize_tree(params, axes={"w0": (EMBED, RANK)})
+
+
 class TestCacheRules:
     def test_kv_cache_seq_over_model(self, mesh):
         par = ParallelConfig()
