@@ -1,0 +1,133 @@
+"""Serve-decode benchmark: f32 KV pool vs int8-quantized KV pool.
+
+Decode is KV-streaming-bound: every step reads the *entire* cache pool
+``(slots, S_max, KV_heads, head_dim)`` per layer (invalid positions are
+masked, not skipped), so the number that matters is **KV bytes per
+step** — ``repro.quant.kv`` stores the pool as int8 values + f32
+per-(slot, head, channel) scale rows, ~4x fewer bytes than f32.
+Reported per ``(slots, S_max)`` sweep point:
+
+* KV bytes/step of both engines (from the engine's own plan-summary
+  accounting) and their ratio (the acceptance bar is >= ~3.5x),
+* roofline TPU time of the KV stream (bytes / HBM bandwidth) — the win
+  `cost_model.plan_layer_time(kv_bytes=...)` predicts,
+* measured end-to-end CPU tokens/s of both engines (on CPU the fused
+  kernel is bypassed for the jnp dequant oracle; the bandwidth column
+  is the TPU win),
+
+and the run is appended to the ``BENCH_serve.json`` trajectory at the
+repo root so successive PRs can track the serve numbers.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve_decode [--dry-run]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from benchmarks.common import Csv
+from repro.analysis.hw_specs import TPU_V5E
+
+TRAJECTORY = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+
+def _build(slots: int, max_seq: int, kv_quantize: str | None):
+    from repro.configs import registry
+    from repro.configs.base import ParallelConfig, RunConfig
+    from repro.models.api import get_model
+    from repro.serve.engine import ServeEngine
+
+    # f32 model dtype so the baseline pool is genuinely f32 (the smoke
+    # config's bf16 would halve the baseline and hide half the win).
+    cfg = dataclasses.replace(registry.get("llama3.2-1b").smoke,
+                              dtype="float32")
+    run = RunConfig(model=cfg, parallel=ParallelConfig())
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    return ServeEngine(run, params, slots=slots, max_seq=max_seq,
+                       kv_quantize=kv_quantize)
+
+
+def _serve(eng, n_requests: int) -> tuple[float, list[list[int]]]:
+    from repro.serve.engine import Request
+
+    # Prompt lengths straddle two power-of-2 buckets on purpose.
+    reqs = [Request(uid=i, prompt=[(i % 7) + 1] * (3 + (i % 8)),
+                    max_new_tokens=8) for i in range(n_requests)]
+    for r in reqs:
+        eng.add_request(r)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    return eng.throughput()["tokens_per_s"], [r.output for r in reqs]
+
+
+def run(fast: bool = True, dry_run: bool = False) -> str:
+    sweeps = [(2, 64), (4, 128), (4, 256), (8, 512)]
+    if dry_run:
+        sweeps = sweeps[:1]
+    elif fast:
+        sweeps = sweeps[:2]
+    csv = Csv(["slots", "s_max", "kv_bytes_f32", "kv_bytes_int8",
+               "byte_ratio", "tpu_kv_us_f32", "tpu_kv_us_int8",
+               "cpu_tok_s_f32", "cpu_tok_s_int8", "token_match"])
+    records = []
+    for slots, s_max in sweeps:
+        n_req = 2 * slots
+        eng_f = _build(slots, s_max, None)
+        tok_f, out_f = _serve(eng_f, n_req)
+        eng_q = _build(slots, s_max, "int8")
+        tok_q, out_q = _serve(eng_q, n_req)
+        b_f = eng_f.plan_summary["kv_bytes_per_step"]
+        b_q = eng_q.plan_summary["kv_bytes_per_step"]
+        ratio = b_f / b_q
+        us_f = b_f / TPU_V5E.hbm_bandwidth * 1e6
+        us_q = b_q / TPU_V5E.hbm_bandwidth * 1e6
+        # Greedy token agreement as a fraction: ~1e-2-relative KV quant
+        # error can flip near-argmax ties on a random-init model, so a
+        # strict bool would measure tie density, not quant quality.
+        flat_f = [t for o in out_f for t in o]
+        flat_q = [t for o in out_q for t in o]
+        match = sum(a == b for a, b in zip(flat_f, flat_q)) / len(flat_f)
+        csv.row(slots, s_max, b_f, b_q, round(ratio, 2),
+                round(us_f, 3), round(us_q, 3),
+                round(tok_f, 1), round(tok_q, 1), round(match, 3))
+        records.append({"slots": slots, "s_max": s_max,
+                        "kv_bytes_f32": b_f, "kv_bytes_int8": b_q,
+                        "kv_byte_ratio": round(ratio, 3),
+                        "cpu_tok_s_f32": round(tok_f, 2),
+                        "cpu_tok_s_int8": round(tok_q, 2),
+                        "token_match": round(match, 4)})
+    out = csv.dump("serve decode: f32 vs int8 KV pool (bytes/step from the "
+                   "engine's accounting; TPU win = the KV stream column)")
+    worst = min(r["kv_byte_ratio"] for r in records)
+    out += f"\n# worst-case KV byte ratio int8 vs f32: {worst:.2f}x"
+    _append_trajectory({"bench": "serve_decode", "dry_run": dry_run,
+                        "unix_time": int(time.time()), "rows": records})
+    out += f"\n# trajectory appended to {TRAJECTORY.name}"
+    return out
+
+
+def _append_trajectory(record: dict) -> None:
+    traj = []
+    if TRAJECTORY.exists():
+        try:
+            traj = json.loads(TRAJECTORY.read_text())
+            assert isinstance(traj, list)
+        except Exception:
+            traj = []
+    traj.append(record)
+    TRAJECTORY.write_text(json.dumps(traj, indent=1) + "\n")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="one tiny sweep point; CPU smoke for CI")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    print(run(fast=not args.full, dry_run=args.dry_run))

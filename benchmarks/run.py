@@ -18,13 +18,13 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table3,rank,branch,lm,kernels,"
-                         "quant,branched_quant")
+                         "quant,branched_quant,serve_decode")
     args = ap.parse_args()
     fast = not args.full
 
     from benchmarks import (bench_branched_quant, bench_branching,
                             bench_kernels, bench_quant, bench_rank_sweep,
-                            bench_table1, bench_table3,
+                            bench_serve_decode, bench_table1, bench_table3,
                             bench_transformer_lrd)
     benches = {
         "table1": bench_table1.run,
@@ -35,6 +35,7 @@ def main() -> None:
         "kernels": bench_kernels.run,
         "quant": bench_quant.run,
         "branched_quant": bench_branched_quant.run,
+        "serve_decode": bench_serve_decode.run,
     }
     only = set(args.only.split(",")) if args.only else set(benches)
     failures = 0

@@ -8,3 +8,4 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q
 python -m benchmarks.bench_quant --dry-run
 python -m benchmarks.bench_branched_quant --dry-run
+python -m benchmarks.bench_serve_decode --dry-run

@@ -235,6 +235,10 @@ class LRDConfig:
     quant_targets: Sequence[str] = (  # which factor keys to quantize
         "w0", "w1", "u", "xc", "v", "tucker_u", "core", "tucker_v",
     )
+    # Runtime KV-cache quantization (repro/quant/kv): the decode step's
+    # *activation* stream — int8 K/V pool + per-(slot, head, channel)
+    # scales, read by the fused decode-attention kernel.
+    kv_quantize: str = "none"         # "none" | "int8"
 
 
 # ---------------------------------------------------------------------------

@@ -72,7 +72,7 @@ def branched_layer_time(m: int, c: int, s: int, r1: int, r2: int,
     return max(compute, memory)
 
 
-def plan_layer_time(plan, m: int, *, act_bytes: int = 2,
+def plan_layer_time(plan, m: int, *, act_bytes: int = 2, kv_bytes: int = 0,
                     spec: HardwareSpec = DEFAULT) -> float:
     """Modelled seconds for one :class:`repro.layers.plan.LinearPlan` at
     ``m`` tokens (rows / output pixels) — the plan-driven, quant-aware
@@ -83,13 +83,21 @@ def plan_layer_time(plan, m: int, *, act_bytes: int = 2,
     ``weight_bytes`` — which is where int8/fp8 factors pay off: a
     quantized plan moves half the weight bytes of its bf16 twin, so the
     memory-bound decode term drops while compute is unchanged.
+
+    ``kv_bytes`` adds a runtime stream to the same memory term: the KV
+    pool bytes this layer reads per step (decode attention streams the
+    *whole* pool — :func:`repro.quant.kv.kv_bytes_per_step` gives the
+    per-layer figure, 1 byte/elt + f32 scale rows when the pool is
+    int8).  At serve-time batch sizes the decode roofline is memory-bound
+    on exactly these two streams, so the model predicts the KV-quant win
+    the serve benchmark then measures.
     """
     mp = mxu_padded(m, spec)
     flops = sum(2.0 * mult * mp * mxu_padded(k, spec) * mxu_padded(n, spec)
                 for mult, k, n in plan.matmul_chain())
     compute = flops / spec.peak_flops_bf16
     memory = (act_bytes * m * (plan.d_in + plan.d_out)
-              + plan.weight_bytes) / spec.hbm_bandwidth
+              + plan.weight_bytes + kv_bytes) / spec.hbm_bandwidth
     return max(compute, memory)
 
 

@@ -1,0 +1,147 @@
+"""Fused int8-KV decode attention: one query row vs a quantized cache.
+
+The decode step is the roofline's memory corner: each new token streams
+the entire KV pool ``(slots, S_max, KV_heads, head_dim)`` through the
+core just to attend one query.  Quantizing the pool
+(:mod:`repro.quant.kv`) shrinks those bytes 4x vs f32 — but only if the
+attention read consumes int8 *directly*.  A dequantize-then-attend
+fallback materializes a full-precision pool copy in HBM every step and
+hands the win straight back.  This kernel keeps the narrow bytes all
+the way into VMEM:
+
+* int8 K/V tiles stream in per ``(slot, kv_head)`` program;
+* per-(slot, head, channel) scales (:mod:`repro.quant.kv` layout) fold
+  into the *query* row for K (``(q * k_scale) @ k_q^T == q @ dq(k)^T``)
+  and into the final output for V (``(p @ v_q) * v_scale``) — O(D)
+  multiplies replace O(S*D) dequantization work;
+* online softmax over sequence blocks: f32 running max / sum /
+  accumulator live in VMEM scratch across the arbitrary grid dim, so
+  logits for the full S_max never materialize;
+* per-slot validity is masked from ``cache_pos`` (position ``p`` is
+  live iff ``p <= cache_pos[slot]`` — the slot's freshly written token
+  included), which also neutralizes the S padding ``ops.py`` adds.
+
+Grid: ``(B, KV_heads, S/bs)`` with the sequence dim innermost
+(arbitrary); slots and heads are parallel.  The GQA group of G = H/KH
+query heads rides along as rows of the q/out tiles, so one pass over a
+K/V tile serves the whole group.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.lowrank_matmul import CompilerParams
+
+DEFAULT_BS = 128
+_NEG_INF = -1e30
+_MINOR = 128        # f32 scratch lane width for the (G, 1) running stats
+
+
+def _kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, cp_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale, softcap):
+    """q (1,1,G,D); k_q/v_q (1,bs,1,D) int8; k/v_scale (1,1,D) f32;
+    cache_pos (1,1) i32 SMEM; o (1,1,G,D); scratch acc (G,D),
+    m/l (G,128) f32 (col 0 live, broadcast across lanes)."""
+    si = pl.program_id(2)
+    ns = pl.num_programs(2)
+    bs = kq_ref.shape[1]
+
+    @pl.when(si == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                     # (G, D)
+    ks = ks_ref[0, 0].astype(jnp.float32)                   # (D,)
+    kq = kq_ref[0, :, 0, :].astype(jnp.float32)             # (bs, D)
+    # K scales + 1/sqrt(D) fold into the single query row.
+    s = jnp.dot(q * (ks * scale)[None, :], kq.T,
+                preferred_element_type=jnp.float32)         # (G, bs)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    pos = si * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    s = jnp.where(pos <= cp_ref[0, 0], s, _NEG_INF)
+
+    m_prev = m_ref[:, :1]                                   # (G, 1)
+    l_prev = l_ref[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                  # (G, bs)
+    vq = vq_ref[0, :, 0, :].astype(jnp.float32)             # (bs, D)
+    acc = acc_ref[...] * alpha + jnp.dot(
+        p, vq, preferred_element_type=jnp.float32)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(si == ns - 1)
+    def _flush():
+        vs = vs_ref[0, 0].astype(jnp.float32)               # (D,)
+        o = acc / l_new * vs[None, :]   # V scales fold into the output
+        o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bs", "softcap", "interpret"))
+def decode_attention_q(q: jax.Array, k_q: jax.Array, k_scale: jax.Array,
+                       v_q: jax.Array, v_scale: jax.Array,
+                       cache_pos: jax.Array, *, bs: int = DEFAULT_BS,
+                       softcap: float = 0.0,
+                       interpret: bool = False) -> jax.Array:
+    """Fused decode attention over an int8 KV pool.
+
+    q (B, KH, G, D); k_q/v_q (B, S, KH, D) int8; k/v_scale (B, KH, D)
+    f32; cache_pos (B, 1) int32 -> (B, KH, G, D) in q.dtype.
+    Requires S % bs == 0 (ops.py pads; padded positions mask out).
+    """
+    b, kh, g, d = q.shape
+    _, s, kh2, d2 = k_q.shape
+    assert (kh, d) == (kh2, d2), (q.shape, k_q.shape)
+    assert k_q.shape == v_q.shape
+    assert k_scale.shape == v_scale.shape == (b, kh, d), \
+        (k_scale.shape, v_scale.shape)
+    assert cache_pos.shape == (b, 1), cache_pos.shape
+    assert s % bs == 0, (s, bs)
+
+    grid = (b, kh, s // bs)
+    kernel = functools.partial(_kernel, scale=1.0 / (d ** 0.5),
+                               softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda i, j, k: (i, j, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda i, j, k: (i, k, j, 0)),
+            pl.BlockSpec((1, 1, d), lambda i, j, k: (i, j, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda i, j, k: (i, k, j, 0)),
+            pl.BlockSpec((1, 1, d), lambda i, j, k: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (i, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda i, j, k: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((g, d), jnp.float32),
+                        pltpu.VMEM((g, _MINOR), jnp.float32),
+                        pltpu.VMEM((g, _MINOR), jnp.float32)],
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(q, k_q, k_scale, v_q, v_scale, cache_pos)
+
+
+def vmem_bytes(g: int, d: int, s_block: int, act_bytes: int = 4,
+               q_bytes: int = 1) -> int:
+    """VMEM footprint of one grid step (fit check used by ops.py)."""
+    return (g * d * act_bytes                 # q tile
+            + 2 * s_block * d * q_bytes       # k_q + v_q tiles
+            + 2 * d * 4                       # k/v scale rows
+            + g * d * act_bytes               # out tile
+            + g * d * 4                       # f32 accumulator
+            + 2 * g * _MINOR * 4)             # running max / sum

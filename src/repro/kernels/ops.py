@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.kernels import branched_matmul as bk
 from repro.kernels import branched_matmul_q as bqk
+from repro.kernels import decode_attention_q as dak
 from repro.kernels import lowrank_matmul as lk
 from repro.kernels import lowrank_matmul_q as qk
 from repro.kernels import ref
@@ -67,6 +68,11 @@ def kernel_fits(kernel: str, m: int, *, c: int, s: int, r: int = 0,
     if kernel == "branched_q":
         return bqk.vmem_bytes(_bm_eff(bm or bqk.DEFAULT_BM, m), c, r1, r2,
                               bn or bqk.DEFAULT_BN,
+                              q_bytes=q_bytes) <= VMEM_BUDGET
+    if kernel == "decode_attn_q":
+        # Per-(slot, kv-head) program: c = head_dim, r = GQA group size,
+        # bn = the sequence block; m (the slot count) is grid-parallel.
+        return dak.vmem_bytes(max(1, r), c, bn or dak.DEFAULT_BS,
                               q_bytes=q_bytes) <= VMEM_BUDGET
     raise ValueError(f"unknown kernel {kernel!r}")
 
@@ -185,3 +191,36 @@ def branched_matmul_q(x: jax.Array, u_q: jax.Array, u_scale: jax.Array,
     if pad_s:
         y = y[:, :s]
     return y.reshape(*lead, s)
+
+
+def decode_attention_q(q: jax.Array, k_q: jax.Array, k_scale: jax.Array,
+                       v_q: jax.Array, v_scale: jax.Array,
+                       cache_pos: jax.Array, *, softcap: float = 0.0,
+                       bs: int = dak.DEFAULT_BS,
+                       force_kernel: bool = False) -> jax.Array:
+    """One decode step of attention over an int8 KV pool, fused.
+
+    q (B, 1, H, D); k_q/v_q (B, S, KH, D) int8; k/v_scale (B, KH, D)
+    f32 per-(slot, head, channel); cache_pos (B,) -> (B, 1, H, D).
+    Positions beyond each slot's ``cache_pos`` are masked in-kernel, so
+    the S padding added here never leaks into the softmax.
+    """
+    b, sq, h, d = q.shape
+    assert sq == 1, q.shape
+    s, kh = k_q.shape[1], k_q.shape[2]
+    g = h // kh
+    q_bytes = jnp.dtype(k_q.dtype).itemsize
+    if not (force_kernel or kernel_fits("decode_attn_q", b, c=d, s=s, r=g,
+                                        q_bytes=q_bytes, bn=bs)):
+        return ref.decode_attention_q_ref(q, k_q, k_scale, v_q, v_scale,
+                                          cache_pos, softcap=softcap)
+    # Head layout matches the jnp decode path: H rows group as (KH, G).
+    qg = q[:, 0].reshape(b, kh, g, d)
+    kq_p, _ = _pad_to(k_q, 1, bs)
+    vq_p, _ = _pad_to(v_q, 1, bs)
+    o = dak.decode_attention_q(
+        qg, kq_p, k_scale, vq_p, v_scale,
+        cache_pos.astype(jnp.int32).reshape(b, 1),
+        bs=min(bs, kq_p.shape[1]), softcap=softcap,
+        interpret=not _on_tpu())
+    return o.reshape(b, 1, h, d)

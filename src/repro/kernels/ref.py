@@ -1,6 +1,8 @@
 """Pure-jnp oracles for the Pallas kernels (the allclose reference)."""
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -51,3 +53,30 @@ def branched_matmul_q_ref(x: jax.Array, u_q: jax.Array, u_scale: jax.Array,
     xc = (xc_q.astype(accum_dtype) * xc_scale).astype(x.dtype)
     v = (v_q.astype(accum_dtype) * v_scale).astype(x.dtype)
     return branched_matmul_ref(x, u, xc, v, accum_dtype)
+
+
+def decode_attention_q_ref(q: jax.Array, k_q: jax.Array, k_scale: jax.Array,
+                           v_q: jax.Array, v_scale: jax.Array,
+                           cache_pos: jax.Array, *,
+                           softcap: float = 0.0) -> jax.Array:
+    """Dequantize-then-attend oracle for the fused int8 decode kernel.
+
+    q (B, 1, H, D); k_q/v_q (B, S, KH, D) int8; k/v_scale (B, KH, D);
+    cache_pos (B,) -> (B, 1, H, D) in q.dtype.  Full f32 softmax over
+    the (validity-masked) sequence — the allclose target for the
+    online-softmax kernel.
+    """
+    b, sq, h, d = q.shape
+    skv, kh = k_q.shape[1], k_q.shape[2]
+    k = k_q.astype(jnp.float32) * k_scale[:, None]
+    v = v_q.astype(jnp.float32) * v_scale[:, None]
+    qg = q.astype(jnp.float32).reshape(b, sq, kh, h // kh, d)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(d)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = jnp.arange(skv)[None, :] <= cache_pos[:, None]
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return o.reshape(b, sq, h, d).astype(q.dtype)

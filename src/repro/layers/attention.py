@@ -9,6 +9,15 @@ Decode attends one token against a cache of ``S`` slots; the new token's K/V
 is written at ``pos`` via dynamic_update_slice (works on sharded dims under
 GSPMD).
 
+The KV cache may be stored quantized (``repro.quant.kv``: int8 values +
+per-(slot, head, channel) f32 scales — keys ``k_q``/``k_scale``/``v_q``/
+``v_scale`` instead of ``k``/``v``).  ``apply_attention`` branches on the
+keys present, so the model/trunk code is identical for both layouts:
+prefill quantizes the prompt's K/V on insert, decode updates the int8
+pool incrementally and attends through the fused int8 kernel
+(``kernels/decode_attention_q``) under ``use_pallas``, or its jnp
+dequant oracle otherwise.
+
 All projections go through :func:`repro.layers.param.apply_linear`, so LRD
 surgery (SVD pairs / branched factors) applies transparently — and the
 *merged attention* variant (paper §2.3 mapped to QK^T/V·O joint
@@ -28,6 +37,7 @@ from repro.layers.param import (
     BATCH, SEQ, EMBED, QKV, RANK, HEADS, KV_HEADS, HEAD_DIM,
 )
 from repro.layers.norm import init_rms_norm, rms_norm
+from repro.quant import kv as kvq
 
 Q_CHUNK = 1024
 
@@ -133,13 +143,19 @@ def init_attention(pb: ParamBuilder, name: str, d_model: int, num_heads: int,
 
 
 def init_kv_cache(batch: int, seq_len: int, num_kv_heads: int, head_dim: int,
-                  dtype) -> dict:
+                  dtype, quantize: str | None = None) -> dict:
+    if quantize and quantize != "none":
+        return kvq.init_kv_cache_q(batch, seq_len, num_kv_heads, head_dim,
+                                   quantize)
     shape = (batch, seq_len, num_kv_heads, head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
 def kv_cache_spec(batch: int, seq_len: int, num_kv_heads: int, head_dim: int,
-                  dtype) -> dict:
+                  dtype, quantize: str | None = None) -> dict:
+    if quantize and quantize != "none":
+        return kvq.kv_cache_spec_q(batch, seq_len, num_kv_heads, head_dim,
+                                   quantize)
     shape = (batch, seq_len, num_kv_heads, head_dim)
     return {"k": jax.ShapeDtypeStruct(shape, dtype),
             "v": jax.ShapeDtypeStruct(shape, dtype)}
@@ -150,11 +166,17 @@ def apply_attention(p: dict, x: jax.Array, *, num_heads: int,
                     positions: jax.Array, causal: bool = True,
                     cache: dict | None = None,
                     cache_pos: jax.Array | None = None,
+                    prompt_len: jax.Array | None = None,
                     opts: AttnOpts = AttnOpts()) -> tuple[jax.Array, dict | None]:
     """Self-attention. Returns (output, updated_cache).
 
     * train:   cache=None — pure causal attention over x.
     * prefill: cache provided (zeros) — fills cache[0:S], causal.
+      ``prompt_len`` (scalar) marks the real token count of a
+      right-padded prompt: quantized-KV prefill zeroes pad positions'
+      K/V before the scale reduction, so bucket padding cannot inflate
+      the per-channel scales (causality already hides pad *keys* from
+      real queries, padded or not).
     * decode:  x has Sq=1, cache full; writes K/V at ``cache_pos`` and
                attends over the whole cache.
     """
@@ -175,22 +197,63 @@ def apply_attention(p: dict, x: jax.Array, *, num_heads: int,
     if cache is None:
         o = chunked_attention(q, k, v, causal=causal, softcap=opts.softcap)
     elif cache_pos is None:  # prefill (any length, incl. 1-token prompts)
-        new_cache = {"k": lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1),
-                     "v": lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1)}
+        if kvq.is_quantized_kv(cache):
+            # Quantize on insert: pool + scatter stay int8 throughout.
+            if prompt_len is not None:
+                pm = (jnp.arange(sq) < prompt_len)[None, :, None, None]
+                k = jnp.where(pm, k, 0.0)
+                v = jnp.where(pm, v, 0.0)
+            k_q, k_scale = kvq.quantize_kv_prefill(k)
+            v_q, v_scale = kvq.quantize_kv_prefill(v)
+            new_cache = {
+                "k_q": lax.dynamic_update_slice_in_dim(cache["k_q"], k_q,
+                                                       0, 1),
+                "k_scale": k_scale,
+                "v_q": lax.dynamic_update_slice_in_dim(cache["v_q"], v_q,
+                                                       0, 1),
+                "v_scale": v_scale}
+        else:
+            new_cache = {
+                "k": lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1),
+                "v": lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1)}
         o = chunked_attention(q, k, v, causal=causal, softcap=opts.softcap)
     else:  # decode: per-example positions (B,) — scatter into cache slots
         assert sq == 1, sq
-        bidx = jnp.arange(b)
-        ck = cache["k"].at[bidx, cache_pos].set(k[:, 0])
-        cv = cache["v"].at[bidx, cache_pos].set(v[:, 0])
-        new_cache = {"k": ck, "v": cv}
-        skv = ck.shape[1]
-        # mask out slots beyond each example's position
-        valid = jnp.arange(skv)[None, :] <= cache_pos[:, None]   # (B,S)
-        o = _decode_attention(q, ck, cv, valid, opts.softcap)
+        if kvq.is_quantized_kv(cache):
+            ck, ks = kvq.kv_write_token(cache["k_q"], cache["k_scale"],
+                                        k[:, 0], cache_pos)
+            cv, vs = kvq.kv_write_token(cache["v_q"], cache["v_scale"],
+                                        v[:, 0], cache_pos)
+            new_cache = {"k_q": ck, "k_scale": ks, "v_q": cv, "v_scale": vs}
+            o = _decode_attention_q(q, ck, ks, cv, vs, cache_pos,
+                                    opts.softcap, opts.use_pallas)
+        else:
+            bidx = jnp.arange(b)
+            ck = cache["k"].at[bidx, cache_pos].set(k[:, 0])
+            cv = cache["v"].at[bidx, cache_pos].set(v[:, 0])
+            new_cache = {"k": ck, "v": cv}
+            skv = ck.shape[1]
+            # mask out slots beyond each example's position
+            valid = jnp.arange(skv)[None, :] <= cache_pos[:, None]  # (B,S)
+            o = _decode_attention(q, ck, cv, valid, opts.softcap)
     o = o.reshape(b, sq, num_heads * head_dim)
     out = apply_linear(p["o"], o, **kw)
     return out, new_cache
+
+
+def _decode_attention_q(q, k_q, k_scale, v_q, v_scale, cache_pos, softcap,
+                        use_pallas):
+    """Decode over an int8 pool: fused kernel under ``use_pallas`` (with
+    the shared VMEM-fit fallback inside the ops wrapper), jnp dequant
+    oracle otherwise — a full-precision copy of the pool never lands in
+    HBM on the kernel path."""
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+    if use_pallas:
+        return kops.decode_attention_q(q, k_q, k_scale, v_q, v_scale,
+                                       cache_pos, softcap=softcap)
+    return kref.decode_attention_q_ref(q, k_q, k_scale, v_q, v_scale,
+                                       cache_pos, softcap=softcap)
 
 
 def _decode_attention(q, k, v, valid, softcap):

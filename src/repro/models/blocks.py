@@ -65,7 +65,8 @@ def init_block(pb: ParamBuilder, cfg, *, moe: bool) -> None:
 
 
 def apply_block(p: dict, x: jax.Array, cfg, *, positions, cache=None,
-                cache_pos=None, opts: BlockOpts = BlockOpts()
+                cache_pos=None, prompt_len=None,
+                opts: BlockOpts = BlockOpts()
                 ) -> tuple[jax.Array, Any, jax.Array]:
     """Pre-norm block.  Returns (x', new_cache, aux_loss)."""
     _, norm = _norm_fns(cfg)
@@ -86,7 +87,7 @@ def apply_block(p: dict, x: jax.Array, cfg, *, positions, cache=None,
             p["attn"], h, num_heads=cfg.num_heads,
             num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
             rope_theta=cfg.rope_theta, positions=positions, causal=causal,
-            cache=cache, cache_pos=cache_pos,
+            cache=cache, cache_pos=cache_pos, prompt_len=prompt_len,
             opts=opts.attn(cfg.attn_logit_softcap))
     x = x + a
     h = norm(p["mlp_norm"], x, cfg.norm_eps)
@@ -103,18 +104,22 @@ def apply_block(p: dict, x: jax.Array, cfg, *, positions, cache=None,
     return x, new_cache, aux
 
 
-def block_cache_spec(cfg, batch: int, seq_len: int, dtype) -> dict:
+def block_cache_spec(cfg, batch: int, seq_len: int, dtype,
+                     kv_quantize: str | None = None) -> dict:
+    # MLA's latent cache is already the compressed representation —
+    # kv_quantize applies to the plain GQA K/V pool only.
     if cfg.mla:
         return attn.mla_cache_spec(batch, seq_len, cfg, dtype)
     return attn.kv_cache_spec(batch, seq_len, cfg.num_kv_heads,
-                              cfg.resolved_head_dim, dtype)
+                              cfg.resolved_head_dim, dtype, kv_quantize)
 
 
-def init_block_cache(cfg, batch: int, seq_len: int, dtype) -> dict:
+def init_block_cache(cfg, batch: int, seq_len: int, dtype,
+                     kv_quantize: str | None = None) -> dict:
     if cfg.mla:
         return attn.init_mla_cache(batch, seq_len, cfg, dtype)
     return attn.init_kv_cache(batch, seq_len, cfg.num_kv_heads,
-                              cfg.resolved_head_dim, dtype)
+                              cfg.resolved_head_dim, dtype, kv_quantize)
 
 
 # ---------------------------------------------------------------------------

@@ -184,8 +184,14 @@ class LMModel:
 
     def trunk(self, params: PyTree, x: jax.Array, *, positions, cache=None,
               cache_pos=None, batch=None, opts=B.BlockOpts(),
-              remat: str = "none") -> tuple[jax.Array, PyTree, jax.Array]:
-        """Run all blocks. Returns (x, new_cache, aux_loss_sum)."""
+              remat: str = "none", prompt_len=None
+              ) -> tuple[jax.Array, PyTree, jax.Array]:
+        """Run all blocks. Returns (x, new_cache, aux_loss_sum).
+
+        ``prompt_len`` (scalar, prefill only) marks how many leading
+        positions are real tokens when the prompt is right-padded — the
+        quantized-KV prefill masks pad positions out of its scale
+        reduction (see ``apply_attention``)."""
         cfg = self.cfg
         f = cfg.family
         decode = cache_pos is not None
@@ -207,7 +213,7 @@ class LMModel:
                 p_l, c_l = xs
                 h, nc, a = B.apply_block(p_l, h, cfg, positions=positions,
                                          cache=c_l, cache_pos=cache_pos,
-                                         opts=opts)
+                                         prompt_len=prompt_len, opts=opts)
                 return (h, aux + a), nc
             (x, aux), ncs = lax.scan(wrap(body), (x, aux_total * 0),
                                      (stack_p, stack_cache))
@@ -218,7 +224,7 @@ class LMModel:
                 c0 = None if cache is None else cache["first"]
                 x, nc0, a0 = B.apply_block(
                     params["first"], x, cfg, positions=positions, cache=c0,
-                    cache_pos=cache_pos, opts=opts)
+                    cache_pos=cache_pos, prompt_len=prompt_len, opts=opts)
                 aux_total = aux_total + a0
                 if new_cache is not None:
                     new_cache["first"] = nc0
@@ -268,7 +274,8 @@ class LMModel:
                         p_l, c_l = xs2
                         hh, nc, a = B.apply_block(
                             p_l, hh, cfg, positions=positions, cache=c_l,
-                            cache_pos=cache_pos, opts=opts)
+                            cache_pos=cache_pos, prompt_len=prompt_len,
+                            opts=opts)
                         return (hh, aa + a), nc
                     (h, aux), ncs = lax.scan(wrap(inner), (h, aux), (sp, sc))
                     h = B.apply_cross_block(cp, h, cfg, kv=kv_l, opts=opts)
@@ -441,12 +448,13 @@ class LMModel:
 
     # -- caches ----------------------------------------------------------------
 
-    def _cache_tree(self, batch: int, seq_len: int, make_leaf) -> PyTree:
+    def _cache_tree(self, batch: int, seq_len: int, make_leaf,
+                    kv_quantize: str | None = None) -> PyTree:
         cfg = self.cfg
         f = cfg.family
         dt = self.dtype
         def kv(n=None, inner=None):
-            spec = B.block_cache_spec(cfg, batch, seq_len, dt)
+            spec = B.block_cache_spec(cfg, batch, seq_len, dt, kv_quantize)
             lead = tuple(d for d in (n, inner) if d is not None)
             return jax.tree.map(
                 lambda s: make_leaf((*lead, *s.shape), s.dtype), spec)
@@ -475,28 +483,49 @@ class LMModel:
                     "shared": jax.tree.map(
                         lambda s: make_leaf((self.n_groups, *s.shape),
                                             s.dtype),
-                        B.block_cache_spec(cfg, batch, seq_len, dt))}
+                        B.block_cache_spec(cfg, batch, seq_len, dt,
+                                           kv_quantize))}
         raise ValueError(f)
 
-    def cache_spec(self, batch: int, seq_len: int) -> PyTree:
-        return self._cache_tree(batch, seq_len, jax.ShapeDtypeStruct)
+    def cache_spec(self, batch: int, seq_len: int,
+                   kv_quantize: str | None = None) -> PyTree:
+        return self._cache_tree(batch, seq_len, jax.ShapeDtypeStruct,
+                                kv_quantize)
 
-    def init_cache(self, batch: int, seq_len: int) -> PyTree:
+    def init_cache(self, batch: int, seq_len: int,
+                   kv_quantize: str | None = None) -> PyTree:
         return self._cache_tree(batch, seq_len,
-                                lambda s, d: jnp.zeros(s, d))
+                                lambda s, d: jnp.zeros(s, d), kv_quantize)
 
     # -- prefill / decode -------------------------------------------------------
 
     def prefill(self, params: PyTree, batch: dict, cache: PyTree, *,
+                last_pos: jax.Array | None = None,
                 opts: B.BlockOpts = B.BlockOpts()
                 ) -> tuple[jax.Array, PyTree]:
-        """Fill the cache with a full prompt; returns (last-pos logits, cache)."""
+        """Fill the cache with a full prompt; returns (last-pos logits, cache).
+
+        ``last_pos`` (scalar) is the index of the prompt's final *real*
+        token — pass it when the prompt is right-padded (e.g. the serve
+        engine's power-of-2 length buckets) so the returned logits are
+        the real last token's, not the pad tail's.  Causal attention
+        already keeps padded positions from influencing real ones
+        (recurrent/MoE-capacity families must prefill unpadded — the
+        engine does not bucket them), and the trunk masks pad positions
+        out of the quantized-KV scale reduction.
+        """
         x = self.embed(params, batch)
         bsz, s = x.shape[:2]
         positions = jnp.broadcast_to(jnp.arange(s)[None, :], (bsz, s))
+        prompt_len = None if last_pos is None else last_pos + 1
         x, new_cache, _ = self.trunk(params, x, positions=positions,
-                                     cache=cache, batch=batch, opts=opts)
-        logits = self.logits(params, x[:, -1:, :], opts)
+                                     cache=cache, batch=batch, opts=opts,
+                                     prompt_len=prompt_len)
+        if last_pos is None:
+            xl = x[:, -1:, :]
+        else:
+            xl = lax.dynamic_slice_in_dim(x, last_pos, 1, axis=1)
+        logits = self.logits(params, xl, opts)
         return logits, new_cache
 
     def decode_step(self, params: PyTree, tokens: jax.Array,

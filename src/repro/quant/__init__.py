@@ -7,6 +7,10 @@
 * The matching serving hot path lives in
   :mod:`repro.kernels.lowrank_matmul_q` (fused kernel that dequantizes
   int8 factor tiles in VMEM) behind ``repro.kernels.ops.lowrank_matmul_q``.
+* :mod:`repro.quant.kv` — *runtime* quantization: the serve-time int8
+  KV cache pool (per-(slot, head, channel) scales, incremental decode
+  writes), consumed directly by the fused
+  :mod:`repro.kernels.decode_attention_q` kernel.
 
 See ``src/repro/quant/README.md`` for the design and config knobs.
 """

@@ -1,0 +1,176 @@
+"""Runtime KV-cache quantization: per-(slot, head, channel) int8 K/V.
+
+Weight quantization (:mod:`repro.quant.quantize`) shrinks the *static*
+stream; at serve time the decode step is bound by the *runtime* stream —
+every token reads the entire KV pool ``(slots, S_max, KV_heads,
+head_dim)`` to attend to one query.  This module stores that pool as
+int8 values plus f32 scales so the decode-attention read moves ~4x
+fewer bytes than an f32 pool (~2x vs bf16), and the fused kernel
+(:mod:`repro.kernels.decode_attention_q`) dequantizes tiles in VMEM so
+no full-precision copy ever materializes in HBM.
+
+Layout (mirrors the ``k_q``/``k_scale`` pair convention of the weight
+subsystem):
+
+    {"k":  (B, S, KH, D) f32}
+      -> {"k_q": int8 (B, S, KH, D), "k_scale": f32 (B, KH, D)}
+
+Scales are **per (slot, head, channel)** — one f32 scale per head_dim
+channel of each slot's K (or V) stream, i.e. the absmax reduction runs
+over the *sequence* axis.  Two reasons over per-token scales:
+
+* the kernel folds K scales into the single query row and V scales into
+  the final output (O(D) multiplies instead of O(S*D) dequant work);
+* scale storage is O(KH*D) per slot instead of O(S*KH), so the byte
+  overhead vanishes as contexts grow.
+
+The cost is that the sequence-reduced scale must cover tokens that have
+not arrived yet.  :func:`kv_write_token` handles this *incrementally*:
+the scale is a running per-channel max, and when a new token enlarges
+it, the slot's int8 history is rescaled in place (``round(q * old/new)``
+— at most half an LSB of extra rounding at the new, larger scale; the
+O(S) rescale pass is skipped via ``lax.cond`` when no channel grew, so
+the steady-state write is a one-row scatter).
+Symmetric, no zero point: ``x ~= q * scale`` with ``q in [-127, 127]``.
+
+Prefill quantizes on insert: the whole prompt's K/V is reduced over its
+sequence axis in one shot, so the cache pool and the engine's
+``_insert_slot`` scatter stay int8 throughout — no f32 staging copy.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.quantize import INT8_QMAX
+
+PyTree = Any
+
+#: runtime KV quantization modes (weight-side fp8 has no KV variant:
+#: the decode kernel's dequant-free scale folding needs the int8 grid).
+KV_MODES = ("int8",)
+
+
+def _check_mode(mode: str) -> None:
+    if mode not in KV_MODES:
+        raise ValueError(
+            f"unknown kv quant mode {mode!r} (want one of {KV_MODES})")
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def kv_cache_spec_q(batch: int, seq_len: int, num_kv_heads: int,
+                    head_dim: int, mode: str = "int8") -> dict:
+    """ShapeDtypeStruct tree of an int8 KV cache (the quantized twin of
+    :func:`repro.layers.attention.kv_cache_spec`)."""
+    _check_mode(mode)
+    vshape = (batch, seq_len, num_kv_heads, head_dim)
+    sshape = (batch, num_kv_heads, head_dim)
+    return {"k_q": jax.ShapeDtypeStruct(vshape, jnp.int8),
+            "k_scale": jax.ShapeDtypeStruct(sshape, jnp.float32),
+            "v_q": jax.ShapeDtypeStruct(vshape, jnp.int8),
+            "v_scale": jax.ShapeDtypeStruct(sshape, jnp.float32)}
+
+
+def init_kv_cache_q(batch: int, seq_len: int, num_kv_heads: int,
+                    head_dim: int, mode: str = "int8") -> dict:
+    """Zero-initialized int8 KV cache (zero scales dequantize to zeros)."""
+    spec = kv_cache_spec_q(batch, seq_len, num_kv_heads, head_dim, mode)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+def is_quantized_kv(cache: Any) -> bool:
+    """Does this per-layer cache dict hold int8 K/V?"""
+    return isinstance(cache, dict) and "k_q" in cache
+
+
+# ---------------------------------------------------------------------------
+# Quantize / dequantize
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Quantize ``x`` with a given (broadcastable) scale -> int8."""
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / safe),
+                 -INT8_QMAX, INT8_QMAX)
+    return q.astype(jnp.int8)
+
+
+def kv_scales(x: jax.Array, axis: int = 1) -> jax.Array:
+    """Per-(slot, head, channel) scales: absmax over the seq ``axis``."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis)
+    return amax / INT8_QMAX
+
+
+def quantize_kv_prefill(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One-shot prompt quantization.
+
+    ``x (B, S, KH, D)`` -> ``(q int8 (B, S, KH, D), scale f32 (B, KH, D))``
+    with the absmax reduced over the prompt's sequence axis.
+    """
+    scale = kv_scales(x, axis=1)
+    return quantize_kv(x, scale[:, None]), scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array,
+                  dtype=jnp.float32) -> jax.Array:
+    """``q (B, S, KH, D) * scale (B, KH, D)`` -> ``(B, S, KH, D)``."""
+    return (q.astype(jnp.float32) * scale[:, None]).astype(dtype)
+
+
+def kv_write_token(cache_q: jax.Array, scale: jax.Array, new: jax.Array,
+                   pos: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Insert one decoded token's K (or V) into an int8 cache pool.
+
+    ``cache_q (B, S, KH, D)`` int8; ``scale (B, KH, D)`` f32;
+    ``new (B, KH, D)``; ``pos (B,)`` per-slot write positions.
+    Returns ``(cache_q', scale')``.
+
+    The scale is a per-channel running max: ``scale' = max(scale,
+    |new| / 127)``.  Where it grew, the slot's history is requantized at
+    the larger scale (``round(q * scale/scale')``); where it did not,
+    the ratio is exactly 1 and the rescale is a bit-exact no-op — so the
+    whole O(S) history pass runs under a ``lax.cond`` and is skipped
+    entirely unless some channel's max actually grew (rare once a slot
+    is warm).  The steady-state write stays O(1) like the f32 scatter:
+    one token row, not a full pool read-modify-write per step.
+    """
+    newf = new.astype(jnp.float32)
+    scale_new = jnp.maximum(scale, jnp.abs(newf) / INT8_QMAX)
+
+    def _requant(c):
+        safe = jnp.where(scale_new > 0, scale_new, 1.0)
+        ratio = jnp.where(scale_new > 0, scale / safe, 1.0)
+        return jnp.clip(jnp.round(c.astype(jnp.float32) * ratio[:, None]),
+                        -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+
+    cache_q = jax.lax.cond(jnp.any(scale_new > scale), _requant,
+                           lambda c: c, cache_q)
+    q_new = quantize_kv(newf, scale_new)
+    bidx = jnp.arange(cache_q.shape[0])
+    return cache_q.at[bidx, pos].set(q_new), scale_new
+
+
+# ---------------------------------------------------------------------------
+# Accounting (cost model / benchmarks)
+# ---------------------------------------------------------------------------
+
+def kv_bytes_per_step(slots: int, seq_len: int, num_kv_heads: int,
+                      head_dim: int, *, quantize: str | None = None,
+                      dtype_bytes: int = 4) -> int:
+    """HBM bytes one layer's K+V pool streams per decode step.
+
+    Decode attention reads every slot's full cache (invalid positions
+    are masked, not skipped), so the per-step read is the whole pool:
+    values at 1 byte/elt for int8 (plus the f32 scale rows) vs
+    ``dtype_bytes`` for the unquantized pool.
+    """
+    n = slots * seq_len * num_kv_heads * head_dim
+    if quantize in (None, "none"):
+        return 2 * n * dtype_bytes
+    _check_mode(quantize)
+    return 2 * n + 2 * slots * num_kv_heads * head_dim * 4

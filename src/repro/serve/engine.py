@@ -2,13 +2,23 @@
 
 The cache pytree is laid out ``(..., B_slots, S_max, ...)``; each request
 owns one batch slot.  Admission: a new request is prefilled with batch=1
-and its cache *inserted* into its slot (a pytree scatter on the batch dim);
+(prompt right-padded to a power-of-2 length *bucket* so admission does
+not retrace per distinct prompt length) and its cache *inserted* into
+its slot (a pytree scatter on the batch dim, masking the padded tail);
 decode then advances **all active slots together** with per-slot positions
 (our attention decode supports per-example ``cache_pos``).  Finished slots
 free immediately and are refilled from the queue — no wave barriers.
 
-Sampling: greedy or temperature; stop on EOS or max tokens.  Throughput
-stats per step are kept for the benchmarks.
+``kv_quantize="int8"`` stores the KV pool quantized (int8 values +
+per-(slot, head, channel) f32 scales, :mod:`repro.quant.kv`): prefill
+quantizes on insert and the pool + slot scatter stay int8 throughout,
+so every decode step streams ~4x fewer KV bytes — the fused kernel
+(``kernels/decode_attention_q``) consumes them directly under
+``lrd.use_pallas``.
+
+Sampling: greedy or temperature; stop on EOS or max tokens.  One device
+call samples all slots per step (and all admissions per admit round).
+Throughput stats per step are kept for the benchmarks.
 """
 from __future__ import annotations
 
@@ -39,14 +49,20 @@ class Request:
     done: bool = False
 
 
+#: admission pads prompts up to at least this power-of-2 length bucket
+PREFILL_BUCKET_MIN = 8
+
+
 class ServeEngine:
     def __init__(self, run: RunConfig, params: PyTree, *, slots: int = 4,
                  max_seq: int = 512, seed: int = 0,
-                 quantize: str | None = None):
+                 quantize: str | None = None,
+                 kv_quantize: str | None = None):
         """``quantize`` ("int8" | "fp8") quantizes the decomposed factors
         at load via :mod:`repro.quant` — apply_linear then dispatches on
-        the rewritten keys, so the model/step code is untouched.  Defaults
-        to ``run.lrd.quantize``."""
+        the rewritten keys, so the model/step code is untouched.
+        ``kv_quantize`` ("int8") stores the runtime KV pool quantized
+        (:mod:`repro.quant.kv`).  Both default to ``run.lrd``."""
         self.run = run
         self.model = get_model(run.model)
         assert run.model.has_decode, "serving needs a decoder"
@@ -57,6 +73,9 @@ class ServeEngine:
             params = quantize_tree(params, mode=quantize,
                                    targets=run.lrd.quant_targets)
         self.quantize = quantize
+        if kv_quantize is None:
+            kv_quantize = run.lrd.kv_quantize
+        self.kv_quantize = None if kv_quantize == "none" else kv_quantize
         self.params = params
         # Execution plans, built once at load (not per call): every
         # linear subtree's kind / quantized-pair / kernel decision is
@@ -68,7 +87,21 @@ class ServeEngine:
         self.slots = slots
         self.max_seq = max_seq
         self.opts = block_opts(run)
-        self.cache = self.model.init_cache(slots, max_seq)
+        self.cache = self.model.init_cache(slots, max_seq,
+                                           kv_quantize=self.kv_quantize)
+        # Decode streams the entire KV pool (masked, not skipped) every
+        # step — this is the runtime twin of ``weight_bytes`` in the
+        # roofline, and where kv_quantize="int8" pays: 1 byte/elt plus
+        # the f32 scale rows instead of the full-width pool.  Only the
+        # attention KV leaves count (incl. MLA latents and VLM image
+        # KV); SSM/conv state is recurrent state, not a KV stream.
+        kv_keys = ("k", "v", "k_q", "v_q", "k_scale", "v_scale",
+                   "ckv", "krope")
+        self.plan_summary["kv_bytes_per_step"] = sum(
+            leaf.size * leaf.dtype.itemsize
+            for path, leaf in jax.tree_util.tree_flatten_with_path(
+                self.cache)[0]
+            if str(getattr(path[-1], "key", path[-1])) in kv_keys)
         self.positions = np.zeros((slots,), np.int32)   # next write pos
         self.active: list[Request | None] = [None] * slots
         self.queue: list[Request] = []
@@ -78,8 +111,9 @@ class ServeEngine:
 
         mdl, opts = self.model, self.opts
 
-        def _prefill1(params, batch, cache1):
-            return mdl.prefill(params, batch, cache1, opts=opts)
+        def _prefill1(params, batch, cache1, last_pos):
+            return mdl.prefill(params, batch, cache1, last_pos=last_pos,
+                               opts=opts)
 
         def _decode(params, tokens, positions, cache):
             return mdl.decode_step(params, tokens, positions, cache,
@@ -102,14 +136,32 @@ class ServeEngine:
 
     # -- slot management -----------------------------------------------------
 
-    @staticmethod
-    def _insert_slot(cache: PyTree, cache1: PyTree, slot: jax.Array
-                     ) -> PyTree:
+    # Sequence-axis position (from the right) of cache leaves that hold
+    # per-position state, by leaf key: K/V pools are (..., S, KH, hd),
+    # MLA latents are (..., S, r).  Everything else (scales, SSM states,
+    # cross-attn image KV) has no prompt-length axis to mask.
+    _SEQ_AXIS = {"k": -3, "v": -3, "k_q": -3, "v_q": -3,
+                 "ckv": -2, "krope": -2}
+
+    @classmethod
+    def _insert_slot(cls, cache: PyTree, cache1: PyTree, slot: jax.Array,
+                     length: jax.Array) -> PyTree:
         """Scatter a batch=1 cache into slot ``slot`` of the pool.
 
         Batch dim = the dim where pool and single differ (single == 1).
+        ``length`` is the prompt's real token count: bucketed prefill
+        right-pads the prompt, so positions ``>= length`` of the
+        per-position leaves are zeroed before the scatter (int8 pools
+        then dequantize the tail to exact zero; decode overwrites each
+        position before it ever becomes attendable either way).
         """
-        def leaf(pool, one):
+        def leaf(path, pool, one):
+            keys = [str(getattr(p, "key", p)) for p in path]
+            ax = None if "cross_kv" in keys else cls._SEQ_AXIS.get(keys[-1])
+            if ax is not None:
+                idx = jnp.arange(one.shape[ax])
+                mask = (idx < length).reshape(idx.shape + (1,) * (-ax - 1))
+                one = jnp.where(mask, one, jnp.zeros_like(one))
             diff = [i for i, (a, b) in
                     enumerate(zip(pool.shape, one.shape)) if a != b]
             if not diff:                 # slots == 1: whole-pool replace
@@ -118,7 +170,7 @@ class ServeEngine:
             start[diff[0]] = slot
             return jax.lax.dynamic_update_slice(
                 pool, one.astype(pool.dtype), tuple(start))
-        return jax.tree.map(leaf, cache, cache1)
+        return jax.tree_util.tree_map_with_path(leaf, cache, cache1)
 
     def add_request(self, req: Request) -> None:
         self.queue.append(req)
@@ -126,13 +178,32 @@ class ServeEngine:
     def _free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.active) if r is None]
 
+    #: families where prompt padding is inert: causal attention never
+    #: lets a real token see a pad token.  SSM/hybrid recurrent state
+    #: *advances* through pad tokens, and MoE expert-capacity routing
+    #: lets pads displace real tokens — those families prefill unpadded.
+    _BUCKET_FAMILIES = ("dense", "vlm")
+
+    def _bucket_len(self, n: int) -> int:
+        """Power-of-2 prefill length bucket — one compiled prefill per
+        bucket instead of one per distinct prompt length."""
+        if self.run.model.family not in self._BUCKET_FAMILIES:
+            return n
+        return min(max(PREFILL_BUCKET_MIN, 1 << (n - 1).bit_length()),
+                   self.max_seq)
+
     def _admit(self) -> None:
+        admitted: list[tuple[Request, jax.Array]] = []
         for slot in self._free_slots():
             if not self.queue:
                 break
             req = self.queue.pop(0)
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            cache1 = self.model.init_cache(1, self.max_seq)
+            n = len(req.prompt)
+            padded = np.zeros((1, self._bucket_len(n)), np.int32)
+            padded[0, :n] = req.prompt
+            prompt = jnp.asarray(padded)
+            cache1 = self.model.init_cache(1, self.max_seq,
+                                           kv_quantize=self.kv_quantize)
             if self.run.model.family == "vlm":
                 batch = {"tokens": prompt,
                          "image_embeds": jnp.zeros(
@@ -140,20 +211,30 @@ class ServeEngine:
                               self.run.model.d_model), self.model.dtype)}
             else:
                 batch = {"tokens": prompt}
-            logits, cache1 = self._jit_prefill(self.params, batch, cache1)
-            tok = self._sample(logits[:, -1, :], req)
-            req.output.append(int(tok[0]))
+            logits, cache1 = self._jit_prefill(
+                self.params, batch, cache1, jnp.asarray(n - 1, jnp.int32))
             self.cache = self._jit_insert(self.cache, cache1,
-                                          jnp.asarray(slot, jnp.int32))
-            self.positions[slot] = len(req.prompt)
+                                          jnp.asarray(slot, jnp.int32),
+                                          jnp.asarray(n, jnp.int32))
+            self.positions[slot] = n
             self.active[slot] = req
-
-    def _sample(self, logits: jax.Array, req: Request) -> np.ndarray:
-        if req.temperature <= 0:
-            return np.asarray(jnp.argmax(logits, -1))
+            admitted.append((req, logits[0, -1, :]))
+        if not admitted:
+            return
+        # First tokens for the whole admit round in ONE device call,
+        # same greedy/temperature mix as the decode path.  Rows are
+        # padded to ``slots`` so _sample_all keeps the decode path's
+        # single compiled (slots, V) shape across admit-round sizes.
+        k = len(admitted)
+        lg = jnp.stack([l for _, l in admitted])
+        if k < self.slots:
+            lg = jnp.pad(lg, ((0, self.slots - k), (0, 0)))
+        temps = np.zeros((self.slots,), np.float32)
+        temps[:k] = [max(r.temperature, 0.0) for r, _ in admitted]
         self.key, sub = jax.random.split(self.key)
-        return np.asarray(jax.random.categorical(
-            sub, logits / req.temperature, axis=-1))
+        toks = np.asarray(self._jit_sample_all(sub, lg, jnp.asarray(temps)))
+        for (req, _), tok in zip(admitted, toks[:k]):
+            req.output.append(int(tok))
 
     # -- main loop ----------------------------------------------------------
 
