@@ -1,4 +1,8 @@
-"""Serve-decode benchmark: f32 KV pool vs int8-quantized KV pool.
+"""Serve-decode benchmarks: KV quantization + admission scheduling.
+
+Two sweeps share this module (select with ``--sweep {all,kv,sched}``):
+
+**kv** — f32 KV pool vs int8-quantized KV pool.
 
 Decode is KV-streaming-bound: every step reads the *entire* cache pool
 ``(slots, S_max, KV_heads, head_dim)`` per layer (invalid positions are
@@ -15,10 +19,21 @@ Reported per ``(slots, S_max)`` sweep point:
   kernel is bypassed for the jnp dequant oracle; the bandwidth column
   is the TPU win),
 
-and the run is appended to the ``BENCH_serve.json`` trajectory at the
-repo root so successive PRs can track the serve numbers.
+**sched** — continuous (chunked-prefill token-budget scheduler) vs
+blocking admission under *mixed load*: short live decode streams with a
+long prompt queued behind them.  Blocking admission runs one whole
+prefill inside the step that admits the long prompt, stalling every
+live stream for that step; the scheduler interleaves ``prefill_chunk``-
+token segments with decode, so live streams keep producing a token
+every step.  Reported per sweep point and mode: p50/p99/max
+*inter-token latency* of the short streams (the head-of-line metric),
+mean TTFT, and end-to-end tokens/s.
 
-    PYTHONPATH=src python -m benchmarks.bench_serve_decode [--dry-run]
+Both sweeps append to the ``BENCH_serve.json`` trajectory at the repo
+root so successive PRs can track the serve numbers.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve_decode \
+        [--dry-run] [--sweep {all,kv,sched}]
 """
 from __future__ import annotations
 
@@ -112,6 +127,106 @@ def run(fast: bool = True, dry_run: bool = False) -> str:
     return out
 
 
+def _build_sched(slots: int, max_seq: int, admission: str, chunk: int):
+    from repro.configs import registry
+    from repro.configs.base import ParallelConfig, RunConfig
+    from repro.models.api import get_model
+    from repro.serve.engine import ServeEngine
+
+    cfg = dataclasses.replace(registry.get("llama3.2-1b").smoke,
+                              dtype="float32")
+    run = RunConfig(model=cfg, parallel=ParallelConfig())
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    return ServeEngine(run, params, slots=slots, max_seq=max_seq,
+                       admission=admission, prefill_chunk=chunk,
+                       step_token_budget=slots + chunk)
+
+
+def _mixed_load(eng, *, slots: int, long_len: int, short_new: int) -> dict:
+    """Short streams decode live; a long prompt arrives behind them.
+
+    A throwaway round with the same shapes runs first so every compiled
+    step (decode, chunk buckets, whole-prefill bucket, insert, sample)
+    is warm — the gap metrics measure scheduling, not jit compiles.
+    """
+    import numpy as np
+
+    from repro.serve.engine import Request
+
+    warm = [Request(uid=1000 + i, prompt=[2] * 4, max_new_tokens=3)
+            for i in range(slots)]
+    warm.append(Request(uid=1099, prompt=[3] * long_len, max_new_tokens=2))
+    for r in warm:
+        eng.add_request(r)
+    eng.run_until_done()
+    eng.stats.clear()
+
+    gaps, ttfts = [], []
+    reps = 3
+    for rep in range(reps):
+        shorts = [Request(uid=100 * rep + i, prompt=[(i % 7) + 1] * 4,
+                          max_new_tokens=short_new + 4 * i)
+                  for i in range(slots)]
+        for r in shorts:
+            eng.add_request(r)
+        for _ in range(2):              # shorts reach steady decode
+            eng.step()
+        longr = Request(uid=100 * rep + 99,
+                        prompt=[(i % 11) + 1 for i in range(long_len)],
+                        max_new_tokens=8)
+        eng.add_request(longr)
+        eng.run_until_done()
+        assert all(r.done for r in shorts + [longr])
+        gaps.extend(np.diff(r.token_times) for r in shorts
+                    if len(r.token_times) > 1)
+        ttfts.extend(r.ttft for r in shorts + [longr])
+    gaps = np.concatenate(gaps)
+    return {"p50_itl_ms": round(float(np.percentile(gaps, 50)) * 1e3, 3),
+            "p99_itl_ms": round(float(np.percentile(gaps, 99)) * 1e3, 3),
+            "max_itl_ms": round(float(gaps.max()) * 1e3, 3),
+            "ttft_mean_ms": round(sum(ttfts) / len(ttfts) * 1e3, 3),
+            "tokens_per_s": round(eng.throughput()["tokens_per_s"], 2)}
+
+
+def run_sched(fast: bool = True, dry_run: bool = False) -> str:
+    sweeps = [(4, 256, 192, 8, 32), (4, 512, 384, 16, 32)]
+    if dry_run:
+        sweeps = sweeps[:1]
+    elif not fast:
+        sweeps.append((8, 512, 384, 16, 48))
+    csv = Csv(["mode", "slots", "s_max", "long_len", "p50_itl_ms",
+               "p99_itl_ms", "max_itl_ms", "ttft_mean_ms", "tok_s"])
+    records = []
+    for slots, s_max, long_len, chunk, short_new in sweeps:
+        for mode in ("blocking", "continuous"):
+            eng = _build_sched(slots, s_max, mode, chunk)
+            r = _mixed_load(eng, slots=slots, long_len=long_len,
+                            short_new=short_new)
+            csv.row(mode, slots, s_max, long_len, r["p50_itl_ms"],
+                    r["p99_itl_ms"], r["max_itl_ms"], r["ttft_mean_ms"],
+                    r["tokens_per_s"])
+            records.append({"mode": mode, "slots": slots, "s_max": s_max,
+                            "long_len": long_len, "prefill_chunk": chunk,
+                            **r})
+    out = csv.dump("serve admission: blocking vs continuous (chunked "
+                   "prefill) under mixed load; p99 inter-token latency of "
+                   "the live short streams is the head-of-line metric")
+    by_mode = {}
+    for r in records:
+        by_mode.setdefault(r["mode"], []).append(r["p99_itl_ms"])
+    if len(by_mode) == 2:
+        blk = max(by_mode["blocking"])
+        cont = max(by_mode["continuous"])
+        out += (f"\n# worst-case p99 inter-token latency: blocking "
+                f"{blk:.1f}ms vs continuous {cont:.1f}ms "
+                f"({blk / max(cont, 1e-9):.2f}x)")
+    _append_trajectory({"bench": "serve_sched", "dry_run": dry_run,
+                        "unix_time": int(time.time()), "rows": records})
+    out += f"\n# trajectory appended to {TRAJECTORY.name}"
+    return out
+
+
 def _append_trajectory(record: dict) -> None:
     traj = []
     if TRAJECTORY.exists():
@@ -129,5 +244,10 @@ if __name__ == "__main__":
     ap.add_argument("--dry-run", action="store_true",
                     help="one tiny sweep point; CPU smoke for CI")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--sweep", choices=["all", "kv", "sched"],
+                    default="all")
     args = ap.parse_args()
-    print(run(fast=not args.full, dry_run=args.dry_run))
+    if args.sweep in ("all", "kv"):
+        print(run(fast=not args.full, dry_run=args.dry_run))
+    if args.sweep in ("all", "sched"):
+        print(run_sched(fast=not args.full, dry_run=args.dry_run))

@@ -18,7 +18,9 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table3,rank,branch,lm,kernels,"
-                         "quant,branched_quant,serve_decode")
+                         "quant,branched_quant,serve_decode,serve_sched")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered benchmark names and exit")
     args = ap.parse_args()
     fast = not args.full
 
@@ -36,7 +38,11 @@ def main() -> None:
         "quant": bench_quant.run,
         "branched_quant": bench_branched_quant.run,
         "serve_decode": bench_serve_decode.run,
+        "serve_sched": bench_serve_decode.run_sched,
     }
+    if args.list:
+        print("\n".join(benches))
+        return
     only = set(args.only.split(",")) if args.only else set(benches)
     failures = 0
     for name, fn in benches.items():

@@ -6,6 +6,8 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
+python -m benchmarks.run --list
 python -m benchmarks.bench_quant --dry-run
 python -m benchmarks.bench_branched_quant --dry-run
-python -m benchmarks.bench_serve_decode --dry-run
+python -m benchmarks.bench_serve_decode --sweep kv --dry-run
+python -m benchmarks.bench_serve_decode --sweep sched --dry-run

@@ -239,6 +239,12 @@ class LRDConfig:
     # *activation* stream — int8 K/V pool + per-(slot, head, channel)
     # scales, read by the fused decode-attention kernel.
     kv_quantize: str = "none"         # "none" | "int8"
+    # Continuous-batching serve stack (repro/serve): tokens of prompt
+    # processed per chunked-prefill segment, and the per-step token
+    # budget the scheduler fills decode-first, then with prefill chunk
+    # tokens.  0 = engine defaults (chunk 64; budget slots + chunk).
+    prefill_chunk: int = 0
+    step_token_budget: int = 0
 
 
 # ---------------------------------------------------------------------------

@@ -167,6 +167,7 @@ def apply_attention(p: dict, x: jax.Array, *, num_heads: int,
                     cache: dict | None = None,
                     cache_pos: jax.Array | None = None,
                     prompt_len: jax.Array | None = None,
+                    start_pos: jax.Array | None = None,
                     opts: AttnOpts = AttnOpts()) -> tuple[jax.Array, dict | None]:
     """Self-attention. Returns (output, updated_cache).
 
@@ -177,6 +178,15 @@ def apply_attention(p: dict, x: jax.Array, *, num_heads: int,
       K/V before the scale reduction, so bucket padding cannot inflate
       the per-channel scales (causality already hides pad *keys* from
       real queries, padded or not).
+    * prefill chunk: ``start_pos`` (scalar) given — x holds prompt
+      positions ``[start_pos, start_pos + Sq)`` of a prompt whose
+      ``[0, start_pos)`` K/V prefix is already in ``cache``.  The
+      chunk's K/V is written at the offset (quantized caches take the
+      amortized :func:`repro.quant.kv.kv_write_chunk` running-max
+      update) and attention runs over the *whole* cached prefix with
+      absolute causal masking — positions beyond the written prefix
+      can never satisfy ``key_pos <= q_pos``, so the full-pool read is
+      exact.  ``positions`` must carry the absolute offsets.
     * decode:  x has Sq=1, cache full; writes K/V at ``cache_pos`` and
                attends over the whole cache.
     """
@@ -196,6 +206,35 @@ def apply_attention(p: dict, x: jax.Array, *, num_heads: int,
     new_cache = None
     if cache is None:
         o = chunked_attention(q, k, v, causal=causal, softcap=opts.softcap)
+    elif cache_pos is None and start_pos is not None:
+        # prefill chunk at a sequence offset against an existing slot.
+        # Zero pad rows BEFORE the write (both dtypes): callers pass
+        # prompt_len as the chunk's real end (min(prompt end, chunk
+        # end)), so bucket padding can never land garbage K/V at
+        # mid-prompt positions a later query would attend, nor inflate
+        # the int8 running-max scales.
+        if prompt_len is not None:
+            pm = (start_pos + jnp.arange(sq)
+                  < prompt_len)[None, :, None, None]
+            k = jnp.where(pm, k, 0.0)
+            v = jnp.where(pm, v, 0.0)
+        if kvq.is_quantized_kv(cache):
+            ck, ks = kvq.kv_write_chunk(cache["k_q"], cache["k_scale"],
+                                        k, start_pos)
+            cv, vs = kvq.kv_write_chunk(cache["v_q"], cache["v_scale"],
+                                        v, start_pos)
+            new_cache = {"k_q": ck, "k_scale": ks, "v_q": cv, "v_scale": vs}
+            # int8 prefix: attend through the dequant view (the serve
+            # scheduler stages in full precision instead, for exactness)
+            kk = kvq.dequantize_kv(ck, ks, k.dtype)
+            vv = kvq.dequantize_kv(cv, vs, v.dtype)
+        else:
+            ck = lax.dynamic_update_slice_in_dim(cache["k"], k, start_pos, 1)
+            cv = lax.dynamic_update_slice_in_dim(cache["v"], v, start_pos, 1)
+            new_cache = {"k": ck, "v": cv}
+            kk, vv = ck, cv
+        o = chunked_attention(q, kk, vv, causal=causal, q_offset=start_pos,
+                              softcap=opts.softcap)
     elif cache_pos is None:  # prefill (any length, incl. 1-token prompts)
         if kvq.is_quantized_kv(cache):
             # Quantize on insert: pool + scatter stay int8 throughout.
@@ -369,11 +408,20 @@ def _mla_qkr(p, x, cfg, positions, kw):
 def apply_mla(p: dict, x: jax.Array, cfg, *, positions: jax.Array,
               causal: bool = True, cache: dict | None = None,
               cache_pos: jax.Array | None = None,
+              start_pos: jax.Array | None = None,
               opts: AttnOpts = AttnOpts()) -> tuple[jax.Array, dict | None]:
     """Multi-head latent attention. Decode uses the *absorbed* form:
     queries projected into the kv_lora latent space, attention runs entirely
     against the cached latents (never materializing per-head K/V) — this is
     exactly the paper's layer-merging executed at inference time.
+
+    ``start_pos`` (scalar) switches prefill into chunk mode: the chunk's
+    latents land at the sequence offset and K/V for attention are
+    re-expanded from the *whole* cached latent prefix (unwritten
+    positions are zero latents, hidden by the absolute causal mask).
+    Chunks must not be right-padded short of the prompt end (there is
+    no ``prompt_len`` pad masking here; the serve scheduler never
+    chunks MLA stacks).
     """
     b, sq, _ = x.shape
     h, nope, rope_d = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
@@ -402,21 +450,30 @@ def apply_mla(p: dict, x: jax.Array, cfg, *, positions: jax.Array,
         ctx_lat = jnp.einsum("bhqs,bsl->bqhl", attn, cc)     # (B,1,H,lora)
         o = jnp.einsum("bqhl,lhv->bqhv", ctx_lat, wv)
     else:
-        if cache is not None:  # prefill: fill latent cache
+        if cache is not None:  # prefill: fill latent cache (maybe at offset)
+            off = 0 if start_pos is None else start_pos
             new_cache = {
-                "ckv": lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, 0, 1),
+                "ckv": lax.dynamic_update_slice_in_dim(cache["ckv"], ckv,
+                                                       off, 1),
                 "krope": lax.dynamic_update_slice_in_dim(cache["krope"],
-                                                         k_rope, 0, 1)}
-        kv = apply_linear(p["kv_b"], ckv, **kw).reshape(b, sq, h, nope + vd)
+                                                         k_rope, off, 1)}
+        if start_pos is None:
+            src_ckv, src_rope, skv, q_off = ckv, k_rope, sq, 0
+        else:
+            # chunk: attend over the whole cached latent prefix
+            src_ckv, src_rope = new_cache["ckv"], new_cache["krope"]
+            skv, q_off = src_ckv.shape[1], start_pos
+        kv = apply_linear(p["kv_b"], src_ckv, **kw).reshape(b, skv, h,
+                                                            nope + vd)
         k_nope, v = kv[..., :nope], kv[..., nope:]
         k = jnp.concatenate(
-            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
-                                      (b, sq, h, rope_d))], axis=-1)
+            [k_nope, jnp.broadcast_to(src_rope[:, :, None, :],
+                                      (b, skv, h, rope_d))], axis=-1)
         q = jnp.concatenate([q_nope, q_rope], axis=-1)
         # pad v to qk dim for the shared attention kernel, then slice
         o = chunked_attention(q, k, _pad_last(v, nope + rope_d - vd),
-                              causal=causal, softcap=opts.softcap,
-                              scale=scale)[..., :vd]
+                              causal=causal, q_offset=q_off,
+                              softcap=opts.softcap, scale=scale)[..., :vd]
     out = apply_linear(p["o"], o.reshape(b, sq, h * vd), **kw)
     return out, new_cache
 

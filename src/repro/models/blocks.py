@@ -65,17 +65,22 @@ def init_block(pb: ParamBuilder, cfg, *, moe: bool) -> None:
 
 
 def apply_block(p: dict, x: jax.Array, cfg, *, positions, cache=None,
-                cache_pos=None, prompt_len=None,
+                cache_pos=None, prompt_len=None, start_pos=None,
                 opts: BlockOpts = BlockOpts()
                 ) -> tuple[jax.Array, Any, jax.Array]:
-    """Pre-norm block.  Returns (x', new_cache, aux_loss)."""
+    """Pre-norm block.  Returns (x', new_cache, aux_loss).
+
+    ``start_pos`` (scalar) marks a chunked prefill: x covers prompt
+    positions ``[start_pos, start_pos + S)`` and K/V land at the offset
+    in the existing cache slot (see ``attention.apply_attention``).
+    """
     _, norm = _norm_fns(cfg)
     causal = not cfg.is_encoder
     h = norm(p["attn_norm"], x, cfg.norm_eps)
     if "mla" in p:
         a, new_cache = attn.apply_mla(
             p["mla"], h, cfg, positions=positions, causal=causal,
-            cache=cache, cache_pos=cache_pos,
+            cache=cache, cache_pos=cache_pos, start_pos=start_pos,
             opts=opts.attn(cfg.attn_logit_softcap))
     elif "merged" in p:
         a = attn.apply_merged_attention(
@@ -88,7 +93,7 @@ def apply_block(p: dict, x: jax.Array, cfg, *, positions, cache=None,
             num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
             rope_theta=cfg.rope_theta, positions=positions, causal=causal,
             cache=cache, cache_pos=cache_pos, prompt_len=prompt_len,
-            opts=opts.attn(cfg.attn_logit_softcap))
+            start_pos=start_pos, opts=opts.attn(cfg.attn_logit_softcap))
     x = x + a
     h = norm(p["mlp_norm"], x, cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)

@@ -184,14 +184,20 @@ class LMModel:
 
     def trunk(self, params: PyTree, x: jax.Array, *, positions, cache=None,
               cache_pos=None, batch=None, opts=B.BlockOpts(),
-              remat: str = "none", prompt_len=None
+              remat: str = "none", prompt_len=None, start_pos=None
               ) -> tuple[jax.Array, PyTree, jax.Array]:
         """Run all blocks. Returns (x, new_cache, aux_loss_sum).
 
         ``prompt_len`` (scalar, prefill only) marks how many leading
         positions are real tokens when the prompt is right-padded — the
         quantized-KV prefill masks pad positions out of its scale
-        reduction (see ``apply_attention``)."""
+        reduction (see ``apply_attention``).
+
+        ``start_pos`` (scalar) switches prefill into *chunk* mode: x
+        covers prompt positions ``[start_pos, start_pos + S)`` and each
+        block's K/V lands at the offset in the existing cache slot.
+        Attention-cached families only (the serve scheduler gates
+        chunked admission accordingly)."""
         cfg = self.cfg
         f = cfg.family
         decode = cache_pos is not None
@@ -213,7 +219,8 @@ class LMModel:
                 p_l, c_l = xs
                 h, nc, a = B.apply_block(p_l, h, cfg, positions=positions,
                                          cache=c_l, cache_pos=cache_pos,
-                                         prompt_len=prompt_len, opts=opts)
+                                         prompt_len=prompt_len,
+                                         start_pos=start_pos, opts=opts)
                 return (h, aux + a), nc
             (x, aux), ncs = lax.scan(wrap(body), (x, aux_total * 0),
                                      (stack_p, stack_cache))
@@ -224,7 +231,8 @@ class LMModel:
                 c0 = None if cache is None else cache["first"]
                 x, nc0, a0 = B.apply_block(
                     params["first"], x, cfg, positions=positions, cache=c0,
-                    cache_pos=cache_pos, prompt_len=prompt_len, opts=opts)
+                    cache_pos=cache_pos, prompt_len=prompt_len,
+                    start_pos=start_pos, opts=opts)
                 aux_total = aux_total + a0
                 if new_cache is not None:
                     new_cache["first"] = nc0
@@ -275,7 +283,7 @@ class LMModel:
                         hh, nc, a = B.apply_block(
                             p_l, hh, cfg, positions=positions, cache=c_l,
                             cache_pos=cache_pos, prompt_len=prompt_len,
-                            opts=opts)
+                            start_pos=start_pos, opts=opts)
                         return (hh, aa + a), nc
                     (h, aux), ncs = lax.scan(wrap(inner), (h, aux), (sp, sc))
                     h = B.apply_cross_block(cp, h, cfg, kv=kv_l, opts=opts)
@@ -525,6 +533,47 @@ class LMModel:
             xl = x[:, -1:, :]
         else:
             xl = lax.dynamic_slice_in_dim(x, last_pos, 1, axis=1)
+        logits = self.logits(params, xl, opts)
+        return logits, new_cache
+
+    def prefill_chunk(self, params: PyTree, batch: dict, cache: PyTree, *,
+                      start_pos: jax.Array, prompt_len: jax.Array,
+                      opts: B.BlockOpts = B.BlockOpts()
+                      ) -> tuple[jax.Array, PyTree]:
+        """Continue a prefill one chunk at a time (continuous batching).
+
+        ``batch["tokens"]`` (1, C) holds prompt positions
+        ``[start_pos, start_pos + C)`` of a prompt whose
+        ``[0, start_pos)`` K/V prefix is already written into ``cache``;
+        the chunk's K/V lands at the offset and attention covers the
+        whole causal prefix, so running a prompt chunk-by-chunk writes
+        a cache (and produces last-token logits) identical to one-shot
+        :meth:`prefill`.  The chunk may be right-padded (length
+        bucketing): pass ``prompt_len`` as the chunk's real *end*
+        position — ``min(prompt length, start_pos + real chunk len)`` —
+        and pad rows beyond it are zeroed at the K/V write, so they can
+        never corrupt mid-prompt positions or int8 scales, and
+        causality hides them from every real query.
+
+        Returns ``(logits, cache)`` with logits (1, 1, V) taken at the
+        prompt's last *real* position when it falls inside this chunk
+        (the final chunk; callers ignore the value for earlier chunks,
+        where it is clamped to the chunk's last row).
+
+        Attention-cached families only — recurrent state (SSM/hybrid)
+        advances through pad tokens and MoE capacity routing is not
+        pad-inert, so the serve scheduler prefills those families whole.
+        """
+        x = self.embed(params, batch)
+        bsz, c = x.shape[:2]
+        positions = jnp.broadcast_to(
+            start_pos + jnp.arange(c)[None, :], (bsz, c))
+        x, new_cache, _ = self.trunk(params, x, positions=positions,
+                                     cache=cache, batch=batch, opts=opts,
+                                     prompt_len=prompt_len,
+                                     start_pos=start_pos)
+        lp = jnp.clip(prompt_len - 1 - start_pos, 0, c - 1)
+        xl = lax.dynamic_slice_in_dim(x, lp, 1, axis=1)
         logits = self.logits(params, xl, opts)
         return logits, new_cache
 

@@ -122,6 +122,80 @@ def dequantize_kv(q: jax.Array, scale: jax.Array,
     return (q.astype(jnp.float32) * scale[:, None]).astype(dtype)
 
 
+def kv_write_chunk(cache_q: jax.Array, scale: jax.Array, new: jax.Array,
+                   start: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Insert a prefill chunk's K (or V) into an int8 cache pool.
+
+    ``cache_q (B, S, KH, D)`` int8; ``scale (B, KH, D)`` f32;
+    ``new (B, C, KH, D)``; ``start`` scalar — the chunk's sequence
+    offset.  The chunked twin of :func:`kv_write_token`: ONE vectorized
+    per-channel absmax over the whole chunk updates the running-max
+    scale (instead of C sequential per-token passes, each with its own
+    potential O(S) history requant), the slot history is requantized at
+    most once per chunk, and the chunk lands as a single
+    ``dynamic_update_slice``.  The final scale equals the per-token
+    loop's (max is associative); requantized history values can differ
+    by 1 LSB from the sequential path (one rounding instead of several).
+    """
+    newf = new.astype(jnp.float32)
+    scale_new = jnp.maximum(scale, jnp.max(jnp.abs(newf), axis=1) / INT8_QMAX)
+
+    def _requant(c):
+        safe = jnp.where(scale_new > 0, scale_new, 1.0)
+        ratio = jnp.where(scale_new > 0, scale / safe, 1.0)
+        return jnp.clip(jnp.round(c.astype(jnp.float32) * ratio[:, None]),
+                        -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+
+    cache_q = jax.lax.cond(jnp.any(scale_new > scale), _requant,
+                           lambda c: c, cache_q)
+    q_new = quantize_kv(newf, scale_new[:, None])
+    return jax.lax.dynamic_update_slice_in_dim(cache_q, q_new, start, 1), \
+        scale_new
+
+
+def quantize_kv_tree(cache: PyTree, prompt_len: jax.Array | None = None
+                     ) -> PyTree:
+    """Quantize a full-precision stream cache into the int8 pool layout.
+
+    Walks the cache pytree and replaces every GQA KV dict ``{"k","v"}``
+    (leaves ``(..., S, KH, D)`` — works on both per-layer and stacked
+    ``(L, B, S, KH, D)`` caches) with the quantized
+    ``{"k_q","k_scale","v_q","v_scale"}`` layout; non-KV state passes
+    through untouched.  ``prompt_len`` masks positions ``>= prompt_len``
+    (the right-padded prefill tail) out of both the values and the
+    absmax scale reduction, so the result is bit-identical to the
+    quantize-on-insert whole-prefill path.
+
+    The chunked-prefill scheduler stages an in-flight prompt at full
+    precision (chunk attention over the exact K/V prefix, so chunked
+    greedy == whole-prefill greedy) and calls this once at slot insert
+    — the stacked-cache one-shot twin of :func:`quantize_kv_prefill`.
+    """
+    def one(x):
+        xf = x.astype(jnp.float32)
+        if prompt_len is not None:
+            s = x.shape[-3]
+            mask = (jnp.arange(s) < prompt_len).reshape((s, 1, 1))
+            xf = jnp.where(mask, xf, 0.0)
+        scale = jnp.max(jnp.abs(xf), axis=-3) / INT8_QMAX
+        sc = jnp.expand_dims(scale, -3)
+        safe = jnp.where(sc > 0, sc, 1.0)
+        q = jnp.clip(jnp.round(xf / safe), -INT8_QMAX, INT8_QMAX)
+        return q.astype(jnp.int8), scale
+
+    def rec(t):
+        if isinstance(t, dict):
+            if set(t) == {"k", "v"}:
+                k_q, k_scale = one(t["k"])
+                v_q, v_scale = one(t["v"])
+                return {"k_q": k_q, "k_scale": k_scale,
+                        "v_q": v_q, "v_scale": v_scale}
+            return {key: rec(v) for key, v in t.items()}
+        return t
+
+    return rec(cache)
+
+
 def kv_write_token(cache_q: jax.Array, scale: jax.Array, new: jax.Array,
                    pos: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Insert one decoded token's K (or V) into an int8 cache pool.

@@ -1,1 +1,4 @@
 from repro.serve.engine import ServeEngine, Request  # noqa: F401
+from repro.serve.pool import KVPoolManager  # noqa: F401
+from repro.serve.runner import ModelRunner  # noqa: F401
+from repro.serve.scheduler import PrefillStream, Scheduler  # noqa: F401

@@ -1,29 +1,43 @@
 """Batched serving engine: continuous batching over a fixed slot pool.
 
-The cache pytree is laid out ``(..., B_slots, S_max, ...)``; each request
-owns one batch slot.  Admission: a new request is prefilled with batch=1
-(prompt right-padded to a power-of-2 length *bucket* so admission does
-not retrace per distinct prompt length) and its cache *inserted* into
-its slot (a pytree scatter on the batch dim, masking the padded tail);
-decode then advances **all active slots together** with per-slot positions
-(our attention decode supports per-example ``cache_pos``).  Finished slots
-free immediately and are refilled from the queue — no wave barriers.
+``ServeEngine`` is a thin façade over three seams (one file each, one
+responsibility each):
 
-``kv_quantize="int8"`` stores the KV pool quantized (int8 values +
-per-(slot, head, channel) f32 scales, :mod:`repro.quant.kv`): prefill
-quantizes on insert and the pool + slot scatter stay int8 throughout,
-so every decode step streams ~4x fewer KV bytes — the fused kernel
-(``kernels/decode_attention_q``) consumes them directly under
-``lrd.use_pallas``.
+* :class:`repro.serve.scheduler.Scheduler` — request lifecycle + the
+  per-step *token budget* plan: decode-first (every live stream decodes
+  one token per step, unconditionally), then **chunked prefill**
+  segments with the leftover budget.  A long prompt is processed
+  ``prefill_chunk`` tokens at a time interleaved with decode, so it can
+  never head-of-line-block live streams the way the old blocking
+  per-admit prefill did.
+* :class:`repro.serve.pool.KVPoolManager` — the cache pytree
+  ``(..., B_slots, S_max, ...)`` (f32/bf16 or int8 via
+  :mod:`repro.quant.kv`), slot allocation, per-token byte accounting,
+  byte-budget admission, and **KV-pressure preemption**: the youngest
+  stream is evicted and requeued with its generated prefix
+  (bit-deterministic under greedy — chunked prefill == whole prefill
+  == decode).
+* :class:`repro.serve.runner.ModelRunner` — params + every jitted step
+  function behind one ``step(tokens, positions, seg_kind)`` entry
+  (``"decode"`` | ``"prefill_chunk"`` | ``"prefill"``).
+
+Chunked ("continuous") admission is the default for the dense GQA
+family; recurrent (SSM/hybrid), MoE-capacity, VLM, and MLA stacks keep
+the whole-prompt "blocking" admission path (prompt padding / chunking
+is not inert for them).  In-flight chunked prompts stage in a
+full-precision batch=1 cache and land in the pool in one scatter
+(quantizing on insert for int8 pools), so chunked greedy output streams
+match whole-prefill exactly for BOTH cache dtypes.
 
 Sampling: greedy or temperature; stop on EOS or max tokens.  One device
-call samples all slots per step (and all admissions per admit round).
-Throughput stats per step are kept for the benchmarks.
+call samples all slots per step (and all prefill completions per step).
+Per-step stats (a bounded ring buffer) record decode, prefill, and
+admission seconds; every request carries TTFT timestamps.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
+from collections import deque
 from typing import Any
 
 import jax
@@ -32,37 +46,62 @@ import numpy as np
 
 from repro.configs.base import RunConfig
 from repro.models.api import get_model
+from repro.serve.pool import KVPoolManager
+from repro.serve.runner import ModelRunner
+from repro.serve.scheduler import (PREFILL_BUCKET_MIN, PrefillStream,
+                                   Request, Scheduler)
 from repro.train.steps import block_opts
+
+__all__ = ["ServeEngine", "Request", "PREFILL_BUCKET_MIN"]
 
 PyTree = Any
 
+#: default tokens per chunked-prefill segment (LRDConfig.prefill_chunk
+#: or the engine kwarg override it)
+DEFAULT_PREFILL_CHUNK = 64
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: list[int]
-    max_new_tokens: int = 32
-    temperature: float = 0.0
-    eos_id: int | None = None
-    # filled by the engine:
-    output: list[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-#: admission pads prompts up to at least this power-of-2 length bucket
-PREFILL_BUCKET_MIN = 8
+#: steps of stats kept (ring buffer — long-running engines must not
+#: grow host memory without bound)
+STATS_WINDOW = 4096
 
 
 class ServeEngine:
+    #: families where prompt padding is inert: causal attention never
+    #: lets a real token see a pad token.  SSM/hybrid recurrent state
+    #: *advances* through pad tokens, and MoE expert-capacity routing
+    #: lets pads displace real tokens — those families prefill unpadded.
+    _BUCKET_FAMILIES = ("dense", "vlm")
+
+    #: families served with chunked continuous admission: plain GQA
+    #: attention stacks, where a chunk's K/V lands at a sequence offset
+    #: and causality makes the segmented prefill exact.  VLM (image KV
+    #: precompute), MLA, MoE capacity routing, and recurrent state keep
+    #: blocking whole-prompt admission.
+    _CHUNK_FAMILIES = ("dense",)
+
     def __init__(self, run: RunConfig, params: PyTree, *, slots: int = 4,
                  max_seq: int = 512, seed: int = 0,
                  quantize: str | None = None,
-                 kv_quantize: str | None = None):
+                 kv_quantize: str | None = None,
+                 admission: str | None = None,
+                 prefill_chunk: int | None = None,
+                 step_token_budget: int | None = None,
+                 kv_byte_budget: int | None = None,
+                 stats_window: int = STATS_WINDOW):
         """``quantize`` ("int8" | "fp8") quantizes the decomposed factors
-        at load via :mod:`repro.quant` — apply_linear then dispatches on
-        the rewritten keys, so the model/step code is untouched.
-        ``kv_quantize`` ("int8") stores the runtime KV pool quantized
-        (:mod:`repro.quant.kv`).  Both default to ``run.lrd``."""
+        at load via :mod:`repro.quant`; ``kv_quantize`` ("int8") stores
+        the runtime KV pool quantized (:mod:`repro.quant.kv`).  Both
+        default to ``run.lrd``, as do ``prefill_chunk`` /
+        ``step_token_budget`` (0 = engine defaults).
+
+        ``admission`` is "continuous" (token-budget chunked prefill;
+        default where supported) or "blocking" (one whole prefill per
+        admit — the pre-scheduler behavior, kept for unsupported
+        families and as the benchmark baseline).  ``kv_byte_budget``
+        (bytes of per-position KV across all streams) gates admission
+        and triggers youngest-first preemption when decode growth
+        crosses it; None = never preempt.
+        """
         self.run = run
         self.model = get_model(run.model)
         assert run.model.has_decode, "serving needs a decoder"
@@ -87,123 +126,162 @@ class ServeEngine:
         self.slots = slots
         self.max_seq = max_seq
         self.opts = block_opts(run)
-        self.cache = self.model.init_cache(slots, max_seq,
-                                           kv_quantize=self.kv_quantize)
+
+        if admission is None:
+            admission = ("continuous" if self._supports_chunked()
+                         else "blocking")
+        elif admission == "continuous" and not self._supports_chunked():
+            raise ValueError(
+                f"family {run.model.family!r} (mla={run.model.mla}) does "
+                "not support chunked admission; use admission='blocking'")
+        elif admission not in ("continuous", "blocking"):
+            raise ValueError(admission)
+        self.admission = admission
+        chunk = prefill_chunk or run.lrd.prefill_chunk \
+            or DEFAULT_PREFILL_CHUNK
+        self.prefill_chunk = max(1, min(chunk, max_seq))
+        self.step_token_budget = step_token_budget \
+            or run.lrd.step_token_budget or (slots + self.prefill_chunk)
+
+        self.runner = ModelRunner(self.model, params, self.opts,
+                                  max_seq=max_seq)
+        self.pool = KVPoolManager(self.model, slots, max_seq,
+                                  kv_quantize=self.kv_quantize,
+                                  byte_budget=kv_byte_budget)
+        self.scheduler = Scheduler(slots, prefill_chunk=self.prefill_chunk,
+                                   step_token_budget=self.step_token_budget)
         # Decode streams the entire KV pool (masked, not skipped) every
-        # step — this is the runtime twin of ``weight_bytes`` in the
-        # roofline, and where kv_quantize="int8" pays: 1 byte/elt plus
-        # the f32 scale rows instead of the full-width pool.  Only the
-        # attention KV leaves count (incl. MLA latents and VLM image
-        # KV); SSM/conv state is recurrent state, not a KV stream.
-        kv_keys = ("k", "v", "k_q", "v_q", "k_scale", "v_scale",
-                   "ckv", "krope")
-        self.plan_summary["kv_bytes_per_step"] = sum(
-            leaf.size * leaf.dtype.itemsize
-            for path, leaf in jax.tree_util.tree_flatten_with_path(
-                self.cache)[0]
-            if str(getattr(path[-1], "key", path[-1])) in kv_keys)
-        self.positions = np.zeros((slots,), np.int32)   # next write pos
-        self.active: list[Request | None] = [None] * slots
-        self.queue: list[Request] = []
-        self.finished: list[Request] = []
+        # step — the runtime twin of ``weight_bytes`` in the roofline,
+        # and where kv_quantize="int8" pays.
+        self.plan_summary["kv_bytes_per_step"] = self.pool.kv_bytes_per_step
         self.key = jax.random.PRNGKey(seed)
-        self.stats: list[dict] = []
+        self.stats: deque[dict] = deque(maxlen=stats_window)
 
-        mdl, opts = self.model, self.opts
+    def _supports_chunked(self) -> bool:
+        return (self.run.model.family in self._CHUNK_FAMILIES
+                and not self.run.model.mla)
 
-        def _prefill1(params, batch, cache1, last_pos):
-            return mdl.prefill(params, batch, cache1, last_pos=last_pos,
-                               opts=opts)
+    # -- façade views (the pre-split engine surface) -------------------------
 
-        def _decode(params, tokens, positions, cache):
-            return mdl.decode_step(params, tokens, positions, cache,
-                                   opts=opts)
+    @property
+    def cache(self) -> PyTree:
+        return self.pool.cache
 
-        def _sample_all(key, logits, temps):
-            """One device call samples every slot: greedy argmax rows and
-            temperature rows resolve together; the host indexes the
-            result (no per-slot round-trips on the decode hot path)."""
-            greedy = jnp.argmax(logits, axis=-1)
-            safe = jnp.where(temps > 0, temps, 1.0)
-            sampled = jax.random.categorical(key, logits / safe[:, None],
-                                             axis=-1)
-            return jnp.where(temps > 0, sampled, greedy)
+    @cache.setter
+    def cache(self, value: PyTree) -> None:
+        self.pool.cache = value
 
-        self._jit_prefill = jax.jit(_prefill1)
-        self._jit_decode = jax.jit(_decode)
-        self._jit_insert = jax.jit(self._insert_slot, donate_argnums=(0,))
-        self._jit_sample_all = jax.jit(_sample_all)
+    @property
+    def positions(self) -> np.ndarray:
+        return self.pool.positions
 
-    # -- slot management -----------------------------------------------------
+    @property
+    def active(self) -> list[Request | None]:
+        return self.scheduler.active
 
-    # Sequence-axis position (from the right) of cache leaves that hold
-    # per-position state, by leaf key: K/V pools are (..., S, KH, hd),
-    # MLA latents are (..., S, r).  Everything else (scales, SSM states,
-    # cross-attn image KV) has no prompt-length axis to mask.
-    _SEQ_AXIS = {"k": -3, "v": -3, "k_q": -3, "v_q": -3,
-                 "ckv": -2, "krope": -2}
+    @property
+    def queue(self) -> deque[Request]:
+        return self.scheduler.waiting
 
-    @classmethod
-    def _insert_slot(cls, cache: PyTree, cache1: PyTree, slot: jax.Array,
-                     length: jax.Array) -> PyTree:
-        """Scatter a batch=1 cache into slot ``slot`` of the pool.
+    @property
+    def finished(self) -> list[Request]:
+        return self.scheduler.finished
 
-        Batch dim = the dim where pool and single differ (single == 1).
-        ``length`` is the prompt's real token count: bucketed prefill
-        right-pads the prompt, so positions ``>= length`` of the
-        per-position leaves are zeroed before the scatter (int8 pools
-        then dequantize the tail to exact zero; decode overwrites each
-        position before it ever becomes attendable either way).
-        """
-        def leaf(path, pool, one):
-            keys = [str(getattr(p, "key", p)) for p in path]
-            ax = None if "cross_kv" in keys else cls._SEQ_AXIS.get(keys[-1])
-            if ax is not None:
-                idx = jnp.arange(one.shape[ax])
-                mask = (idx < length).reshape(idx.shape + (1,) * (-ax - 1))
-                one = jnp.where(mask, one, jnp.zeros_like(one))
-            diff = [i for i, (a, b) in
-                    enumerate(zip(pool.shape, one.shape)) if a != b]
-            if not diff:                 # slots == 1: whole-pool replace
-                return one.astype(pool.dtype)
-            start = [0] * pool.ndim
-            start[diff[0]] = slot
-            return jax.lax.dynamic_update_slice(
-                pool, one.astype(pool.dtype), tuple(start))
-        return jax.tree_util.tree_map_with_path(leaf, cache, cache1)
+    @property
+    def preemptions(self) -> int:
+        return self.scheduler.preemptions
+
+    @property
+    def _jit_prefill(self):
+        """The compiled admission prefill entry (chunked or whole)."""
+        return (self.runner.jit_prefill_chunk
+                if self.admission == "continuous"
+                else self.runner.jit_prefill)
+
+    @property
+    def _jit_decode(self):
+        return self.runner.jit_decode
+
+    @property
+    def _jit_sample_all(self):
+        return self.runner.jit_sample_all
+
+    @property
+    def _jit_insert(self):
+        return self.pool._jit_insert
+
+    # -- admission helpers ---------------------------------------------------
 
     def add_request(self, req: Request) -> None:
-        self.queue.append(req)
-
-    def _free_slots(self) -> list[int]:
-        return [i for i, r in enumerate(self.active) if r is None]
-
-    #: families where prompt padding is inert: causal attention never
-    #: lets a real token see a pad token.  SSM/hybrid recurrent state
-    #: *advances* through pad tokens, and MoE expert-capacity routing
-    #: lets pads displace real tokens — those families prefill unpadded.
-    _BUCKET_FAMILIES = ("dense", "vlm")
+        if len(req.prompt) > self.max_seq - 1:
+            # reject up front: admission would otherwise consume a slot
+            # and crash mid-prefill.  (Preemption-resumed prompts always
+            # fit — decode stops one position short of max_seq.)
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens does not fit "
+                f"max_seq={self.max_seq} (need <= {self.max_seq - 1} "
+                "to leave room for decode)")
+        if req.submit_time is None:
+            req.submit_time = time.perf_counter()
+        self.scheduler.submit(req)
 
     def _bucket_len(self, n: int) -> int:
         """Power-of-2 prefill length bucket — one compiled prefill per
-        bucket instead of one per distinct prompt length."""
+        bucket instead of one per distinct prompt (or chunk) length."""
         if self.run.model.family not in self._BUCKET_FAMILIES:
             return n
         return min(max(PREFILL_BUCKET_MIN, 1 << (n - 1).bit_length()),
                    self.max_seq)
 
-    def _admit(self) -> None:
-        admitted: list[tuple[Request, jax.Array]] = []
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            req = self.queue.pop(0)
-            n = len(req.prompt)
+    def _append_token(self, req: Request, tok: int, now: float) -> None:
+        req.output.append(tok)
+        req.token_times.append(now)
+        if req.first_token_time is None:
+            req.first_token_time = now
+
+    def _maybe_finish(self, slot: int) -> bool:
+        req = self.scheduler.active[slot]
+        tok = req.output[-1]
+        ended = req.eos_id is not None and tok == req.eos_id
+        full = (len(req.output) >= req.max_new_tokens
+                or self.pool.positions[slot] >= self.max_seq - 1)
+        if ended or full:
+            self.scheduler.finish(slot)
+            self.pool.release(slot)
+            return True
+        return False
+
+    def _sample_rows(self, rows: list[jax.Array],
+                     temps_list: list[float]) -> np.ndarray:
+        """Sample k <= slots logits rows in ONE device call, padded to
+        the decode path's single compiled (slots, V) shape."""
+        k = len(rows)
+        lg = jnp.stack(rows)
+        if k < self.slots:
+            lg = jnp.pad(lg, ((0, self.slots - k), (0, 0)))
+        temps = np.zeros((self.slots,), np.float32)
+        temps[:k] = temps_list
+        self.key, sub = jax.random.split(self.key)
+        return self.runner.sample(sub, lg, jnp.asarray(temps))[:k]
+
+    # -- blocking admission (pre-scheduler path; recurrent/MoE/VLM) ---------
+
+    def _admit_blocking(self) -> tuple[int, int]:
+        """One whole prefill per admitted request (admission policy is
+        the Scheduler's — same resume/byte-budget rules as the chunked
+        path).  Returns (first tokens sampled, prompt tokens prefilled)."""
+        started = self.scheduler.admit(self.pool)
+        if not started:
+            return 0, 0
+        pf_toks = 0
+        rows: list[jax.Array] = []
+        for ps in started:
+            n = len(ps.tokens)
             padded = np.zeros((1, self._bucket_len(n)), np.int32)
-            padded[0, :n] = req.prompt
+            padded[0, :n] = ps.tokens
             prompt = jnp.asarray(padded)
-            cache1 = self.model.init_cache(1, self.max_seq,
-                                           kv_quantize=self.kv_quantize)
+            cache1 = self.runner.new_stream_cache(
+                kv_quantize=self.kv_quantize)
             if self.run.model.family == "vlm":
                 batch = {"tokens": prompt,
                          "image_embeds": jnp.zeros(
@@ -211,85 +289,177 @@ class ServeEngine:
                               self.run.model.d_model), self.model.dtype)}
             else:
                 batch = {"tokens": prompt}
-            logits, cache1 = self._jit_prefill(
-                self.params, batch, cache1, jnp.asarray(n - 1, jnp.int32))
-            self.cache = self._jit_insert(self.cache, cache1,
-                                          jnp.asarray(slot, jnp.int32),
-                                          jnp.asarray(n, jnp.int32))
-            self.positions[slot] = n
-            self.active[slot] = req
-            admitted.append((req, logits[0, -1, :]))
-        if not admitted:
-            return
-        # First tokens for the whole admit round in ONE device call,
-        # same greedy/temperature mix as the decode path.  Rows are
-        # padded to ``slots`` so _sample_all keeps the decode path's
-        # single compiled (slots, V) shape across admit-round sizes.
-        k = len(admitted)
-        lg = jnp.stack([l for _, l in admitted])
-        if k < self.slots:
-            lg = jnp.pad(lg, ((0, self.slots - k), (0, 0)))
-        temps = np.zeros((self.slots,), np.float32)
-        temps[:k] = [max(r.temperature, 0.0) for r, _ in admitted]
-        self.key, sub = jax.random.split(self.key)
-        toks = np.asarray(self._jit_sample_all(sub, lg, jnp.asarray(temps)))
-        for (req, _), tok in zip(admitted, toks[:k]):
-            req.output.append(int(tok))
+            logits, cache1 = self.runner.step(
+                prompt, None, "prefill", cache=cache1, batch=batch,
+                last_pos=jnp.asarray(n - 1, jnp.int32))
+            self.pool.insert(cache1, ps.slot, n)
+            self.scheduler.activate(ps)
+            pf_toks += n
+            rows.append(logits[0, -1, :])
+        toks = self._sample_rows(rows, [max(ps.req.temperature, 0.0)
+                                        for ps in started])
+        now = time.perf_counter()
+        for ps, tok in zip(started, toks):
+            self._append_token(ps.req, int(tok), now)
+            self._maybe_finish(ps.slot)
+        return len(started), pf_toks
+
+    # -- continuous admission: chunked prefill under the token budget -------
+
+    def _prefill_chunks(self, n_live: int) -> tuple[int, int]:
+        """Spend the step's leftover token budget on prefill chunks.
+        Returns (prompt tokens prefilled, first tokens sampled)."""
+        plan = self.scheduler.chunk_plan(n_live)
+        if not plan:
+            return 0, 0
+        completed: list[PrefillStream] = []
+        pf_toks = 0
+        for ps, c in plan:
+            if ps.cache is None:
+                # full-precision staging (even over an int8 pool): chunk
+                # attention sees the exact K/V prefix, the pool
+                # quantizes once at insert -> chunked == whole, bit-exact
+                ps.cache = self.runner.new_stream_cache()
+            b = self._bucket_len(c)
+            if ps.written + b > self.max_seq:   # keep the offset write
+                b = self.max_seq - ps.written   # inside the slot
+            padded = np.zeros((1, b), np.int32)
+            padded[0, :c] = ps.tokens[ps.written:ps.written + c]
+            # prompt_len = the chunk's real end: bucket-pad rows beyond
+            # it are zeroed at the K/V write (attention masks them), so
+            # correctness never depends on a later chunk overwriting
+            # them.  On the final chunk this is the prompt length, which
+            # also places the logits gather at the last real token.
+            eff_len = min(len(ps.tokens), ps.written + c)
+            logits, ps.cache = self.runner.step(
+                jnp.asarray(padded), None, "prefill_chunk", cache=ps.cache,
+                start_pos=jnp.asarray(ps.written, jnp.int32),
+                prompt_len=jnp.asarray(eff_len, jnp.int32))
+            ps.written += c
+            pf_toks += c
+            ps.last_logits = logits[0, 0, :]
+            if ps.remaining == 0:
+                completed.append(ps)
+        return pf_toks, self._finish_prefills(completed)
+
+    def _finish_prefills(self, completed: list[PrefillStream]) -> int:
+        if not completed:
+            return 0
+        for ps in completed:
+            self.pool.insert(ps.cache, ps.slot, len(ps.tokens),
+                             from_full_precision=True)
+            self.scheduler.activate(ps)
+            ps.cache = None
+        toks = self._sample_rows([ps.last_logits for ps in completed],
+                                 [max(ps.req.temperature, 0.0)
+                                  for ps in completed])
+        now = time.perf_counter()
+        for ps, tok in zip(completed, toks):
+            self._append_token(ps.req, int(tok), now)
+            self._maybe_finish(ps.slot)
+        return len(completed)
 
     # -- main loop ----------------------------------------------------------
 
-    def step(self) -> int:
-        """Admit + one decode step for all active slots.  Returns the
-        number of tokens produced."""
-        self._admit()
-        live = [i for i, r in enumerate(self.active) if r is not None]
-        if not live:
-            return 0
-        t0 = time.perf_counter()
+    def _decode_live(self, live: list[int]) -> int:
+        pool = self.pool
         tokens = np.zeros((self.slots, 1), np.int32)
         for i in live:
             tokens[i, 0] = self.active[i].output[-1]
-        logits, self.cache = self._jit_decode(
-            self.params, jnp.asarray(tokens),
-            jnp.asarray(self.positions), self.cache)
-        produced = 0
+        logits, pool.cache = self.runner.step(
+            jnp.asarray(tokens), jnp.asarray(pool.positions), "decode",
+            cache=pool.cache)
         lg = logits[:, 0, :]
         temps = np.zeros((self.slots,), np.float32)
         for i in live:
             temps[i] = max(self.active[i].temperature, 0.0)
         self.key, sub = jax.random.split(self.key)
-        toks = np.asarray(self._jit_sample_all(sub, lg, jnp.asarray(temps)))
+        toks = self.runner.sample(sub, lg, jnp.asarray(temps))
+        now = time.perf_counter()
+        produced = 0
         for i in live:
-            req = self.active[i]
-            tok = int(toks[i])
-            req.output.append(tok)
+            self._append_token(self.active[i], int(toks[i]), now)
+            pool.grow(i)
             produced += 1
-            self.positions[i] += 1
-            ended = (req.eos_id is not None and tok == req.eos_id)
-            full = len(req.output) >= req.max_new_tokens \
-                or self.positions[i] >= self.max_seq - 1
-            if ended or full:
-                req.done = True
-                self.finished.append(req)
-                self.active[i] = None
-        self.stats.append({"live": len(live), "tokens": produced,
-                           "seconds": time.perf_counter() - t0})
+            self._maybe_finish(i)
         return produced
+
+    def step(self) -> int:
+        """One scheduler step: preempt under KV pressure, admit, decode
+        every live stream, then spend leftover budget on prefill
+        chunks.  Returns tokens produced (decode + first tokens)."""
+        sched, pool = self.scheduler, self.pool
+        for slot in pool.pressure_victims():
+            sched.preempt(slot)
+            pool.release(slot)
+        if self.admission == "blocking":
+            t0 = time.perf_counter()
+            first, pf_toks = self._admit_blocking()
+            admit_s = time.perf_counter() - t0
+            live = sched.live_slots()
+            produced, decode_s = 0, 0.0
+            if live:
+                t0 = time.perf_counter()
+                produced = self._decode_live(live)
+                decode_s = time.perf_counter() - t0
+            if live or first:
+                self.stats.append({"live": len(live), "tokens": produced,
+                                   "seconds": decode_s,
+                                   "prefill_tokens": pf_toks,
+                                   "prefill_seconds": 0.0,
+                                   "first_tokens": first,
+                                   "admit_seconds": admit_s})
+            return produced + first
+        sched.admit(pool)
+        live = sched.live_slots()
+        t0 = time.perf_counter()
+        produced = self._decode_live(live) if live else 0
+        decode_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        pf_toks, first = self._prefill_chunks(len(live))
+        prefill_s = time.perf_counter() - t0
+        if live or pf_toks or first:
+            self.stats.append({"live": len(live), "tokens": produced,
+                               "seconds": decode_s,
+                               "prefill_tokens": pf_toks,
+                               "prefill_seconds": prefill_s,
+                               "first_tokens": first,
+                               "admit_seconds": 0.0})
+        return produced + first
 
     def run_until_done(self, max_steps: int = 10_000) -> list[Request]:
         """Drive the engine until queue + slots drain; returns the
         requests that completed during this call (in completion order)."""
         start = len(self.finished)
         for _ in range(max_steps):
-            if not self.queue and all(r is None for r in self.active):
+            if not self.scheduler.busy():
                 break
             self.step()
         return self.finished[start:]
 
     def throughput(self) -> dict:
-        if not self.stats:
+        """Aggregate serving stats over the (bounded) stats window.
+        Unlike the pre-split engine, the denominator includes the time
+        spent admitting/prefilling, not just decode steps — and TTFT is
+        reported from per-request timestamps."""
+        stats = list(self.stats)
+        if not stats:
             return {"tokens_per_s": 0.0, "steps": 0}
-        tok = sum(s["tokens"] for s in self.stats)
-        sec = sum(s["seconds"] for s in self.stats)
-        return {"tokens_per_s": tok / max(sec, 1e-9), "steps": len(self.stats),
-                "mean_batch": tok / len(self.stats)}
+        dec = sum(s["tokens"] for s in stats)
+        first = sum(s.get("first_tokens", 0) for s in stats)
+        dec_s = sum(s["seconds"] for s in stats)
+        pf_s = sum(s.get("prefill_seconds", 0.0) for s in stats)
+        ad_s = sum(s.get("admit_seconds", 0.0) for s in stats)
+        out = {"tokens_per_s": (dec + first) / max(dec_s + pf_s + ad_s,
+                                                   1e-9),
+               "steps": len(stats),
+               "mean_batch": dec / len(stats),
+               "decode_seconds": dec_s,
+               "prefill_seconds": pf_s + ad_s,
+               "prefill_tokens": sum(s.get("prefill_tokens", 0)
+                                     for s in stats),
+               "preemptions": self.scheduler.preemptions}
+        ttfts = [r.ttft for r in self.finished if r.ttft is not None]
+        if ttfts:
+            out["ttft_mean_s"] = sum(ttfts) / len(ttfts)
+        return out

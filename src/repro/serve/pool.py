@@ -1,0 +1,202 @@
+"""KVPoolManager: slot + KV-byte accounting over the serve cache pool.
+
+The pool is the model's stacked cache pytree laid out
+``(..., B_slots, S_max, ...)`` — one batch slot per in-flight stream,
+full-width or int8 (:mod:`repro.quant.kv`) K/V.  This manager owns the
+state side of the serve stack:
+
+* the cache pytree itself plus the per-slot write positions,
+* slot allocation with admission *tickets* (monotone age — KV-pressure
+  preemption evicts the youngest stream first),
+* byte accounting: ``bytes_per_token`` is derived from the pool spec's
+  per-position KV leaves, ``used_bytes()`` weights it by each occupied
+  slot's logical occupancy, an optional ``byte_budget`` gates admission
+  (:meth:`can_admit`) and drives preemption (:meth:`pressure_victims`),
+  and ``kv_bytes_per_step`` is the roofline's full-pool decode read,
+* the slot scatter (:meth:`insert`): a batch=1 stream cache lands in
+  its slot in one jitted donate-argnums call, masking the right-padded
+  prompt tail — and quantizing a full-precision chunked-prefill staging
+  cache into an int8 pool on the fly (``from_full_precision=True``).
+
+Compute never lives here (that is :class:`repro.serve.runner.
+ModelRunner`); policy never lives here (that is
+:class:`repro.serve.scheduler.Scheduler`).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant import kv as kvq
+
+PyTree = Any
+
+#: cache leaf keys that stream from HBM every decode step (the runtime
+#: twin of weight bytes in the roofline): K/V pools, int8 pools + their
+#: scale rows, MLA latents.  SSM/conv state is recurrent, not a stream.
+KV_STEP_KEYS = ("k", "v", "k_q", "v_q", "k_scale", "v_scale",
+                "ckv", "krope")
+#: subset with a per-position sequence axis — the leaves whose bytes
+#: scale with occupancy (scale rows are per-slot constants; VLM image
+#: KV is per-image, not per generated token).
+KV_SEQ_KEYS = ("k", "v", "k_q", "v_q", "ckv", "krope")
+
+
+class KVPoolManager:
+    """Slot/byte owner for one engine's KV pool."""
+
+    # Sequence-axis position (from the right) of cache leaves that hold
+    # per-position state, by leaf key: K/V pools are (..., S, KH, hd),
+    # MLA latents are (..., S, r).  Everything else (scales, SSM states,
+    # cross-attn image KV) has no prompt-length axis to mask.
+    _SEQ_AXIS = {"k": -3, "v": -3, "k_q": -3, "v_q": -3,
+                 "ckv": -2, "krope": -2}
+
+    def __init__(self, model, slots: int, max_seq: int, *,
+                 kv_quantize: str | None = None,
+                 byte_budget: int | None = None):
+        self.model = model
+        self.slots = slots
+        self.max_seq = max_seq
+        self.kv_quantize = kv_quantize
+        self.byte_budget = byte_budget
+        self.cache = model.init_cache(slots, max_seq,
+                                      kv_quantize=kv_quantize)
+        self.positions = np.zeros((slots,), np.int32)   # next write pos
+        self.lengths = np.zeros((slots,), np.int64)     # logical KV tokens
+        self.tickets = np.full((slots,), -1, np.int64)  # admission age; -1 free
+        self._next_ticket = 0
+
+        kv_b = seq_b = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                self.cache)[0]:
+            keys = [str(getattr(p, "key", p)) for p in path]
+            n = leaf.size * leaf.dtype.itemsize
+            if keys[-1] in KV_STEP_KEYS:
+                kv_b += n
+            if keys[-1] in KV_SEQ_KEYS and "cross_kv" not in keys:
+                seq_b += n
+        #: HBM bytes the whole pool streams per decode step (masked,
+        #: not skipped — every slot's full S_max is read).
+        self.kv_bytes_per_step = kv_b
+        #: per-position KV bytes of ONE stream across all layers
+        self.bytes_per_token = seq_b / (slots * max_seq)
+
+        self._jit_insert = jax.jit(self._insert_slot, donate_argnums=(0,))
+        self._jit_insert_q = jax.jit(self._insert_slot_quantizing,
+                                     donate_argnums=(0,))
+
+    # -- slot bookkeeping ---------------------------------------------------
+
+    def free_slots(self) -> list[int]:
+        return [i for i in range(self.slots) if self.tickets[i] < 0]
+
+    def occupied_slots(self) -> list[int]:
+        return [i for i in range(self.slots) if self.tickets[i] >= 0]
+
+    def allocate(self, slot: int, length: int) -> None:
+        """Reserve ``slot`` for a stream of ``length`` prompt tokens.
+        The full prompt's bytes are reserved up front, so admission
+        cannot overshoot the budget mid-prefill."""
+        assert self.tickets[slot] < 0, slot
+        self.tickets[slot] = self._next_ticket
+        self._next_ticket += 1
+        self.lengths[slot] = length
+        self.positions[slot] = 0
+
+    def grow(self, slot: int, n: int = 1) -> None:
+        """Account ``n`` decoded tokens of KV growth for ``slot``."""
+        self.positions[slot] += n
+        self.lengths[slot] += n
+
+    def release(self, slot: int) -> None:
+        self.tickets[slot] = -1
+        self.lengths[slot] = 0
+        self.positions[slot] = 0
+
+    # -- byte budget --------------------------------------------------------
+
+    def used_bytes(self) -> int:
+        return int(self.lengths.sum() * self.bytes_per_token)
+
+    def can_admit(self, prompt_len: int) -> bool:
+        """Admission gate: does a ``prompt_len``-token stream fit the
+        byte budget?  An empty pool always admits (otherwise a single
+        over-budget prompt could deadlock the queue)."""
+        if self.byte_budget is None or self.bytes_per_token == 0:
+            return True
+        if not self.occupied_slots():
+            return True
+        projected = self.used_bytes() + prompt_len * self.bytes_per_token
+        return projected <= self.byte_budget
+
+    def pressure_victims(self) -> list[int]:
+        """Slots to preempt, youngest ticket first, until the pool is
+        back under its byte budget.  At least one stream always
+        survives — pressure sheds load, it never empties the pool."""
+        if self.byte_budget is None or self.bytes_per_token == 0:
+            return []
+        occ = sorted(self.occupied_slots(), key=lambda s: self.tickets[s])
+        victims: list[int] = []
+        used = self.used_bytes()
+        while used > self.byte_budget and len(occ) > 1:
+            s = occ.pop()                      # youngest admission
+            victims.append(s)
+            used -= int(self.lengths[s] * self.bytes_per_token)
+        return victims
+
+    # -- slot scatter -------------------------------------------------------
+
+    @classmethod
+    def _insert_slot(cls, cache: PyTree, cache1: PyTree, slot: jax.Array,
+                     length: jax.Array) -> PyTree:
+        """Scatter a batch=1 cache into slot ``slot`` of the pool.
+
+        Batch dim = the dim where pool and single differ (single == 1).
+        ``length`` is the prompt's real token count: bucketed prefill
+        right-pads the prompt, so positions ``>= length`` of the
+        per-position leaves are zeroed before the scatter (int8 pools
+        then dequantize the tail to exact zero; decode overwrites each
+        position before it ever becomes attendable either way).
+        """
+        def leaf(path, pool, one):
+            keys = [str(getattr(p, "key", p)) for p in path]
+            ax = None if "cross_kv" in keys else cls._SEQ_AXIS.get(keys[-1])
+            if ax is not None:
+                idx = jnp.arange(one.shape[ax])
+                mask = (idx < length).reshape(idx.shape + (1,) * (-ax - 1))
+                one = jnp.where(mask, one, jnp.zeros_like(one))
+            diff = [i for i, (a, b) in
+                    enumerate(zip(pool.shape, one.shape)) if a != b]
+            if not diff:                 # slots == 1: whole-pool replace
+                return one.astype(pool.dtype)
+            start = [0] * pool.ndim
+            start[diff[0]] = slot
+            return jax.lax.dynamic_update_slice(
+                pool, one.astype(pool.dtype), tuple(start))
+        return jax.tree_util.tree_map_with_path(leaf, cache, cache1)
+
+    @classmethod
+    def _insert_slot_quantizing(cls, cache: PyTree, cache1: PyTree,
+                                slot: jax.Array, length: jax.Array) -> PyTree:
+        """Insert a *full-precision* staging cache into an int8 pool:
+        quantize (one-shot scales over the real prompt, pad masked) and
+        scatter in the same compiled call — the pool never sees a
+        full-width copy in between."""
+        return cls._insert_slot(cache, kvq.quantize_kv_tree(cache1, length),
+                                slot, length)
+
+    def insert(self, cache1: PyTree, slot: int, length: int, *,
+               from_full_precision: bool = False) -> None:
+        """Land a finished stream cache in its pool slot (one jitted
+        call; the old pool buffer is donated)."""
+        fn = (self._jit_insert_q
+              if (self.kv_quantize and from_full_precision)
+              else self._jit_insert)
+        self.cache = fn(self.cache, cache1, jnp.asarray(slot, jnp.int32),
+                        jnp.asarray(length, jnp.int32))
+        self.positions[slot] = length
+        self.lengths[slot] = length

@@ -1,0 +1,104 @@
+"""ModelRunner: the serve stack's single compute seam.
+
+Owns the params and every jitted step function (whole prefill, chunked
+prefill, decode, batched sampling) and exposes ONE entry —
+:meth:`step` ``(tokens, positions, seg_kind, ...)`` — so the scheduler
+and engine never touch ``jax.jit`` or the model API directly.  Segment
+kinds:
+
+* ``"decode"``:        tokens ``(slots, 1)``, positions ``(slots,)`` —
+                       one token for every slot against the shared pool.
+* ``"prefill_chunk"``: tokens ``(1, C)`` at sequence offset
+                       ``start_pos`` against a batch=1 stream cache
+                       (chunked continuous admission).
+* ``"prefill"``:       tokens ``(1, S)`` whole-prompt prefill
+                       (blocking admission; recurrent/MoE families).
+
+Prefill token arrays are length-bucketed by the caller, so each segment
+kind compiles once per bucket, not once per prompt length; ``start_pos``
+and ``prompt_len`` ride along as traced scalars.  The chunk entry
+donates the staging cache (in-place stream growth); the whole-pool
+decode cache is NOT donated (the engine aliases it across steps).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+SEG_KINDS = ("decode", "prefill_chunk", "prefill")
+
+
+class ModelRunner:
+    def __init__(self, model, params: PyTree, opts, *, max_seq: int):
+        self.model = model
+        self.params = params
+        self.opts = opts
+        self.max_seq = max_seq
+        mdl = model
+
+        def _prefill(params, batch, cache1, last_pos):
+            return mdl.prefill(params, batch, cache1, last_pos=last_pos,
+                               opts=opts)
+
+        def _prefill_chunk(params, batch, cache1, start_pos, prompt_len):
+            return mdl.prefill_chunk(params, batch, cache1,
+                                     start_pos=start_pos,
+                                     prompt_len=prompt_len, opts=opts)
+
+        def _decode(params, tokens, positions, cache):
+            return mdl.decode_step(params, tokens, positions, cache,
+                                   opts=opts)
+
+        def _sample_all(key, logits, temps):
+            """One device call samples every slot: greedy argmax rows and
+            temperature rows resolve together; the host indexes the
+            result (no per-slot round-trips on the decode hot path)."""
+            greedy = jnp.argmax(logits, axis=-1)
+            safe = jnp.where(temps > 0, temps, 1.0)
+            sampled = jax.random.categorical(key, logits / safe[:, None],
+                                             axis=-1)
+            return jnp.where(temps > 0, sampled, greedy)
+
+        self.jit_prefill = jax.jit(_prefill)
+        self.jit_prefill_chunk = jax.jit(_prefill_chunk,
+                                         donate_argnums=(2,))
+        self.jit_decode = jax.jit(_decode)
+        self.jit_sample_all = jax.jit(_sample_all)
+
+    def new_stream_cache(self, kv_quantize: str | None = None) -> PyTree:
+        """A fresh batch=1 cache for one stream.  Chunked prefill stages
+        at full precision (``kv_quantize=None``) regardless of the pool
+        dtype — chunk attention then runs over the exact K/V prefix, so
+        chunked greedy == whole-prefill greedy bit-for-bit, and the pool
+        quantizes once at slot insert."""
+        return self.model.init_cache(1, self.max_seq,
+                                     kv_quantize=kv_quantize)
+
+    def step(self, tokens: jax.Array, positions: jax.Array | None,
+             seg_kind: str, *, cache: PyTree,
+             start_pos: jax.Array | None = None,
+             prompt_len: jax.Array | None = None,
+             last_pos: jax.Array | None = None,
+             batch: dict | None = None) -> tuple[jax.Array, PyTree]:
+        """Run one compiled segment.  Returns ``(logits, new_cache)``."""
+        if seg_kind == "decode":
+            return self.jit_decode(self.params, tokens, positions, cache)
+        if seg_kind == "prefill_chunk":
+            return self.jit_prefill_chunk(self.params, {"tokens": tokens},
+                                          cache, start_pos, prompt_len)
+        if seg_kind == "prefill":
+            return self.jit_prefill(self.params,
+                                    batch or {"tokens": tokens},
+                                    cache, last_pos)
+        raise ValueError(
+            f"unknown seg_kind {seg_kind!r} (want one of {SEG_KINDS})")
+
+    def sample(self, key: jax.Array, logits: jax.Array,
+               temps: jax.Array) -> np.ndarray:
+        """Batched greedy/temperature sampling; host-side token array."""
+        return np.asarray(self.jit_sample_all(key, logits, temps))

@@ -1,0 +1,176 @@
+"""Scheduler: token-budget continuous batching (decode-first policy).
+
+One engine step is one *step plan* filled against ``step_token_budget``:
+
+1. **Preempt** — if the :class:`~repro.serve.pool.KVPoolManager` is
+   over its byte budget, the youngest stream(s) are evicted.  An
+   evicted request re-enters the waiting queue (at the front) holding
+   its generated prefix: on readmission it prefills
+   ``prompt + output`` and keeps decoding — bit-exact under greedy
+   sampling because chunked prefill == whole prefill == decode.
+2. **Admit** — waiting requests (FIFO ``deque``) take free slots while
+   the pool's byte budget allows.  Admission only *starts* a prefill
+   stream; there is no blocking whole-prompt prefill on this path.
+3. **Decode first** — every live stream decodes one token per step,
+   unconditionally.  A long prompt can never head-of-line-block live
+   decode streams.
+4. **Prefill with the remainder** — leftover budget
+   (``step_token_budget - live``) is spent on chunked-prefill segments
+   of at most ``prefill_chunk`` tokens, oldest prefilling stream
+   first.  Chunk *compute* shapes are power-of-2 bucketed by the
+   engine (compile once per bucket); the budget counts real tokens.
+
+If the budget is smaller than the live batch, decode still runs in
+full (decode-first is strict) and prefill waits; with no live streams
+at least one bucket of prefill always proceeds, so the queue can never
+deadlock.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+PyTree = Any
+
+#: admission pads prompts (and prefill chunks) up to at least this
+#: power-of-2 length bucket
+PREFILL_BUCKET_MIN = 8
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    eos_id: int | None = None
+    # filled by the engine:
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    # timing / lifecycle bookkeeping (engine-filled):
+    submit_time: float | None = None
+    first_token_time: float | None = None
+    token_times: list[float] = dataclasses.field(default_factory=list)
+    preemptions: int = 0
+
+    @property
+    def ttft(self) -> float | None:
+        """Time-to-first-token (seconds), once both ends are stamped."""
+        if self.submit_time is None or self.first_token_time is None:
+            return None
+        return self.first_token_time - self.submit_time
+
+
+@dataclasses.dataclass
+class PrefillStream:
+    """An admitted request whose prompt is being prefilled in chunks."""
+    req: Request
+    slot: int
+    tokens: list[int]            # prompt (+ generated prefix if resumed)
+    written: int = 0             # real prompt tokens already processed
+    cache: PyTree = None         # full-precision staging cache (lazy)
+    last_logits: Any = None      # (V,) logits at the last real row seen
+
+    @property
+    def remaining(self) -> int:
+        return len(self.tokens) - self.written
+
+
+class Scheduler:
+    """Request lifecycle + per-step segment planning."""
+
+    def __init__(self, slots: int, *, prefill_chunk: int,
+                 step_token_budget: int):
+        self.slots = slots
+        self.prefill_chunk = max(1, prefill_chunk)
+        self.step_token_budget = max(1, step_token_budget)
+        self.waiting: deque[Request] = deque()
+        self.prefilling: list[PrefillStream] = []
+        self.active: list[Request | None] = [None] * slots
+        self.finished: list[Request] = []
+        self.preemptions = 0
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def busy(self) -> bool:
+        return bool(self.waiting or self.prefilling
+                    or any(r is not None for r in self.active))
+
+    def live_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.active) if r is not None]
+
+    def admit(self, pool) -> list[PrefillStream]:
+        """Move waiting requests into free slots while the byte budget
+        allows (FIFO — the head blocks rather than being skipped)."""
+        started: list[PrefillStream] = []
+        for slot in pool.free_slots():
+            if not self.waiting:
+                break
+            req = self.waiting[0]
+            # a preempted request resumes by re-prefilling its prompt
+            # plus everything it already generated
+            toks = list(req.prompt) + list(req.output)
+            if not pool.can_admit(len(toks)):
+                break
+            self.waiting.popleft()
+            pool.allocate(slot, len(toks))
+            ps = PrefillStream(req, slot, toks)
+            self.prefilling.append(ps)
+            started.append(ps)
+        return started
+
+    def activate(self, ps: PrefillStream) -> None:
+        self.prefilling.remove(ps)
+        self.active[ps.slot] = ps.req
+
+    def finish(self, slot: int) -> Request:
+        req = self.active[slot]
+        req.done = True
+        self.finished.append(req)
+        self.active[slot] = None
+        return req
+
+    def preempt(self, slot: int) -> Request:
+        """Evict the stream in ``slot`` (decode-live or mid-prefill) and
+        requeue it at the queue head with its generated prefix."""
+        req = self.active[slot]
+        if req is not None:
+            self.active[slot] = None
+        else:
+            ps = next(p for p in self.prefilling if p.slot == slot)
+            self.prefilling.remove(ps)
+            req = ps.req
+        req.preemptions += 1
+        self.preemptions += 1
+        self.waiting.appendleft(req)
+        return req
+
+    # -- per-step planning --------------------------------------------------
+
+    def prefill_quota(self, n_live: int) -> int:
+        """Real prefill tokens this step may spend: whatever the budget
+        leaves after decode-first, but never zero when nothing is
+        decoding (guaranteed progress — the queue cannot stall)."""
+        quota = self.step_token_budget - n_live
+        if n_live == 0:
+            quota = max(quota, 1)
+        return max(quota, 0)
+
+    def chunk_plan(self, n_live: int) -> list[tuple[PrefillStream, int]]:
+        """(stream, real-token chunk length) segments for this step,
+        oldest prefilling stream first, until the quota is spent."""
+        quota = self.prefill_quota(n_live)
+        plan: list[tuple[PrefillStream, int]] = []
+        for ps in self.prefilling:
+            if quota <= 0:
+                break
+            c = min(self.prefill_chunk, quota, ps.remaining)
+            if c <= 0:
+                continue
+            plan.append((ps, c))
+            quota -= c
+        return plan

@@ -1,0 +1,462 @@
+"""Scheduler / KVPoolManager / ModelRunner seam: chunked prefill,
+token budgets, KV-pressure preemption, and engine stats.
+
+The load-bearing invariants:
+
+* chunked-prefill greedy token streams == whole-prefill streams,
+  bit-exact, for BOTH f32 and int8 KV pools (the scheduler stages
+  in-flight prompts at full precision and quantizes once at insert);
+* a mixed prefill+decode step never spends more than
+  ``step_token_budget`` real tokens (decode-first);
+* a long prompt queued behind live streams never stalls their decode;
+* preemption + requeue round-trips deterministically under greedy.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import LRDConfig, ModelConfig, ParallelConfig, \
+    RunConfig
+from repro.layers import attention as attn
+from repro.layers.param import ParamBuilder
+from repro.models.api import get_model
+from repro.quant import kv as kvq
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.pool import KVPoolManager
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # f32 model dtype: the equality tests compare full token streams,
+    # so near-tied bf16 argmaxes must not inject flakiness.
+    cfg = dataclasses.replace(registry.get("llama3.2-1b").smoke,
+                              dtype="float32")
+    run = RunConfig(model=cfg, parallel=ParallelConfig())
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    return run, m, params
+
+
+def _engine(run, params, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_seq", 64)
+    return ServeEngine(run, params, **kw)
+
+
+def _serve(eng, prompts, n=6):
+    reqs = [Request(uid=i, prompt=list(p), max_new_tokens=n)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.add_request(r)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    return [r.output for r in reqs]
+
+
+LONG = tuple((i * 7 + 3) % 50 + 1 for i in range(21))   # 3 chunks of 8
+
+
+# ---------------------------------------------------------------------------
+# kv_write_chunk / quantize_kv_tree units
+# ---------------------------------------------------------------------------
+
+class TestKVWriteChunk:
+    def _mk(self, rng, b=2, s=16, kh=2, d=8, c=5):
+        cache = jnp.zeros((b, s, kh, d), jnp.int8)
+        scale = jnp.zeros((b, kh, d), jnp.float32)
+        new = jax.random.normal(rng, (b, c, kh, d), jnp.float32)
+        return cache, scale, new
+
+    def test_final_scale_matches_token_loop(self, rng):
+        cache, scale, new = self._mk(rng)
+        cq, sc = kvq.kv_write_chunk(cache, scale, new, jnp.asarray(3))
+        ct, st = cache, scale
+        for t in range(new.shape[1]):
+            ct, st = kvq.kv_write_token(ct, st, new[:, t],
+                                        jnp.full((2,), 3 + t, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(sc), np.asarray(st))
+
+    def test_warm_scale_chunk_equals_token_loop_exactly(self, rng):
+        """When no channel's running max grows, the chunk write and the
+        per-token loop are bit-identical (no requant rounding)."""
+        cache, _, new = self._mk(rng)
+        warm = jnp.full((2, 2, 8), 10.0, jnp.float32)   # >> |new|/127
+        cq, sc = kvq.kv_write_chunk(cache, warm, new, jnp.asarray(3))
+        ct, st = cache, warm
+        for t in range(new.shape[1]):
+            ct, st = kvq.kv_write_token(ct, st, new[:, t],
+                                        jnp.full((2,), 3 + t, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(cq), np.asarray(ct))
+        np.testing.assert_array_equal(np.asarray(sc), np.asarray(st))
+
+    def test_roundtrip_error_bounded(self, rng):
+        cache, scale, new = self._mk(rng)
+        cq, sc = kvq.kv_write_chunk(cache, scale, new, jnp.asarray(0))
+        deq = kvq.dequantize_kv(cq, sc)[:, :new.shape[1]]
+        err = jnp.abs(deq - new)
+        bound = jnp.broadcast_to(sc[:, None] * 0.51, err.shape)
+        assert bool(jnp.all(err <= bound + 1e-7))
+
+    def test_history_requant_when_scale_grows(self, rng):
+        cache, scale, new = self._mk(rng)
+        cq, sc = kvq.kv_write_chunk(cache, scale, new * 0.1, jnp.asarray(0))
+        # a much louder chunk forces the history to requantize
+        cq2, sc2 = kvq.kv_write_chunk(cq, sc, new * 10.0, jnp.asarray(5))
+        assert bool(jnp.all(sc2 >= sc))
+        deq = kvq.dequantize_kv(cq2, sc2)[:, :5]
+        err = jnp.abs(deq - new[:, :5] * 0.1)
+        bound = jnp.broadcast_to(sc2[:, None] * 1.01, err.shape)
+        assert bool(jnp.all(err <= bound + 1e-7))
+
+
+class TestQuantizeKVTree:
+    def test_matches_prefill_quantization(self, rng):
+        """One-shot stream-cache quantization == quantize-on-insert:
+        same values AND scales, pad tail masked to exact zero."""
+        k = jax.random.normal(rng, (1, 8, 2, 4), jnp.float32)
+        v = jax.random.normal(jax.random.fold_in(rng, 1), (1, 8, 2, 4),
+                              jnp.float32)
+        plen = jnp.asarray(5)
+        pm = (jnp.arange(8) < plen)[None, :, None, None]
+        km, vm = jnp.where(pm, k, 0.0), jnp.where(pm, v, 0.0)
+        k_q, k_scale = kvq.quantize_kv_prefill(km)
+        got = kvq.quantize_kv_tree({"deep": {"k": k, "v": v}}, plen)["deep"]
+        np.testing.assert_array_equal(np.asarray(got["k_q"]),
+                                      np.asarray(k_q))
+        np.testing.assert_array_equal(np.asarray(got["k_scale"]),
+                                      np.asarray(k_scale))
+        assert int(jnp.abs(got["v_q"][:, 5:].astype(jnp.int32)).max()) == 0
+
+    def test_stacked_layer_axis(self, rng):
+        k = jax.random.normal(rng, (3, 1, 8, 2, 4), jnp.float32)
+        got = kvq.quantize_kv_tree({"k": k, "v": k})
+        assert got["k_q"].shape == (3, 1, 8, 2, 4)
+        assert got["k_scale"].shape == (3, 1, 2, 4)
+        deq = got["k_q"].astype(jnp.float32) \
+            * jnp.expand_dims(got["k_scale"], -3)
+        assert float(jnp.abs(deq - k).max()) < float(
+            got["k_scale"].max()) * 0.51 + 1e-7
+
+
+# ---------------------------------------------------------------------------
+# Attention-level chunk writes
+# ---------------------------------------------------------------------------
+
+class TestAttentionChunked:
+    def _gqa(self, rng, d_model=32, h=4, kh=2, hd=8):
+        pb = ParamBuilder(rng, jnp.float32)
+        attn.init_attention(pb, "a", d_model, h, kh, hd)
+        kw = dict(num_heads=h, num_kv_heads=kh, head_dim=hd, rope_theta=1e4)
+        return pb.params["a"], kw
+
+    def test_chunked_equals_whole_f32(self, rng):
+        p, kw = self._gqa(rng)
+        s, s_max = 12, 32
+        x = jax.random.normal(jax.random.fold_in(rng, 2), (1, s, 32),
+                              jnp.float32) * 0.3
+        whole_cache = attn.init_kv_cache(1, s_max, 2, 8, jnp.float32)
+        pos = jnp.arange(s)[None, :]
+        o_whole, c_whole = attn.apply_attention(p, x, positions=pos,
+                                                cache=whole_cache, **kw)
+        cache = attn.init_kv_cache(1, s_max, 2, 8, jnp.float32)
+        outs = []
+        for st in (0, 4, 8):
+            xc = x[:, st:st + 4]
+            o, cache = attn.apply_attention(
+                p, xc, positions=st + jnp.arange(4)[None, :], cache=cache,
+                start_pos=jnp.asarray(st), prompt_len=jnp.asarray(s), **kw)
+            outs.append(o)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                                   np.asarray(o_whole), atol=1e-6,
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(cache["k"][:, :s]),
+                                   np.asarray(c_whole["k"][:, :s]),
+                                   atol=1e-6, rtol=1e-6)
+
+    def test_chunked_quantized_close_to_f32(self, rng):
+        """The direct-to-int8 chunk branch (kv_write_chunk + dequant
+        attention) tracks the f32 chunk path within quant error."""
+        p, kw = self._gqa(rng)
+        s, s_max = 8, 16
+        x = jax.random.normal(jax.random.fold_in(rng, 3), (1, s, 32),
+                              jnp.float32) * 0.3
+        outs = {}
+        for mode in (None, "int8"):
+            cache = attn.init_kv_cache(1, s_max, 2, 8, jnp.float32, mode)
+            chunks = []
+            for st in (0, 4):
+                o, cache = attn.apply_attention(
+                    p, x[:, st:st + 4],
+                    positions=st + jnp.arange(4)[None, :], cache=cache,
+                    start_pos=jnp.asarray(st), prompt_len=jnp.asarray(s),
+                    **kw)
+                chunks.append(o)
+            outs[mode] = jnp.concatenate(chunks, 1)
+        assert outs["int8"].dtype == outs[None].dtype
+        assert float(jnp.abs(outs["int8"] - outs[None]).max()) < 5e-2
+
+    def test_padded_chunk_rows_masked_at_write(self, rng):
+        """A bucket-padded chunk whose pad rows sit MID-prompt must zero
+        them at the K/V write — correctness cannot depend on the next
+        chunk's bucket overwriting them."""
+        p, kw = self._gqa(rng)
+        s, s_max = 12, 32
+        x = jax.random.normal(jax.random.fold_in(rng, 7), (1, s, 32),
+                              jnp.float32) * 0.3
+        garbage = jnp.full((1, 3, 32), 7.7, jnp.float32)
+        whole = attn.init_kv_cache(1, s_max, 2, 8, jnp.float32)
+        _, c_whole = attn.apply_attention(
+            p, x, positions=jnp.arange(s)[None, :], cache=whole, **kw)
+        cache = attn.init_kv_cache(1, s_max, 2, 8, jnp.float32)
+        # chunk 1: rows 0..4 real, rows 5..7 bucket pad (prompt_len=5
+        # marks the chunk's real END, not the prompt's)
+        _, cache = attn.apply_attention(
+            p, jnp.concatenate([x[:, :5], garbage], 1),
+            positions=jnp.arange(8)[None, :], cache=cache,
+            start_pos=jnp.asarray(0), prompt_len=jnp.asarray(5), **kw)
+        # pad rows landed as zeros, not garbage K/V
+        assert float(jnp.abs(cache["k"][:, 5:8]).max()) == 0.0
+        _, cache = attn.apply_attention(
+            p, x[:, 5:], positions=5 + jnp.arange(7)[None, :], cache=cache,
+            start_pos=jnp.asarray(5), prompt_len=jnp.asarray(s), **kw)
+        np.testing.assert_allclose(np.asarray(cache["k"][:, :s]),
+                                   np.asarray(c_whole["k"][:, :s]),
+                                   atol=1e-6, rtol=1e-6)
+
+    def test_mla_chunked_equals_whole(self, rng):
+        cfg = ModelConfig(name="mla-tiny", family="moe", mla=True,
+                          d_model=32, num_heads=2, q_lora_rank=0,
+                          kv_lora_rank=16, qk_rope_dim=8, qk_nope_dim=16,
+                          v_head_dim=16, vocab_size=64, dtype="float32")
+        pb = ParamBuilder(rng, jnp.float32)
+        attn.init_mla(pb, "mla", cfg)
+        p = pb.params["mla"]
+        s, s_max = 8, 16
+        x = jax.random.normal(jax.random.fold_in(rng, 4), (1, s, 32),
+                              jnp.float32) * 0.3
+        pos = jnp.arange(s)[None, :]
+        o_whole, c_whole = attn.apply_mla(
+            p, x, cfg, positions=pos,
+            cache=attn.init_mla_cache(1, s_max, cfg, jnp.float32))
+        cache = attn.init_mla_cache(1, s_max, cfg, jnp.float32)
+        outs = []
+        for st in (0, 4):
+            o, cache = attn.apply_mla(
+                p, x[:, st:st + 4], cfg,
+                positions=st + jnp.arange(4)[None, :], cache=cache,
+                start_pos=jnp.asarray(st))
+            outs.append(o)
+        got = jnp.concatenate(outs, 1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(o_whole),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(cache["ckv"][:, :s]),
+                                      np.asarray(c_whole["ckv"][:, :s]))
+
+
+# ---------------------------------------------------------------------------
+# Engine: chunked == whole, budgets, head-of-line, preemption
+# ---------------------------------------------------------------------------
+
+class TestChunkedEqualsWhole:
+    @pytest.mark.parametrize("kvq_mode", [None, "int8"])
+    def test_long_prompt_exact(self, setup, kvq_mode):
+        run, m, params = setup
+        eng_b = _engine(run, params, admission="blocking",
+                        kv_quantize=kvq_mode)
+        out_b = _serve(eng_b, [LONG, (4, 5, 6)])
+        eng_c = _engine(run, params, admission="continuous",
+                        prefill_chunk=8, kv_quantize=kvq_mode)
+        out_c = _serve(eng_c, [LONG, (4, 5, 6)])
+        assert out_b == out_c
+        # chunking actually happened: 21-token prompt, 8-token chunks
+        assert max(s["prefill_tokens"] for s in eng_c.stats) <= 8 + 3
+
+    def test_matches_full_forward_reference(self, setup):
+        run, m, params = setup
+        eng = _engine(run, params, prefill_chunk=8)
+        (out,) = _serve(eng, [LONG], n=5)
+        toks = list(LONG)
+        for _ in range(5):
+            x, _ = m.forward(params, {"tokens": jnp.asarray([toks])})
+            logits = m.logits(params, x)
+            toks.append(int(jnp.argmax(logits[0, -1])))
+        assert out == toks[len(LONG):]
+
+    def test_int8_pool_stays_int8(self, setup):
+        run, m, params = setup
+        eng = _engine(run, params, prefill_chunk=8, kv_quantize="int8")
+        _serve(eng, [LONG], n=3)
+        leaves = jax.tree_util.tree_flatten_with_path(eng.cache)[0]
+        dtypes = {str(getattr(p[-1], "key", p[-1])): l.dtype
+                  for p, l in leaves}
+        assert dtypes["k_q"] == jnp.int8
+        assert dtypes["k_scale"] == jnp.float32
+
+
+class TestTokenBudget:
+    def test_mixed_step_respects_budget(self, setup):
+        run, m, params = setup
+        budget = 6
+        eng = _engine(run, params, prefill_chunk=4,
+                      step_token_budget=budget)
+        reqs = [Request(uid=0, prompt=[1, 2, 3], max_new_tokens=20),
+                Request(uid=1, prompt=list(LONG), max_new_tokens=4)]
+        for r in reqs:
+            eng.add_request(r)
+        eng.run_until_done()
+        assert all(r.done for r in reqs)
+        for s in eng.stats:
+            # decode-first is strict (all live slots), prefill spends
+            # at most the remainder of the budget
+            assert s["tokens"] + s["prefill_tokens"] \
+                <= max(budget, s["live"])
+
+    def test_no_head_of_line_stall(self, setup):
+        """Decode of a live stream continues EVERY step while a long
+        prompt prefills in chunks behind it."""
+        run, m, params = setup
+        eng = _engine(run, params, prefill_chunk=4)
+        short = Request(uid=0, prompt=[1, 2, 3], max_new_tokens=40)
+        eng.add_request(short)
+        eng.step()                       # short becomes live
+        assert len(short.output) >= 1
+        long_req = Request(uid=1, prompt=list(LONG), max_new_tokens=4)
+        eng.add_request(long_req)
+        for _ in range(8):               # 21-token prompt / 4-token chunks
+            before = len(short.output)
+            eng.step()
+            assert len(short.output) == before + 1, \
+                "long prompt stalled a live decode stream"
+            if long_req in eng.scheduler.active:
+                break
+        assert long_req in eng.scheduler.active
+
+    def test_continuous_rejected_for_recurrent_family(self):
+        cfg = registry.get("mamba2-2.7b").smoke
+        run = RunConfig(model=cfg, parallel=ParallelConfig())
+        m = get_model(cfg)
+        params, _ = m.init(jax.random.PRNGKey(0))
+        with pytest.raises(ValueError):
+            ServeEngine(run, params, slots=1, max_seq=32,
+                        admission="continuous")
+        eng = ServeEngine(run, params, slots=1, max_seq=32)
+        assert eng.admission == "blocking"
+
+
+class TestPreemption:
+    def test_preempt_requeue_deterministic(self, setup):
+        """Under a KV byte budget the youngest stream is evicted,
+        requeued with its generated prefix, and finishes with EXACTLY
+        the tokens of an unconstrained greedy run."""
+        run, m, params = setup
+        prompts = [(1, 2, 3, 4), (9, 8, 7)]
+        base = _serve(_engine(run, params), prompts, n=10)
+
+        eng = _engine(run, params)
+        bpt = eng.pool.bytes_per_token
+        assert bpt > 0
+        # room for both prompts + a few decoded tokens, then pressure
+        eng2 = _engine(run, params, kv_byte_budget=int(bpt * 12))
+        out = _serve(eng2, prompts, n=10)
+        assert eng2.preemptions > 0
+        assert out == base
+        preempted = [r for r in eng2.finished if r.preemptions]
+        assert preempted and all(len(r.output) == 10 for r in preempted)
+
+    def test_budget_gates_admission(self, setup):
+        run, m, params = setup
+        eng = _engine(run, params)
+        bpt = eng.pool.bytes_per_token
+        eng2 = _engine(run, params, kv_byte_budget=int(bpt * 6))
+        out = _serve(eng2, [(1, 2, 3, 4), (9, 8, 7)], n=4)
+        # second stream could never cohabit: it waited, then ran alone
+        assert max(s["live"] for s in eng2.stats) == 1
+        base = _serve(_engine(run, params), [(1, 2, 3, 4), (9, 8, 7)], n=4)
+        assert out == base
+
+
+class TestPoolAccounting:
+    def test_slot_and_byte_lifecycle(self, setup):
+        run, m, params = setup
+        pool = KVPoolManager(m, 2, 64, byte_budget=None)
+        assert pool.free_slots() == [0, 1]
+        assert pool.bytes_per_token > 0
+        assert pool.used_bytes() == 0
+        pool.allocate(0, 10)
+        assert pool.used_bytes() == int(10 * pool.bytes_per_token)
+        pool.grow(0)
+        assert pool.used_bytes() == int(11 * pool.bytes_per_token)
+        pool.release(0)
+        assert pool.used_bytes() == 0 and pool.free_slots() == [0, 1]
+
+    def test_pressure_evicts_youngest_first(self, setup):
+        run, m, params = setup
+        pool = KVPoolManager(m, 3, 64)
+        pool.byte_budget = int(12 * pool.bytes_per_token)
+        pool.allocate(2, 6)
+        pool.allocate(0, 6)
+        assert pool.pressure_victims() == []
+        pool.allocate(1, 6)            # youngest ticket
+        assert pool.pressure_victims() == [1]
+
+    def test_kv_bytes_per_step_matches_engine(self, setup):
+        run, m, params = setup
+        eng = _engine(run, params)
+        assert eng.plan_summary["kv_bytes_per_step"] \
+            == eng.pool.kv_bytes_per_step > 0
+
+
+class TestStatsAndTTFT:
+    def test_stats_ring_bounded(self, setup):
+        run, m, params = setup
+        eng = _engine(run, params, stats_window=4)
+        _serve(eng, [(1, 2, 3)], n=12)
+        assert len(eng.stats) == 4
+
+    def test_ttft_and_admit_time_recorded(self, setup):
+        run, m, params = setup
+        for admission in ("continuous", "blocking"):
+            eng = _engine(run, params, admission=admission)
+            _serve(eng, [(1, 2, 3), (4, 5)], n=4)
+            for r in eng.finished:
+                assert r.ttft is not None and r.ttft >= 0
+                assert len(r.token_times) == len(r.output)
+            tp = eng.throughput()
+            assert tp["ttft_mean_s"] >= 0
+            assert tp["prefill_seconds"] > 0     # admit/prefill counted
+            assert tp["tokens_per_s"] > 0
+
+    def test_overlong_prompt_rejected_at_submit(self, setup):
+        run, m, params = setup
+        eng = _engine(run, params, max_seq=32)
+        with pytest.raises(ValueError, match="does not fit"):
+            eng.add_request(Request(uid=0, prompt=[1] * 40))
+        eng.add_request(Request(uid=1, prompt=[1] * 31, max_new_tokens=4))
+
+    def test_blocking_first_token_only_request_counted(self, setup):
+        """A request that finishes on its admission token (max_new=1)
+        must still show up in step()'s return and throughput()."""
+        run, m, params = setup
+        eng = _engine(run, params, admission="blocking")
+        req = Request(uid=0, prompt=[1, 2, 3], max_new_tokens=1)
+        eng.add_request(req)
+        assert eng.step() == 1
+        assert req.done and len(req.output) == 1
+        tp = eng.throughput()
+        assert tp["steps"] == 1 and tp["tokens_per_s"] > 0
+
+    def test_runner_rejects_unknown_segment(self, setup):
+        run, m, params = setup
+        eng = _engine(run, params)
+        with pytest.raises(ValueError):
+            eng.runner.step(jnp.zeros((1, 1), jnp.int32), None, "train",
+                            cache=None)
