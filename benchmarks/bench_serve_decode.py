@@ -1,6 +1,7 @@
 """Serve-decode benchmarks: KV quantization + admission scheduling.
 
-Two sweeps share this module (select with ``--sweep {all,kv,sched}``):
+Three sweeps share this module (select with
+``--sweep {all,kv,sched,mla}``):
 
 **kv** — f32 KV pool vs int8-quantized KV pool.
 
@@ -19,6 +20,14 @@ Reported per ``(slots, S_max)`` sweep point:
   kernel is bypassed for the jnp dequant oracle; the bandwidth column
   is the TPU win),
 
+**mla** — f32 vs int8 *latent* cache on an MLA stack (cache families
+``mla_latent`` / ``mla_latent_int8`` of ``repro.layers.cache``).  The
+latent is already the rank-compressed K/V factor; quantizing it shrinks
+decode's dominant byte stream again on top of the rank reduction.  Same
+columns as **kv** (bytes/step from the engine's plan-derived
+accounting), served through chunked continuous admission — the MLA
+chunk path this PR enabled.
+
 **sched** — continuous (chunked-prefill token-budget scheduler) vs
 blocking admission under *mixed load*: short live decode streams with a
 long prompt queued behind them.  Blocking admission runs one whole
@@ -33,7 +42,7 @@ Both sweeps append to the ``BENCH_serve.json`` trajectory at the repo
 root so successive PRs can track the serve numbers.
 
     PYTHONPATH=src python -m benchmarks.bench_serve_decode \
-        [--dry-run] [--sweep {all,kv,sched}]
+        [--dry-run] [--sweep {all,kv,sched,mla}]
 """
 from __future__ import annotations
 
@@ -122,6 +131,69 @@ def run(fast: bool = True, dry_run: bool = False) -> str:
     worst = min(r["kv_byte_ratio"] for r in records)
     out += f"\n# worst-case KV byte ratio int8 vs f32: {worst:.2f}x"
     _append_trajectory({"bench": "serve_decode", "dry_run": dry_run,
+                        "unix_time": int(time.time()), "rows": records})
+    out += f"\n# trajectory appended to {TRAJECTORY.name}"
+    return out
+
+
+def _build_mla(slots: int, max_seq: int, kv_quantize: str | None):
+    from repro.configs.base import ModelConfig, ParallelConfig, RunConfig
+    from repro.models.api import get_model
+    from repro.serve.engine import ServeEngine
+
+    # Dense-family MLA stack (chunked continuous admission applies);
+    # f32 so the baseline latent pool is genuinely full width.
+    cfg = ModelConfig(
+        name="mla-bench", family="dense", mla=True, num_layers=2,
+        d_model=64, num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=256,
+        q_lora_rank=0, kv_lora_rank=32, qk_rope_dim=16, qk_nope_dim=32,
+        v_head_dim=32, dtype="float32")
+    run = RunConfig(model=cfg, parallel=ParallelConfig())
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    return ServeEngine(run, params, slots=slots, max_seq=max_seq,
+                       kv_quantize=kv_quantize)
+
+
+def run_mla(fast: bool = True, dry_run: bool = False) -> str:
+    sweeps = [(2, 64), (4, 128), (4, 256)]
+    if dry_run:
+        sweeps = sweeps[:1]
+    elif fast:
+        sweeps = sweeps[:2]
+    csv = Csv(["slots", "s_max", "latent_bytes_f32", "latent_bytes_int8",
+               "byte_ratio", "tpu_kv_us_f32", "tpu_kv_us_int8",
+               "cpu_tok_s_f32", "cpu_tok_s_int8", "token_match"])
+    records = []
+    for slots, s_max in sweeps:
+        n_req = 2 * slots
+        eng_f = _build_mla(slots, s_max, None)
+        tok_f, out_f = _serve(eng_f, n_req)
+        eng_q = _build_mla(slots, s_max, "int8")
+        tok_q, out_q = _serve(eng_q, n_req)
+        assert eng_q.plan_summary["kv_cache_family"] == "mla_latent_int8"
+        b_f = eng_f.plan_summary["kv_bytes_per_step"]
+        b_q = eng_q.plan_summary["kv_bytes_per_step"]
+        ratio = b_f / b_q
+        flat_f = [t for o in out_f for t in o]
+        flat_q = [t for o in out_q for t in o]
+        match = sum(a == b for a, b in zip(flat_f, flat_q)) / len(flat_f)
+        csv.row(slots, s_max, b_f, b_q, round(ratio, 2),
+                round(b_f / TPU_V5E.hbm_bandwidth * 1e6, 3),
+                round(b_q / TPU_V5E.hbm_bandwidth * 1e6, 3),
+                round(tok_f, 1), round(tok_q, 1), round(match, 3))
+        records.append({"slots": slots, "s_max": s_max,
+                        "latent_bytes_f32": b_f, "latent_bytes_int8": b_q,
+                        "latent_byte_ratio": round(ratio, 3),
+                        "cpu_tok_s_f32": round(tok_f, 2),
+                        "cpu_tok_s_int8": round(tok_q, 2),
+                        "token_match": round(match, 4)})
+    out = csv.dump("serve decode, MLA stack: f32 vs int8 latent cache "
+                   "(bytes/step from the CachePlan-derived accounting; "
+                   "TPU win = the latent stream column)")
+    worst = min(r["latent_byte_ratio"] for r in records)
+    out += f"\n# worst-case latent byte ratio int8 vs f32: {worst:.2f}x"
+    _append_trajectory({"bench": "serve_mla", "dry_run": dry_run,
                         "unix_time": int(time.time()), "rows": records})
     out += f"\n# trajectory appended to {TRAJECTORY.name}"
     return out
@@ -244,10 +316,12 @@ if __name__ == "__main__":
     ap.add_argument("--dry-run", action="store_true",
                     help="one tiny sweep point; CPU smoke for CI")
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--sweep", choices=["all", "kv", "sched"],
+    ap.add_argument("--sweep", choices=["all", "kv", "sched", "mla"],
                     default="all")
     args = ap.parse_args()
     if args.sweep in ("all", "kv"):
         print(run(fast=not args.full, dry_run=args.dry_run))
+    if args.sweep in ("all", "mla"):
+        print(run_mla(fast=not args.full, dry_run=args.dry_run))
     if args.sweep in ("all", "sched"):
         print(run_sched(fast=not args.full, dry_run=args.dry_run))

@@ -18,7 +18,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table3,rank,branch,lm,kernels,"
-                         "quant,branched_quant,serve_decode,serve_sched")
+                         "quant,branched_quant,serve_decode,serve_mla,"
+                         "serve_sched")
     ap.add_argument("--list", action="store_true",
                     help="print registered benchmark names and exit")
     args = ap.parse_args()
@@ -38,6 +39,7 @@ def main() -> None:
         "quant": bench_quant.run,
         "branched_quant": bench_branched_quant.run,
         "serve_decode": bench_serve_decode.run,
+        "serve_mla": bench_serve_decode.run_mla,
         "serve_sched": bench_serve_decode.run_sched,
     }
     if args.list:

@@ -10,4 +10,5 @@ python -m benchmarks.run --list
 python -m benchmarks.bench_quant --dry-run
 python -m benchmarks.bench_branched_quant --dry-run
 python -m benchmarks.bench_serve_decode --sweep kv --dry-run
+python -m benchmarks.bench_serve_decode --sweep mla --dry-run
 python -m benchmarks.bench_serve_decode --sweep sched --dry-run

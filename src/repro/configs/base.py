@@ -237,7 +237,9 @@ class LRDConfig:
     )
     # Runtime KV-cache quantization (repro/quant/kv): the decode step's
     # *activation* stream — int8 K/V pool + per-(slot, head, channel)
-    # scales, read by the fused decode-attention kernel.
+    # scales on GQA stacks, int8 MLA latents + per-(slot, channel)
+    # scales on MLA stacks (cache family gqa_int8 / mla_latent_int8 of
+    # repro/layers/cache), read by the fused decode-attention kernels.
     kv_quantize: str = "none"         # "none" | "int8"
     # Continuous-batching serve stack (repro/serve): tokens of prompt
     # processed per chunked-prefill segment, and the per-step token

@@ -86,10 +86,12 @@ def plan_layer_time(plan, m: int, *, act_bytes: int = 2, kv_bytes: int = 0,
 
     ``kv_bytes`` adds a runtime stream to the same memory term: the KV
     pool bytes this layer reads per step (decode attention streams the
-    *whole* pool — :func:`repro.quant.kv.kv_bytes_per_step` gives the
-    per-layer figure, 1 byte/elt + f32 scale rows when the pool is
-    int8).  At serve-time batch sizes the decode roofline is memory-bound
-    on exactly these two streams, so the model predicts the KV-quant win
+    *whole* pool).  Derive it from the layer's declarative cache plan
+    via :func:`plan_kv_bytes` — NOT from a hand-computed formula — so
+    every cache family (f32/int8 GQA pools, f32/int8 MLA latents) is
+    costed by the same source of truth the serve pool uses.  At
+    serve-time batch sizes the decode roofline is memory-bound on
+    exactly these two streams, so the model predicts the KV-quant win
     the serve benchmark then measures.
     """
     mp = mxu_padded(m, spec)
@@ -99,6 +101,19 @@ def plan_layer_time(plan, m: int, *, act_bytes: int = 2, kv_bytes: int = 0,
     memory = (act_bytes * m * (plan.d_in + plan.d_out)
               + plan.weight_bytes + kv_bytes) / spec.hbm_bandwidth
     return max(compute, memory)
+
+
+def plan_kv_bytes(cache_plan, slots: int, seq_len: int) -> int:
+    """Per-decode-step KV stream bytes of one layer, from its
+    :class:`repro.layers.cache.CachePlan` — the plan-derived ``kv_bytes``
+    input to :func:`plan_layer_time`.  Decode reads every slot's full
+    ``seq_len`` (masked, not skipped), so this is the whole pool:
+    per-position value bytes times occupancy plus the per-slot f32
+    scale rows for the int8 families.  Single source of truth with
+    :class:`repro.serve.pool.KVPoolManager`'s accounting and the
+    engine's ``plan_summary["kv_bytes_per_step"]``.
+    """
+    return cache_plan.bytes_per_step(slots, seq_len)
 
 
 def conv_time(m_hw: int, c: int, s: int, k: int, *, dtype_bytes: int = 2,

@@ -25,6 +25,16 @@ Grid: ``(B, KV_heads, S/bs)`` with the sequence dim innermost
 (arbitrary); slots and heads are parallel.  The GQA group of G = H/KH
 query heads rides along as rows of the q/out tiles, so one pass over a
 K/V tile serves the whole group.
+
+``decode_attention_latent_q`` is the MLA twin: the absorbed decode form
+attends latent-space queries against an int8 *latent* pool
+(``ckv_q (B, S, r)`` + ``krope_q (B, S, rope)``, per-(slot, channel)
+f32 scales — no head axis, every head shares the one latent stream).
+The ckv/krope scales fold into the two latent query rows for the
+logits, and the ckv scales into the context output (the "V" of latent
+attention is the ckv stream again), so the int8 latents are consumed
+directly — same online-softmax scratch discipline, grid ``(B, S/bs)``
+with all H heads riding as tile rows.
 """
 from __future__ import annotations
 
@@ -145,3 +155,119 @@ def vmem_bytes(g: int, d: int, s_block: int, act_bytes: int = 4,
             + g * d * act_bytes               # out tile
             + g * d * 4                       # f32 accumulator
             + 2 * g * _MINOR * 4)             # running max / sum
+
+
+# ---------------------------------------------------------------------------
+# MLA latent variant: absorbed decode over an int8 latent pool
+# ---------------------------------------------------------------------------
+
+def _latent_kernel(ql_ref, qr_ref, cq_ref, cs_ref, rq_ref, rs_ref, cp_ref,
+                   o_ref, acc_ref, m_ref, l_ref, *, scale):
+    """q_lat (1,H,L); q_rope (1,H,R); ckv_q (1,bs,L) / krope_q (1,bs,R)
+    int8; ckv/krope_scale (1,L)/(1,R) f32; cache_pos (1,1) i32 SMEM;
+    o (1,H,L); scratch acc (H,L), m/l (H,128) f32 (col 0 live)."""
+    si = pl.program_id(1)
+    ns = pl.num_programs(1)
+    bs = cq_ref.shape[1]
+
+    @pl.when(si == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    ql = ql_ref[0].astype(jnp.float32)                      # (H, L)
+    qr = qr_ref[0].astype(jnp.float32)                      # (H, R)
+    cs = cs_ref[0].astype(jnp.float32)                      # (L,)
+    rs = rs_ref[0].astype(jnp.float32)                      # (R,)
+    cq = cq_ref[0].astype(jnp.float32)                      # (bs, L)
+    rq = rq_ref[0].astype(jnp.float32)                      # (bs, R)
+    # Latent + rope scales (and the 1/sqrt(nope+rope) logit scale) fold
+    # into the two query rows: (ql * cs) @ cq^T == ql @ dq(ckv)^T.
+    s = (jnp.dot(ql * (cs * scale)[None, :], cq.T,
+                 preferred_element_type=jnp.float32)
+         + jnp.dot(qr * (rs * scale)[None, :], rq.T,
+                   preferred_element_type=jnp.float32))     # (H, bs)
+    pos = si * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    s = jnp.where(pos <= cp_ref[0, 0], s, _NEG_INF)
+
+    m_prev = m_ref[:, :1]                                   # (H, 1)
+    l_prev = l_ref[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                  # (H, bs)
+    acc = acc_ref[...] * alpha + jnp.dot(
+        p, cq, preferred_element_type=jnp.float32)          # ctx over ckv
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(si == ns - 1)
+    def _flush():
+        o = acc / l_new * cs[None, :]   # ckv scales fold into the context
+        o_ref[0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "bs", "interpret"))
+def decode_attention_latent_q(q_lat: jax.Array, q_rope: jax.Array,
+                              ckv_q: jax.Array, ckv_scale: jax.Array,
+                              krope_q: jax.Array, krope_scale: jax.Array,
+                              cache_pos: jax.Array, *, scale: float,
+                              bs: int = DEFAULT_BS,
+                              interpret: bool = False) -> jax.Array:
+    """Fused absorbed-form MLA decode over an int8 latent pool.
+
+    q_lat (B, H, L); q_rope (B, H, R); ckv_q (B, S, L) / krope_q
+    (B, S, R) int8; ckv/krope_scale (B, L)/(B, R) f32; cache_pos (B, 1)
+    int32 -> context latents (B, H, L) in q_lat.dtype.  ``scale`` is
+    the logit scale 1/sqrt(qk_nope + qk_rope).  Requires S % bs == 0
+    (ops.py pads; padded positions mask out).
+    """
+    b, h, lora = q_lat.shape
+    rope = q_rope.shape[-1]
+    assert q_rope.shape == (b, h, rope), q_rope.shape
+    s = ckv_q.shape[1]
+    assert ckv_q.shape == (b, s, lora), (ckv_q.shape, q_lat.shape)
+    assert krope_q.shape == (b, s, rope), krope_q.shape
+    assert ckv_scale.shape == (b, lora), ckv_scale.shape
+    assert krope_scale.shape == (b, rope), krope_scale.shape
+    assert cache_pos.shape == (b, 1), cache_pos.shape
+    assert s % bs == 0, (s, bs)
+
+    grid = (b, s // bs)
+    kernel = functools.partial(_latent_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, h, lora), lambda i, k: (i, 0, 0)),
+            pl.BlockSpec((1, h, rope), lambda i, k: (i, 0, 0)),
+            pl.BlockSpec((1, bs, lora), lambda i, k: (i, k, 0)),
+            pl.BlockSpec((1, lora), lambda i, k: (i, 0)),
+            pl.BlockSpec((1, bs, rope), lambda i, k: (i, k, 0)),
+            pl.BlockSpec((1, rope), lambda i, k: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, k: (i, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, h, lora), lambda i, k: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, lora), q_lat.dtype),
+        scratch_shapes=[pltpu.VMEM((h, lora), jnp.float32),
+                        pltpu.VMEM((h, _MINOR), jnp.float32),
+                        pltpu.VMEM((h, _MINOR), jnp.float32)],
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(q_lat, q_rope, ckv_q, ckv_scale, krope_q, krope_scale, cache_pos)
+
+
+def vmem_bytes_latent(h: int, lora: int, rope: int, s_block: int,
+                      act_bytes: int = 4, q_bytes: int = 1) -> int:
+    """VMEM footprint of one latent grid step (fit check for ops.py)."""
+    return (h * (lora + rope) * act_bytes     # q_lat + q_rope tiles
+            + s_block * (lora + rope) * q_bytes   # ckv_q + krope_q tiles
+            + (lora + rope) * 4               # scale rows
+            + h * lora * act_bytes            # out tile
+            + h * lora * 4                    # f32 accumulator
+            + 2 * h * _MINOR * 4)             # running max / sum

@@ -74,6 +74,12 @@ def kernel_fits(kernel: str, m: int, *, c: int, s: int, r: int = 0,
         # bn = the sequence block; m (the slot count) is grid-parallel.
         return dak.vmem_bytes(max(1, r), c, bn or dak.DEFAULT_BS,
                               q_bytes=q_bytes) <= VMEM_BUDGET
+    if kernel == "decode_latent_q":
+        # Per-slot program: c = kv_lora_rank, r = head count, r1 = the
+        # rope dim; all H heads ride as tile rows of one program.
+        return dak.vmem_bytes_latent(max(1, r), c, r1,
+                                     bn or dak.DEFAULT_BS,
+                                     q_bytes=q_bytes) <= VMEM_BUDGET
     raise ValueError(f"unknown kernel {kernel!r}")
 
 
@@ -224,3 +230,38 @@ def decode_attention_q(q: jax.Array, k_q: jax.Array, k_scale: jax.Array,
         bs=min(bs, kq_p.shape[1]), softcap=softcap,
         interpret=not _on_tpu())
     return o.reshape(b, 1, h, d)
+
+
+def decode_attention_latent_q(q_lat: jax.Array, q_rope: jax.Array,
+                              ckv_q: jax.Array, ckv_scale: jax.Array,
+                              krope_q: jax.Array, krope_scale: jax.Array,
+                              cache_pos: jax.Array, *, scale: float,
+                              bs: int = dak.DEFAULT_BS,
+                              force_kernel: bool = False) -> jax.Array:
+    """One absorbed-form MLA decode step over an int8 latent pool, fused.
+
+    q_lat (B, 1, H, L); q_rope (B, 1, H, R); ckv_q (B, S, L) / krope_q
+    (B, S, R) int8; ckv/krope_scale (B, L)/(B, R) f32 per-(slot,
+    channel); cache_pos (B,) -> context latents (B, 1, H, L).
+    ``scale`` is the logit scale 1/sqrt(qk_nope + qk_rope).  Positions
+    beyond each slot's ``cache_pos`` are masked in-kernel, so the S
+    padding added here never leaks into the softmax.
+    """
+    b, sq, h, lora = q_lat.shape
+    assert sq == 1, q_lat.shape
+    s = ckv_q.shape[1]
+    rope = q_rope.shape[-1]
+    q_bytes = jnp.dtype(ckv_q.dtype).itemsize
+    if not (force_kernel or kernel_fits("decode_latent_q", b, c=lora, s=s,
+                                        r=h, r1=rope, q_bytes=q_bytes,
+                                        bn=bs)):
+        return ref.decode_attention_latent_q_ref(
+            q_lat, q_rope, ckv_q, ckv_scale, krope_q, krope_scale,
+            cache_pos, scale=scale)
+    cq_p, _ = _pad_to(ckv_q, 1, bs)
+    rq_p, _ = _pad_to(krope_q, 1, bs)
+    o = dak.decode_attention_latent_q(
+        q_lat[:, 0], q_rope[:, 0], cq_p, ckv_scale, rq_p, krope_scale,
+        cache_pos.astype(jnp.int32).reshape(b, 1), scale=scale,
+        bs=min(bs, cq_p.shape[1]), interpret=not _on_tpu())
+    return o[:, None]

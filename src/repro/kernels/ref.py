@@ -80,3 +80,30 @@ def decode_attention_q_ref(q: jax.Array, k_q: jax.Array, k_scale: jax.Array,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
     return o.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def decode_attention_latent_q_ref(q_lat: jax.Array, q_rope: jax.Array,
+                                  ckv_q: jax.Array, ckv_scale: jax.Array,
+                                  krope_q: jax.Array, krope_scale: jax.Array,
+                                  cache_pos: jax.Array, *,
+                                  scale: float) -> jax.Array:
+    """Dequantize-then-attend oracle for the fused int8 MLA latent
+    decode kernel (absorbed form).
+
+    q_lat (B, 1, H, L); q_rope (B, 1, H, R); ckv_q (B, S, L) / krope_q
+    (B, S, R) int8; ckv/krope_scale (B, L)/(B, R); cache_pos (B,) ->
+    context latents (B, 1, H, L) in q_lat.dtype.  Full f32 softmax over
+    the validity-masked latent pool — the allclose target for the
+    online-softmax latent kernel.
+    """
+    cc = ckv_q.astype(jnp.float32) * ckv_scale[:, None]
+    cr = krope_q.astype(jnp.float32) * krope_scale[:, None]
+    s = (jnp.einsum("bqhl,bsl->bhqs", q_lat.astype(jnp.float32), cc,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32), cr,
+                      preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(cc.shape[1])[None, :] <= cache_pos[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsl->bqhl", p, cc)
+    return ctx.astype(q_lat.dtype)

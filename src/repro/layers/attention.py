@@ -9,14 +9,18 @@ Decode attends one token against a cache of ``S`` slots; the new token's K/V
 is written at ``pos`` via dynamic_update_slice (works on sharded dims under
 GSPMD).
 
-The KV cache may be stored quantized (``repro.quant.kv``: int8 values +
-per-(slot, head, channel) f32 scales — keys ``k_q``/``k_scale``/``v_q``/
-``v_scale`` instead of ``k``/``v``).  ``apply_attention`` branches on the
-keys present, so the model/trunk code is identical for both layouts:
-prefill quantizes the prompt's K/V on insert, decode updates the int8
-pool incrementally and attends through the fused int8 kernel
-(``kernels/decode_attention_q``) under ``use_pallas``, or its jnp
-dequant oracle otherwise.
+Cache layout is the :class:`repro.layers.cache.CachePlan`'s concern:
+one plan per attention layer declares the family (``gqa_f32 |
+gqa_int8 | mla_latent | mla_latent_int8``), and ``apply_attention`` /
+``apply_mla`` are thin executors over it — they own projections, RoPE,
+and the prefill softmax (computed on the in-layer full-precision
+values), while every write (prefill / chunk-at-offset / decode
+scatter), quantize-on-insert, dequant view, and fused-kernel decision
+lives on the plan.  The serve stack threads plans explicitly
+(``models/blocks.py`` → ``models/lm.py`` → ``serve/runner.py``);
+direct layer-level callers fall back to
+:func:`repro.layers.cache.plan_from_cache`, the one remaining place a
+cache dict's keys are sniffed.
 
 All projections go through :func:`repro.layers.param.apply_linear`, so LRD
 surgery (SVD pairs / branched factors) applies transparently — and the
@@ -32,12 +36,13 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.layers import cache as cache_mod
+from repro.layers.cache import CachePlan
 from repro.layers.param import (
     ParamBuilder, apply_linear, init_linear, shard_act,
     BATCH, SEQ, EMBED, QKV, RANK, HEADS, KV_HEADS, HEAD_DIM,
 )
 from repro.layers.norm import init_rms_norm, rms_norm
-from repro.quant import kv as kvq
 
 Q_CHUNK = 1024
 
@@ -144,21 +149,14 @@ def init_attention(pb: ParamBuilder, name: str, d_model: int, num_heads: int,
 
 def init_kv_cache(batch: int, seq_len: int, num_kv_heads: int, head_dim: int,
                   dtype, quantize: str | None = None) -> dict:
-    if quantize and quantize != "none":
-        return kvq.init_kv_cache_q(batch, seq_len, num_kv_heads, head_dim,
-                                   quantize)
-    shape = (batch, seq_len, num_kv_heads, head_dim)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    return cache_mod.gqa_plan(num_kv_heads, head_dim, dtype,
+                              quantize).init(batch, seq_len)
 
 
 def kv_cache_spec(batch: int, seq_len: int, num_kv_heads: int, head_dim: int,
                   dtype, quantize: str | None = None) -> dict:
-    if quantize and quantize != "none":
-        return kvq.kv_cache_spec_q(batch, seq_len, num_kv_heads, head_dim,
-                                   quantize)
-    shape = (batch, seq_len, num_kv_heads, head_dim)
-    return {"k": jax.ShapeDtypeStruct(shape, dtype),
-            "v": jax.ShapeDtypeStruct(shape, dtype)}
+    return cache_mod.gqa_plan(num_kv_heads, head_dim, dtype,
+                              quantize).spec(batch, seq_len)
 
 
 def apply_attention(p: dict, x: jax.Array, *, num_heads: int,
@@ -168,27 +166,32 @@ def apply_attention(p: dict, x: jax.Array, *, num_heads: int,
                     cache_pos: jax.Array | None = None,
                     prompt_len: jax.Array | None = None,
                     start_pos: jax.Array | None = None,
+                    plan: CachePlan | None = None,
                     opts: AttnOpts = AttnOpts()) -> tuple[jax.Array, dict | None]:
     """Self-attention. Returns (output, updated_cache).
 
     * train:   cache=None — pure causal attention over x.
     * prefill: cache provided (zeros) — fills cache[0:S], causal.
       ``prompt_len`` (scalar) marks the real token count of a
-      right-padded prompt: quantized-KV prefill zeroes pad positions'
-      K/V before the scale reduction, so bucket padding cannot inflate
-      the per-channel scales (causality already hides pad *keys* from
-      real queries, padded or not).
+      right-padded prompt: the plan's quantized prefill write zeroes
+      pad positions' K/V before the scale reduction, so bucket padding
+      cannot inflate the per-channel scales (causality already hides
+      pad *keys* from real queries, padded or not).
     * prefill chunk: ``start_pos`` (scalar) given — x holds prompt
       positions ``[start_pos, start_pos + Sq)`` of a prompt whose
       ``[0, start_pos)`` K/V prefix is already in ``cache``.  The
-      chunk's K/V is written at the offset (quantized caches take the
-      amortized :func:`repro.quant.kv.kv_write_chunk` running-max
-      update) and attention runs over the *whole* cached prefix with
-      absolute causal masking — positions beyond the written prefix
-      can never satisfy ``key_pos <= q_pos``, so the full-pool read is
-      exact.  ``positions`` must carry the absolute offsets.
+      chunk's K/V is written at the offset and attention runs over the
+      plan's *whole-pool* view with absolute causal masking —
+      positions beyond the written prefix can never satisfy
+      ``key_pos <= q_pos``, so the full-pool read is exact.
+      ``positions`` must carry the absolute offsets.
     * decode:  x has Sq=1, cache full; writes K/V at ``cache_pos`` and
-               attends over the whole cache.
+               attends over the whole cache via the plan (fused int8
+               kernel under ``use_pallas``).
+
+    ``plan`` is the layer's :class:`repro.layers.cache.CachePlan`; when
+    None it is classified from the cache once (static metadata, safe
+    under jit).
     """
     b, sq, _ = x.shape
     kw = dict(freeze_factors=opts.freeze_factors, use_pallas=opts.use_pallas)
@@ -206,104 +209,34 @@ def apply_attention(p: dict, x: jax.Array, *, num_heads: int,
     new_cache = None
     if cache is None:
         o = chunked_attention(q, k, v, causal=causal, softcap=opts.softcap)
-    elif cache_pos is None and start_pos is not None:
-        # prefill chunk at a sequence offset against an existing slot.
-        # Zero pad rows BEFORE the write (both dtypes): callers pass
-        # prompt_len as the chunk's real end (min(prompt end, chunk
-        # end)), so bucket padding can never land garbage K/V at
-        # mid-prompt positions a later query would attend, nor inflate
-        # the int8 running-max scales.
-        if prompt_len is not None:
-            pm = (start_pos + jnp.arange(sq)
-                  < prompt_len)[None, :, None, None]
-            k = jnp.where(pm, k, 0.0)
-            v = jnp.where(pm, v, 0.0)
-        if kvq.is_quantized_kv(cache):
-            ck, ks = kvq.kv_write_chunk(cache["k_q"], cache["k_scale"],
-                                        k, start_pos)
-            cv, vs = kvq.kv_write_chunk(cache["v_q"], cache["v_scale"],
-                                        v, start_pos)
-            new_cache = {"k_q": ck, "k_scale": ks, "v_q": cv, "v_scale": vs}
-            # int8 prefix: attend through the dequant view (the serve
-            # scheduler stages in full precision instead, for exactness)
-            kk = kvq.dequantize_kv(ck, ks, k.dtype)
-            vv = kvq.dequantize_kv(cv, vs, v.dtype)
-        else:
-            ck = lax.dynamic_update_slice_in_dim(cache["k"], k, start_pos, 1)
-            cv = lax.dynamic_update_slice_in_dim(cache["v"], v, start_pos, 1)
-            new_cache = {"k": ck, "v": cv}
-            kk, vv = ck, cv
-        o = chunked_attention(q, kk, vv, causal=causal, q_offset=start_pos,
-                              softcap=opts.softcap)
-    elif cache_pos is None:  # prefill (any length, incl. 1-token prompts)
-        if kvq.is_quantized_kv(cache):
-            # Quantize on insert: pool + scatter stay int8 throughout.
-            if prompt_len is not None:
-                pm = (jnp.arange(sq) < prompt_len)[None, :, None, None]
-                k = jnp.where(pm, k, 0.0)
-                v = jnp.where(pm, v, 0.0)
-            k_q, k_scale = kvq.quantize_kv_prefill(k)
-            v_q, v_scale = kvq.quantize_kv_prefill(v)
-            new_cache = {
-                "k_q": lax.dynamic_update_slice_in_dim(cache["k_q"], k_q,
-                                                       0, 1),
-                "k_scale": k_scale,
-                "v_q": lax.dynamic_update_slice_in_dim(cache["v_q"], v_q,
-                                                       0, 1),
-                "v_scale": v_scale}
-        else:
-            new_cache = {
-                "k": lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1),
-                "v": lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1)}
-        o = chunked_attention(q, k, v, causal=causal, softcap=opts.softcap)
-    else:  # decode: per-example positions (B,) — scatter into cache slots
-        assert sq == 1, sq
-        if kvq.is_quantized_kv(cache):
-            ck, ks = kvq.kv_write_token(cache["k_q"], cache["k_scale"],
-                                        k[:, 0], cache_pos)
-            cv, vs = kvq.kv_write_token(cache["v_q"], cache["v_scale"],
-                                        v[:, 0], cache_pos)
-            new_cache = {"k_q": ck, "k_scale": ks, "v_q": cv, "v_scale": vs}
-            o = _decode_attention_q(q, ck, ks, cv, vs, cache_pos,
-                                    opts.softcap, opts.use_pallas)
-        else:
-            bidx = jnp.arange(b)
-            ck = cache["k"].at[bidx, cache_pos].set(k[:, 0])
-            cv = cache["v"].at[bidx, cache_pos].set(v[:, 0])
-            new_cache = {"k": ck, "v": cv}
-            skv = ck.shape[1]
-            # mask out slots beyond each example's position
-            valid = jnp.arange(skv)[None, :] <= cache_pos[:, None]  # (B,S)
-            o = _decode_attention(q, ck, cv, valid, opts.softcap)
+    else:
+        if plan is None:
+            plan = cache_mod.plan_from_cache(cache, x.dtype)
+        if cache_pos is not None:    # decode: per-slot positions (B,)
+            assert sq == 1, sq
+            new_cache = plan.write_decode(cache, {"k": k[:, 0], "v": v[:, 0]},
+                                          cache_pos)
+            o = plan.attend_decode(q, new_cache, cache_pos,
+                                   softcap=opts.softcap,
+                                   use_pallas=opts.use_pallas)
+        elif start_pos is not None:  # prefill chunk at a sequence offset
+            new_cache, view = plan.write_chunk(cache, {"k": k, "v": v},
+                                               start_pos, prompt_len)
+            o = chunked_attention(q, view["k"], view["v"], causal=causal,
+                                  q_offset=start_pos, softcap=opts.softcap)
+        else:                        # prefill (any length, incl. 1 token)
+            new_cache = plan.write_prefill(cache, {"k": k, "v": v},
+                                           prompt_len)
+            o = chunked_attention(q, k, v, causal=causal,
+                                  softcap=opts.softcap)
     o = o.reshape(b, sq, num_heads * head_dim)
     out = apply_linear(p["o"], o, **kw)
     return out, new_cache
 
 
-def _decode_attention_q(q, k_q, k_scale, v_q, v_scale, cache_pos, softcap,
-                        use_pallas):
-    """Decode over an int8 pool: fused kernel under ``use_pallas`` (with
-    the shared VMEM-fit fallback inside the ops wrapper), jnp dequant
-    oracle otherwise — a full-precision copy of the pool never lands in
-    HBM on the kernel path."""
-    from repro.kernels import ops as kops
-    from repro.kernels import ref as kref
-    if use_pallas:
-        return kops.decode_attention_q(q, k_q, k_scale, v_q, v_scale,
-                                       cache_pos, softcap=softcap)
-    return kref.decode_attention_q_ref(q, k_q, k_scale, v_q, v_scale,
-                                       cache_pos, softcap=softcap)
-
-
-def _decode_attention(q, k, v, valid, softcap):
-    b, sq, h, hd = q.shape
-    kh = k.shape[2]
-    qg = q.reshape(b, sq, kh, h // kh, hd)
-    s = _scaled_logits(qg, k, 1.0 / math.sqrt(hd), softcap)
-    s = jnp.where(valid[:, None, None, None, :], s, -1e30)   # valid (B,Skv)
-    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
-    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
-    return o.reshape(b, sq, h, hd)
+#: full-width decode attention (kept under its historical name — the
+#: plan's ``attend_decode`` is the dispatching entry)
+_decode_attention = cache_mod.gqa_decode_attention
 
 
 # ---------------------------------------------------------------------------
@@ -373,16 +306,16 @@ def init_mla(pb: ParamBuilder, name: str, cfg) -> None:
     init_linear(sub, "o", h * cfg.v_head_dim, d, QKV, EMBED)
 
 
-def mla_cache_spec(batch: int, seq_len: int, cfg, dtype) -> dict:
-    return {
-        "ckv": jax.ShapeDtypeStruct((batch, seq_len, cfg.kv_lora_rank), dtype),
-        "krope": jax.ShapeDtypeStruct((batch, seq_len, cfg.qk_rope_dim), dtype),
-    }
+def mla_cache_spec(batch: int, seq_len: int, cfg, dtype,
+                   quantize: str | None = None) -> dict:
+    return cache_mod.mla_plan(cfg.kv_lora_rank, cfg.qk_rope_dim, dtype,
+                              quantize).spec(batch, seq_len)
 
 
-def init_mla_cache(batch: int, seq_len: int, cfg, dtype) -> dict:
-    return {"ckv": jnp.zeros((batch, seq_len, cfg.kv_lora_rank), dtype),
-            "krope": jnp.zeros((batch, seq_len, cfg.qk_rope_dim), dtype)}
+def init_mla_cache(batch: int, seq_len: int, cfg, dtype,
+                   quantize: str | None = None) -> dict:
+    return cache_mod.mla_plan(cfg.kv_lora_rank, cfg.qk_rope_dim, dtype,
+                              quantize).init(batch, seq_len)
 
 
 def _mla_qkr(p, x, cfg, positions, kw):
@@ -408,20 +341,25 @@ def _mla_qkr(p, x, cfg, positions, kw):
 def apply_mla(p: dict, x: jax.Array, cfg, *, positions: jax.Array,
               causal: bool = True, cache: dict | None = None,
               cache_pos: jax.Array | None = None,
+              prompt_len: jax.Array | None = None,
               start_pos: jax.Array | None = None,
+              plan: CachePlan | None = None,
               opts: AttnOpts = AttnOpts()) -> tuple[jax.Array, dict | None]:
     """Multi-head latent attention. Decode uses the *absorbed* form:
     queries projected into the kv_lora latent space, attention runs entirely
     against the cached latents (never materializing per-head K/V) — this is
-    exactly the paper's layer-merging executed at inference time.
+    exactly the paper's layer-merging executed at inference time.  The
+    latent cache is the plan's concern: ``mla_latent`` stores it full
+    width, ``mla_latent_int8`` as int8 values + per-(slot, channel) f32
+    running-max scales, attended through the fused latent kernel.
 
     ``start_pos`` (scalar) switches prefill into chunk mode: the chunk's
     latents land at the sequence offset and K/V for attention are
     re-expanded from the *whole* cached latent prefix (unwritten
     positions are zero latents, hidden by the absolute causal mask).
-    Chunks must not be right-padded short of the prompt end (there is
-    no ``prompt_len`` pad masking here; the serve scheduler never
-    chunks MLA stacks).
+    ``prompt_len`` (scalar) marks the real end of a right-padded chunk
+    or prompt — pad rows are zeroed at the latent write, mirroring the
+    GQA path, so bucketed chunked prefill is exact for MLA stacks too.
     """
     b, sq, _ = x.shape
     h, nope, rope_d = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
@@ -431,38 +369,33 @@ def apply_mla(p: dict, x: jax.Array, cfg, *, positions: jax.Array,
     scale = 1.0 / math.sqrt(nope + rope_d)
 
     new_cache = None
+    if cache is not None and plan is None:
+        plan = cache_mod.plan_from_cache(cache, x.dtype)
     if cache is not None and cache_pos is not None:  # absorbed decode
-        bidx = jnp.arange(b)
-        cc = cache["ckv"].at[bidx, cache_pos].set(ckv[:, 0])
-        cr = cache["krope"].at[bidx, cache_pos].set(k_rope[:, 0])
-        new_cache = {"ckv": cc, "krope": cr}
+        assert sq == 1, sq
+        new_cache = plan.write_decode(
+            cache, {"ckv": ckv[:, 0], "krope": k_rope[:, 0]}, cache_pos)
         # Absorbed decode: fold kv_b's K-half into q, V-half into output.
         wkv = _kv_b_matrix(p["kv_b"], cfg)             # (lora, h, nope+vd)
         wk, wv = wkv[..., :nope], wkv[..., nope:]
         q_lat = jnp.einsum("bqhn,lhn->bqhl", q_nope, wk)     # (B,1,H,lora)
-        s = (jnp.einsum("bqhl,bsl->bhqs", q_lat, cc,
-                        preferred_element_type=jnp.float32)
-             + jnp.einsum("bqhr,bsr->bhqs", q_rope, cr,
-                          preferred_element_type=jnp.float32)) * scale
-        valid = jnp.arange(cc.shape[1])[None, :] <= cache_pos[:, None]
-        s = jnp.where(valid[:, None, None, :], s, -1e30)
-        attn = jax.nn.softmax(s, axis=-1).astype(x.dtype)
-        ctx_lat = jnp.einsum("bhqs,bsl->bqhl", attn, cc)     # (B,1,H,lora)
+        ctx_lat = plan.attend_decode_latent(q_lat, q_rope, new_cache,
+                                            cache_pos, scale=scale,
+                                            use_pallas=opts.use_pallas)
         o = jnp.einsum("bqhl,lhv->bqhv", ctx_lat, wv)
     else:
-        if cache is not None:  # prefill: fill latent cache (maybe at offset)
-            off = 0 if start_pos is None else start_pos
-            new_cache = {
-                "ckv": lax.dynamic_update_slice_in_dim(cache["ckv"], ckv,
-                                                       off, 1),
-                "krope": lax.dynamic_update_slice_in_dim(cache["krope"],
-                                                         k_rope, off, 1)}
-        if start_pos is None:
-            src_ckv, src_rope, skv, q_off = ckv, k_rope, sq, 0
-        else:
-            # chunk: attend over the whole cached latent prefix
-            src_ckv, src_rope = new_cache["ckv"], new_cache["krope"]
+        if cache is not None and start_pos is not None:
+            # chunk: write at the offset, attend over the whole cached
+            # latent prefix (the plan's full-precision view)
+            new_cache, view = plan.write_chunk(
+                cache, {"ckv": ckv, "krope": k_rope}, start_pos, prompt_len)
+            src_ckv, src_rope = view["ckv"], view["krope"]
             skv, q_off = src_ckv.shape[1], start_pos
+        else:
+            if cache is not None:   # whole prefill: fill the latent cache
+                new_cache = plan.write_prefill(
+                    cache, {"ckv": ckv, "krope": k_rope}, prompt_len)
+            src_ckv, src_rope, skv, q_off = ckv, k_rope, sq, 0
         kv = apply_linear(p["kv_b"], src_ckv, **kw).reshape(b, skv, h,
                                                             nope + vd)
         k_nope, v = kv[..., :nope], kv[..., nope:]

@@ -1,0 +1,417 @@
+"""CachePlan — the declarative execution-plan seam for every KV-cache family.
+
+The serve stack grew three parallel cache layouts: plain GQA K/V pools,
+int8-quantized GQA pools (:mod:`repro.quant.kv`), and the MLA latent
+cache — and :mod:`repro.layers.attention` dispatched between them by
+sniffing raw dict keys (``"k"`` vs ``"k_q"``/``"k_scale"`` vs ``"ckv"``)
+in three places per segment kind.  Every new family multiplied the
+branching, and the byte accounting in :mod:`repro.serve.pool` and
+:mod:`repro.core.cost_model` re-derived the layouts by hand.
+
+A :class:`CachePlan` is the cache twin of :class:`repro.layers.plan.
+LinearPlan`: one plan per attention layer declaring
+
+* **family** — ``gqa_f32 | gqa_int8 | mla_latent | mla_latent_int8``
+  (``*_f32``/unsuffixed families hold the model dtype, f32 *or* bf16;
+  the name records "full width");
+* **leaves** — per-leaf :class:`CacheLeafSpec` (shape template, dtype,
+  which axis is the sequence axis, and the quantized-pair ref tying a
+  ``*_q`` value leaf to its ``*_scale`` row);
+* **bytes** — ``bytes_per_token`` (per-position bytes of one stream),
+  ``bytes_per_slot`` (per-slot constants: the f32 scale rows) and
+  ``bytes_per_step(slots, seq)`` (the full-pool decode read) — the
+  single source of truth behind :class:`repro.serve.pool.KVPoolManager`
+  accounting and the roofline's ``kv_bytes`` term;
+* **executors** — the write path for all three segment kinds
+  (:meth:`write_prefill`, :meth:`write_chunk`, :meth:`write_decode`)
+  and the cache-coupled decode attention (:meth:`attend_decode` for GQA
+  families, :meth:`attend_decode_latent` for the MLA absorbed form,
+  which dispatches the fused int8 kernels behind the shared
+  ``ops.kernel_fits`` gate).
+
+``apply_attention`` / ``apply_mla`` are thin executors over the plan:
+they own projections, RoPE, and the prefill softmax (which runs on the
+full-precision values computed in-layer, never on the cache), while the
+plan owns every layout-dependent decision.  :func:`plan_from_cache` is
+the ONE place left that classifies a cache dict by its keys — the
+fallback when a caller does not thread a plan explicitly.
+
+Plans are static metadata (no array refs), cached per geometry, and safe
+to close over inside ``jax.jit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.quant import kv as kvq
+
+PyTree = Any
+
+FAMILY_GQA = "gqa_f32"
+FAMILY_GQA_INT8 = "gqa_int8"
+FAMILY_MLA = "mla_latent"
+FAMILY_MLA_INT8 = "mla_latent_int8"
+
+FAMILIES = (FAMILY_GQA, FAMILY_GQA_INT8, FAMILY_MLA, FAMILY_MLA_INT8)
+
+#: sequence-axis position (from the right) of every per-position cache
+#: leaf, by key — K/V pools are (..., S, KH, hd), latents (..., S, r).
+#: Scale rows have no sequence axis.  The pool's slot scatter and the
+#: plans' leaf specs both read this one map.
+SEQ_AXIS: dict[str, int] = {
+    "k": -3, "v": -3, "k_q": -3, "v_q": -3,
+    "ckv": -2, "krope": -2, "ckv_q": -2, "krope_q": -2,
+}
+
+_NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheLeafSpec:
+    """One leaf of a per-layer cache dict.  Static metadata only."""
+
+    name: str                       # cache key ("k", "k_q", "ckv_scale", ...)
+    tail_shape: tuple[int, ...]     # dims after (batch[, seq]): (KH, D) / (r,)
+    dtype: Any
+    seq_axis: int | None            # from the right; None = per-slot constant
+    scale_of: str | None = None     # "k_scale" -> scales the "k_q" leaf
+
+    def shape(self, batch: int, seq_len: int) -> tuple[int, ...]:
+        if self.seq_axis is None:
+            return (batch, *self.tail_shape)
+        return (batch, seq_len, *self.tail_shape)
+
+    @property
+    def bytes_per_position(self) -> int:
+        """Bytes one position of one stream occupies (0 for scale rows)."""
+        if self.seq_axis is None:
+            return 0
+        return int(math.prod(self.tail_shape)) * jnp.dtype(self.dtype).itemsize
+
+    @property
+    def bytes_per_slot(self) -> int:
+        """Per-slot constant bytes (scale rows; 0 for per-position leaves)."""
+        if self.seq_axis is not None:
+            return 0
+        return int(math.prod(self.tail_shape)) * jnp.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePlan:
+    """How one attention layer's cache is laid out, costed, and executed."""
+
+    family: str
+    leaves: tuple[CacheLeafSpec, ...]
+
+    # -- contract -----------------------------------------------------------
+
+    @property
+    def quantized(self) -> bool:
+        return self.family in (FAMILY_GQA_INT8, FAMILY_MLA_INT8)
+
+    @property
+    def mla(self) -> bool:
+        return self.family in (FAMILY_MLA, FAMILY_MLA_INT8)
+
+    def leaf(self, name: str) -> CacheLeafSpec:
+        for l in self.leaves:
+            if l.name == name:
+                return l
+        raise KeyError(name)
+
+    @property
+    def quant_pairs(self) -> dict[str, str]:
+        """``{value_leaf: scale_leaf}`` refs for the quantized leaves."""
+        return {l.scale_of: l.name for l in self.leaves if l.scale_of}
+
+    # -- construction -------------------------------------------------------
+
+    def spec(self, batch: int, seq_len: int) -> dict:
+        return {l.name: jax.ShapeDtypeStruct(l.shape(batch, seq_len), l.dtype)
+                for l in self.leaves}
+
+    def init(self, batch: int, seq_len: int) -> dict:
+        """Zero-initialized cache (zero scales dequantize to zeros)."""
+        return {l.name: jnp.zeros(l.shape(batch, seq_len), l.dtype)
+                for l in self.leaves}
+
+    # -- accounting (single source of truth for pool / roofline) ------------
+
+    @property
+    def bytes_per_token(self) -> int:
+        """Per-position cache bytes of ONE stream, this layer."""
+        return sum(l.bytes_per_position for l in self.leaves)
+
+    @property
+    def bytes_per_slot(self) -> int:
+        """Per-slot constant bytes (f32 scale rows), this layer."""
+        return sum(l.bytes_per_slot for l in self.leaves)
+
+    def bytes_per_step(self, slots: int, seq_len: int) -> int:
+        """HBM bytes this layer's pool streams per decode step — decode
+        reads every slot's full ``seq_len`` (masked, not skipped)."""
+        return slots * (seq_len * self.bytes_per_token + self.bytes_per_slot)
+
+    # -- write executors ----------------------------------------------------
+    # ``new`` carries the layer's full-precision values under their
+    # LOGICAL names: {"k", "v"} (B, S, KH, D) for GQA families,
+    # {"ckv"} (B, S, r) + {"krope"} (B, S, rope) for MLA families
+    # (decode passes one-token values without the S axis).
+
+    def _mask_new(self, new: dict, start_pos, prompt_len) -> dict:
+        """Zero rows at absolute positions ``>= prompt_len`` (bucket-pad
+        tail) so they can neither land garbage in the pool nor inflate
+        the int8 running-max scales."""
+        if prompt_len is None:
+            return new
+        out = {}
+        for key, x in new.items():
+            sq = x.shape[1]
+            pad = (1,) * (-SEQ_AXIS[key] - 1)
+            pm = (start_pos + jnp.arange(sq) < prompt_len).reshape(
+                (1, sq, *pad))
+            out[key] = jnp.where(pm, x, 0.0)
+        return out
+
+    def write_prefill(self, cache: dict, new: dict,
+                      prompt_len: jax.Array | None = None) -> dict:
+        """Whole-prompt write at position 0 (quantize-on-insert for the
+        int8 families, one-shot scales over the real prompt)."""
+        if not self.quantized:
+            return {k: lax.dynamic_update_slice_in_dim(cache[k], v, 0, 1)
+                    for k, v in new.items()}
+        new = self._mask_new(new, 0, prompt_len)
+        out = {}
+        for key, x in new.items():
+            q, scale = kvq.quantize_kv_prefill(x)
+            out[key + "_q"] = lax.dynamic_update_slice_in_dim(
+                cache[key + "_q"], q, 0, 1)
+            out[key + "_scale"] = scale
+        return out
+
+    def write_chunk(self, cache: dict, new: dict, start_pos: jax.Array,
+                    prompt_len: jax.Array | None = None
+                    ) -> tuple[dict, dict]:
+        """Chunk write at a sequence offset.  Returns ``(new_cache,
+        views)`` where ``views`` holds the full-precision whole-pool
+        attend views under the logical names (the written pool for
+        full-width families, the dequantized pool for int8 — serve
+        stages chunked prompts full-precision instead, for exactness).
+        Pad rows beyond ``prompt_len`` (the chunk's real end) are zeroed
+        at the write for BOTH dtypes: a later chunk's bucket is not
+        guaranteed to overwrite them before they become attendable.
+        """
+        new = self._mask_new(new, start_pos, prompt_len)
+        if not self.quantized:
+            out = {k: lax.dynamic_update_slice_in_dim(cache[k], v,
+                                                      start_pos, 1)
+                   for k, v in new.items()}
+            return out, out
+        out, views = {}, {}
+        for key, x in new.items():
+            q, scale = kvq.kv_write_chunk(cache[key + "_q"],
+                                          cache[key + "_scale"], x,
+                                          start_pos)
+            out[key + "_q"] = q
+            out[key + "_scale"] = scale
+            views[key] = kvq.dequantize_kv(q, scale, x.dtype)
+        return out, views
+
+    def write_decode(self, cache: dict, new: dict,
+                     cache_pos: jax.Array) -> dict:
+        """One-token scatter at per-slot positions ``cache_pos`` (B,).
+        ``new`` values carry no S axis: (B, KH, D) / (B, r).  Int8
+        families take the incremental running-max scale update
+        (:func:`repro.quant.kv.kv_write_token`)."""
+        bidx = jnp.arange(cache_pos.shape[0])
+        if not self.quantized:
+            return {k: cache[k].at[bidx, cache_pos].set(v)
+                    for k, v in new.items()}
+        out = {}
+        for key, x in new.items():
+            q, scale = kvq.kv_write_token(cache[key + "_q"],
+                                          cache[key + "_scale"], x,
+                                          cache_pos)
+            out[key + "_q"] = q
+            out[key + "_scale"] = scale
+        return out
+
+    # -- decode attention (the cache-coupled read) --------------------------
+
+    def attend_decode(self, q: jax.Array, cache: dict,
+                      cache_pos: jax.Array, *, softcap: float = 0.0,
+                      use_pallas: bool = False) -> jax.Array:
+        """GQA decode: one query row vs the whole pool.  q (B, 1, H, D)
+        -> (B, 1, H, D).  Int8 pools run the fused kernel under
+        ``use_pallas`` (VMEM-fit fallback inside the ops wrapper) or the
+        jnp dequant oracle — a full-precision pool copy never lands in
+        HBM on the kernel path."""
+        if self.mla:
+            raise ValueError("latent families attend via "
+                             "attend_decode_latent")
+        if not self.quantized:
+            skv = cache["k"].shape[1]
+            valid = jnp.arange(skv)[None, :] <= cache_pos[:, None]  # (B,S)
+            return gqa_decode_attention(q, cache["k"], cache["v"], valid,
+                                        softcap)
+        from repro.kernels import ops as kops
+        from repro.kernels import ref as kref
+        fn = kops.decode_attention_q if use_pallas \
+            else kref.decode_attention_q_ref
+        return fn(q, cache["k_q"], cache["k_scale"], cache["v_q"],
+                  cache["v_scale"], cache_pos, softcap=softcap)
+
+    def attend_decode_latent(self, q_lat: jax.Array, q_rope: jax.Array,
+                             cache: dict, cache_pos: jax.Array, *,
+                             scale: float,
+                             use_pallas: bool = False) -> jax.Array:
+        """MLA absorbed decode: latent-space queries vs the latent pool.
+        q_lat (B, 1, H, r); q_rope (B, 1, H, rope) -> context latents
+        (B, 1, H, r) — attention runs entirely against the cached
+        latents, per-head K/V are never materialized.  Int8 pools run
+        the fused latent kernel (ckv/krope scales folded into the
+        latent query rows, ckv scales into the context output) under
+        ``use_pallas``, else the dequant oracle."""
+        if not self.mla:
+            raise ValueError("GQA families attend via attend_decode")
+        if not self.quantized:
+            cc, cr = cache["ckv"], cache["krope"]
+            s = (jnp.einsum("bqhl,bsl->bhqs", q_lat, cc,
+                            preferred_element_type=jnp.float32)
+                 + jnp.einsum("bqhr,bsr->bhqs", q_rope, cr,
+                              preferred_element_type=jnp.float32)) * scale
+            valid = jnp.arange(cc.shape[1])[None, :] <= cache_pos[:, None]
+            s = jnp.where(valid[:, None, None, :], s, _NEG_INF)
+            attn = jax.nn.softmax(s, axis=-1).astype(q_lat.dtype)
+            return jnp.einsum("bhqs,bsl->bqhl", attn, cc)
+        from repro.kernels import ops as kops
+        from repro.kernels import ref as kref
+        fn = kops.decode_attention_latent_q if use_pallas \
+            else kref.decode_attention_latent_q_ref
+        return fn(q_lat, q_rope, cache["ckv_q"], cache["ckv_scale"],
+                  cache["krope_q"], cache["krope_scale"], cache_pos,
+                  scale=scale)
+
+
+def gqa_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                         valid: jax.Array, softcap: float) -> jax.Array:
+    """Full-width GQA decode attention: q (B, 1, H, D) vs k/v
+    (B, S, KH, D), slot validity (B, S) masked into the f32 logits."""
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    qg = q.reshape(b, sq, kh, h // kh, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * (1.0 / math.sqrt(hd))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(valid[:, None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return o.reshape(b, sq, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# Plan construction (cached — one plan object per geometry)
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: dict[tuple, CachePlan] = {}
+
+
+def _check_quantize(quantize: str | None) -> bool:
+    if quantize in (None, "none"):
+        return False
+    if quantize not in kvq.KV_MODES:
+        raise ValueError(
+            f"unknown kv quant mode {quantize!r} (want one of "
+            f"{kvq.KV_MODES})")
+    return True
+
+
+def gqa_plan(num_kv_heads: int, head_dim: int, dtype,
+             quantize: str | None = None) -> CachePlan:
+    """The plan for one GQA/MHA attention layer's K/V cache."""
+    q = _check_quantize(quantize)
+    key = ("gqa", num_kv_heads, head_dim, jnp.dtype(dtype).name, q)
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        tail = (num_kv_heads, head_dim)
+        if q:
+            leaves = []
+            for name in ("k", "v"):
+                leaves.append(CacheLeafSpec(name + "_q", tail, jnp.int8,
+                                            SEQ_AXIS[name + "_q"]))
+                leaves.append(CacheLeafSpec(name + "_scale", tail,
+                                            jnp.float32, None,
+                                            scale_of=name + "_q"))
+            plan = CachePlan(FAMILY_GQA_INT8, tuple(leaves))
+        else:
+            plan = CachePlan(FAMILY_GQA, tuple(
+                CacheLeafSpec(n, tail, jnp.dtype(dtype), SEQ_AXIS[n])
+                for n in ("k", "v")))
+        _PLAN_CACHE[key] = plan
+    return plan
+
+
+def mla_plan(kv_lora_rank: int, qk_rope_dim: int, dtype,
+             quantize: str | None = None) -> CachePlan:
+    """The plan for one MLA layer's latent cache.  The latent *is* the
+    rank-compressed K/V factor; the int8 family compresses it again with
+    per-(slot, channel) scales (no head axis — all heads share the one
+    latent stream)."""
+    q = _check_quantize(quantize)
+    key = ("mla", kv_lora_rank, qk_rope_dim, jnp.dtype(dtype).name, q)
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        dims = {"ckv": (kv_lora_rank,), "krope": (qk_rope_dim,)}
+        if q:
+            leaves = []
+            for name, tail in dims.items():
+                leaves.append(CacheLeafSpec(name + "_q", tail, jnp.int8,
+                                            SEQ_AXIS[name + "_q"]))
+                leaves.append(CacheLeafSpec(name + "_scale", tail,
+                                            jnp.float32, None,
+                                            scale_of=name + "_q"))
+            plan = CachePlan(FAMILY_MLA_INT8, tuple(leaves))
+        else:
+            plan = CachePlan(FAMILY_MLA, tuple(
+                CacheLeafSpec(n, tail, jnp.dtype(dtype), SEQ_AXIS[n])
+                for n, tail in dims.items()))
+        _PLAN_CACHE[key] = plan
+    return plan
+
+
+def build_cache_plan(cfg, dtype, kv_quantize: str | None = None) -> CachePlan:
+    """The per-attention-layer plan for a model config (``cfg.mla``
+    selects the latent families)."""
+    if cfg.mla:
+        return mla_plan(cfg.kv_lora_rank, cfg.qk_rope_dim, dtype,
+                        kv_quantize)
+    return gqa_plan(cfg.num_kv_heads, cfg.resolved_head_dim, dtype,
+                    kv_quantize)
+
+
+def plan_from_cache(cache: dict, dtype=jnp.float32) -> CachePlan:
+    """Classify a per-layer cache dict into its plan — the ONE remaining
+    key-sniffing point, used when a caller has no plan threaded (direct
+    layer-level use; the serve stack always threads plans).  Geometry
+    comes from the leaf shapes; ``dtype`` is only needed for int8
+    families (full-width leaves carry theirs)."""
+    if "ckv_q" in cache:
+        return mla_plan(cache["ckv_q"].shape[-1], cache["krope_q"].shape[-1],
+                        dtype, "int8")
+    if "ckv" in cache:
+        return mla_plan(cache["ckv"].shape[-1], cache["krope"].shape[-1],
+                        cache["ckv"].dtype, None)
+    if "k_q" in cache:
+        kh, hd = cache["k_q"].shape[-2:]
+        return gqa_plan(kh, hd, dtype, "int8")
+    if "k" in cache:
+        kh, hd = cache["k"].shape[-2:]
+        return gqa_plan(kh, hd, cache["k"].dtype, None)
+    raise ValueError(f"not a KV cache dict: {sorted(cache)}")

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.layers import attention as attn
+from repro.layers import cache as cache_mod
 from repro.layers import ssm as ssm_mod
 from repro.layers.mlp import apply_mlp, init_mlp
 from repro.layers.moe import MoEOpts, apply_moe, init_moe
@@ -66,13 +67,15 @@ def init_block(pb: ParamBuilder, cfg, *, moe: bool) -> None:
 
 def apply_block(p: dict, x: jax.Array, cfg, *, positions, cache=None,
                 cache_pos=None, prompt_len=None, start_pos=None,
-                opts: BlockOpts = BlockOpts()
+                cache_plan=None, opts: BlockOpts = BlockOpts()
                 ) -> tuple[jax.Array, Any, jax.Array]:
     """Pre-norm block.  Returns (x', new_cache, aux_loss).
 
     ``start_pos`` (scalar) marks a chunked prefill: x covers prompt
     positions ``[start_pos, start_pos + S)`` and K/V land at the offset
     in the existing cache slot (see ``attention.apply_attention``).
+    ``cache_plan`` is the layer's :class:`repro.layers.cache.CachePlan`
+    (classified from the cache keys when None).
     """
     _, norm = _norm_fns(cfg)
     causal = not cfg.is_encoder
@@ -80,7 +83,8 @@ def apply_block(p: dict, x: jax.Array, cfg, *, positions, cache=None,
     if "mla" in p:
         a, new_cache = attn.apply_mla(
             p["mla"], h, cfg, positions=positions, causal=causal,
-            cache=cache, cache_pos=cache_pos, start_pos=start_pos,
+            cache=cache, cache_pos=cache_pos, prompt_len=prompt_len,
+            start_pos=start_pos, plan=cache_plan,
             opts=opts.attn(cfg.attn_logit_softcap))
     elif "merged" in p:
         a = attn.apply_merged_attention(
@@ -93,7 +97,8 @@ def apply_block(p: dict, x: jax.Array, cfg, *, positions, cache=None,
             num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
             rope_theta=cfg.rope_theta, positions=positions, causal=causal,
             cache=cache, cache_pos=cache_pos, prompt_len=prompt_len,
-            start_pos=start_pos, opts=opts.attn(cfg.attn_logit_softcap))
+            start_pos=start_pos, plan=cache_plan,
+            opts=opts.attn(cfg.attn_logit_softcap))
     x = x + a
     h = norm(p["mlp_norm"], x, cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)
@@ -111,20 +116,17 @@ def apply_block(p: dict, x: jax.Array, cfg, *, positions, cache=None,
 
 def block_cache_spec(cfg, batch: int, seq_len: int, dtype,
                      kv_quantize: str | None = None) -> dict:
-    # MLA's latent cache is already the compressed representation —
-    # kv_quantize applies to the plain GQA K/V pool only.
-    if cfg.mla:
-        return attn.mla_cache_spec(batch, seq_len, cfg, dtype)
-    return attn.kv_cache_spec(batch, seq_len, cfg.num_kv_heads,
-                              cfg.resolved_head_dim, dtype, kv_quantize)
+    # One declarative seam for every family: gqa_f32 | gqa_int8 |
+    # mla_latent | mla_latent_int8 (the MLA latent — itself the paper's
+    # rank-compressed K/V factor — quantizes like any other pool now).
+    return cache_mod.build_cache_plan(cfg, dtype,
+                                      kv_quantize).spec(batch, seq_len)
 
 
 def init_block_cache(cfg, batch: int, seq_len: int, dtype,
                      kv_quantize: str | None = None) -> dict:
-    if cfg.mla:
-        return attn.init_mla_cache(batch, seq_len, cfg, dtype)
-    return attn.init_kv_cache(batch, seq_len, cfg.num_kv_heads,
-                              cfg.resolved_head_dim, dtype, kv_quantize)
+    return cache_mod.build_cache_plan(cfg, dtype,
+                                      kv_quantize).init(batch, seq_len)
 
 
 # ---------------------------------------------------------------------------

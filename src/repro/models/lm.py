@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
-from repro.layers import attention as attn_mod
+from repro.layers import cache as cache_mod
 from repro.layers import ssm as ssm_mod
 from repro.layers.norm import init_layer_norm, init_rms_norm, layer_norm, rms_norm
 from repro.layers.param import (
@@ -184,8 +184,8 @@ class LMModel:
 
     def trunk(self, params: PyTree, x: jax.Array, *, positions, cache=None,
               cache_pos=None, batch=None, opts=B.BlockOpts(),
-              remat: str = "none", prompt_len=None, start_pos=None
-              ) -> tuple[jax.Array, PyTree, jax.Array]:
+              remat: str = "none", prompt_len=None, start_pos=None,
+              cache_plan=None) -> tuple[jax.Array, PyTree, jax.Array]:
         """Run all blocks. Returns (x, new_cache, aux_loss_sum).
 
         ``prompt_len`` (scalar, prefill only) marks how many leading
@@ -197,7 +197,11 @@ class LMModel:
         covers prompt positions ``[start_pos, start_pos + S)`` and each
         block's K/V lands at the offset in the existing cache slot.
         Attention-cached families only (the serve scheduler gates
-        chunked admission accordingly)."""
+        chunked admission accordingly).
+
+        ``cache_plan`` is the per-layer :class:`repro.layers.cache.
+        CachePlan` the serve runner threads down; classified from the
+        cache keys when None (direct callers)."""
         cfg = self.cfg
         f = cfg.family
         decode = cache_pos is not None
@@ -220,7 +224,8 @@ class LMModel:
                 h, nc, a = B.apply_block(p_l, h, cfg, positions=positions,
                                          cache=c_l, cache_pos=cache_pos,
                                          prompt_len=prompt_len,
-                                         start_pos=start_pos, opts=opts)
+                                         start_pos=start_pos,
+                                         cache_plan=cache_plan, opts=opts)
                 return (h, aux + a), nc
             (x, aux), ncs = lax.scan(wrap(body), (x, aux_total * 0),
                                      (stack_p, stack_cache))
@@ -232,7 +237,7 @@ class LMModel:
                 x, nc0, a0 = B.apply_block(
                     params["first"], x, cfg, positions=positions, cache=c0,
                     cache_pos=cache_pos, prompt_len=prompt_len,
-                    start_pos=start_pos, opts=opts)
+                    start_pos=start_pos, cache_plan=cache_plan, opts=opts)
                 aux_total = aux_total + a0
                 if new_cache is not None:
                     new_cache["first"] = nc0
@@ -283,7 +288,8 @@ class LMModel:
                         hh, nc, a = B.apply_block(
                             p_l, hh, cfg, positions=positions, cache=c_l,
                             cache_pos=cache_pos, prompt_len=prompt_len,
-                            start_pos=start_pos, opts=opts)
+                            start_pos=start_pos, cache_plan=cache_plan,
+                            opts=opts)
                         return (hh, aa + a), nc
                     (h, aux), ncs = lax.scan(wrap(inner), (h, aux), (sp, sc))
                     h = B.apply_cross_block(cp, h, cfg, kv=kv_l, opts=opts)
@@ -315,13 +321,14 @@ class LMModel:
         elif f == "hybrid":
             x, new_cache, aux_total = self._hybrid_trunk(
                 params, x, positions=positions, cache=cache,
-                cache_pos=cache_pos, opts=opts, wrap=wrap)
+                cache_pos=cache_pos, cache_plan=cache_plan, opts=opts,
+                wrap=wrap)
         else:
             raise ValueError(f)
         return x, new_cache, aux_total
 
     def _hybrid_trunk(self, params, x, *, positions, cache, cache_pos, opts,
-                      wrap):
+                      wrap, cache_plan=None):
         cfg = self.cfg
         every = cfg.hybrid_attn_every
         ng, nt = self.n_groups, self.n_trailing
@@ -355,7 +362,7 @@ class LMModel:
             h, nss = lax.scan(wrap(inner), h, (gp, gs))
             h, nc, a2 = B.apply_block(shared_p, h, cfg, positions=positions,
                                       cache=sc, cache_pos=cache_pos,
-                                      opts=opts)
+                                      cache_plan=cache_plan, opts=opts)
             return (h, a + a2), (nss, nc)
 
         if cache is None:
@@ -505,10 +512,33 @@ class LMModel:
         return self._cache_tree(batch, seq_len,
                                 lambda s, d: jnp.zeros(s, d), kv_quantize)
 
+    def cache_plan(self, kv_quantize: str | None = None
+                   ) -> cache_mod.CachePlan:
+        """The per-attention-layer :class:`repro.layers.cache.CachePlan`
+        (one geometry for all of this model's attention layers)."""
+        return cache_mod.build_cache_plan(self.cfg, self.dtype, kv_quantize)
+
+    def cache_plans(self, kv_quantize: str | None = None
+                    ) -> list[cache_mod.CachePlan]:
+        """One plan per cached attention layer — the declarative source
+        the serve pool and roofline derive ALL byte accounting from
+        (recurrent SSM state is not a per-token KV stream: no plans)."""
+        cfg = self.cfg
+        f = cfg.family
+        if f in ("dense", "moe"):
+            n = cfg.num_layers
+        elif f == "vlm":
+            n = self.n_super * self.n_self_per
+        elif f == "hybrid":
+            n = self.n_groups
+        else:                     # ssm / encoder: no attention KV pools
+            return []
+        return [self.cache_plan(kv_quantize)] * n
+
     # -- prefill / decode -------------------------------------------------------
 
     def prefill(self, params: PyTree, batch: dict, cache: PyTree, *,
-                last_pos: jax.Array | None = None,
+                last_pos: jax.Array | None = None, cache_plan=None,
                 opts: B.BlockOpts = B.BlockOpts()
                 ) -> tuple[jax.Array, PyTree]:
         """Fill the cache with a full prompt; returns (last-pos logits, cache).
@@ -528,7 +558,8 @@ class LMModel:
         prompt_len = None if last_pos is None else last_pos + 1
         x, new_cache, _ = self.trunk(params, x, positions=positions,
                                      cache=cache, batch=batch, opts=opts,
-                                     prompt_len=prompt_len)
+                                     prompt_len=prompt_len,
+                                     cache_plan=cache_plan)
         if last_pos is None:
             xl = x[:, -1:, :]
         else:
@@ -538,7 +569,7 @@ class LMModel:
 
     def prefill_chunk(self, params: PyTree, batch: dict, cache: PyTree, *,
                       start_pos: jax.Array, prompt_len: jax.Array,
-                      opts: B.BlockOpts = B.BlockOpts()
+                      cache_plan=None, opts: B.BlockOpts = B.BlockOpts()
                       ) -> tuple[jax.Array, PyTree]:
         """Continue a prefill one chunk at a time (continuous batching).
 
@@ -571,7 +602,8 @@ class LMModel:
         x, new_cache, _ = self.trunk(params, x, positions=positions,
                                      cache=cache, batch=batch, opts=opts,
                                      prompt_len=prompt_len,
-                                     start_pos=start_pos)
+                                     start_pos=start_pos,
+                                     cache_plan=cache_plan)
         lp = jnp.clip(prompt_len - 1 - start_pos, 0, c - 1)
         xl = lax.dynamic_slice_in_dim(x, lp, 1, axis=1)
         logits = self.logits(params, xl, opts)
@@ -579,7 +611,7 @@ class LMModel:
 
     def decode_step(self, params: PyTree, tokens: jax.Array,
                     positions: jax.Array, cache: PyTree, *,
-                    opts: B.BlockOpts = B.BlockOpts()
+                    cache_plan=None, opts: B.BlockOpts = B.BlockOpts()
                     ) -> tuple[jax.Array, PyTree]:
         """One token per sequence. tokens (B,1); positions (B,) absolute."""
         cfg = self.cfg
@@ -590,6 +622,7 @@ class LMModel:
         pos2d = positions[:, None]
         x, new_cache, _ = self.trunk(params, x, positions=pos2d,
                                      cache=cache, cache_pos=positions,
-                                     batch=batch, opts=opts)
+                                     batch=batch, opts=opts,
+                                     cache_plan=cache_plan)
         logits = self.logits(params, x, opts)
         return logits, new_cache

@@ -36,6 +36,14 @@ Symmetric, no zero point: ``x ~= q * scale`` with ``q in [-127, 127]``.
 Prefill quantizes on insert: the whole prompt's K/V is reduced over its
 sequence axis in one shot, so the cache pool and the engine's
 ``_insert_slot`` scatter stay int8 throughout — no f32 staging copy.
+
+The write/quantize primitives are *rank-polymorphic over the tail*: the
+same running-max math that handles GQA pools ``(B, S, KH, D)`` with
+scales ``(B, KH, D)`` handles the MLA latent cache ``(B, S, r)`` with
+per-(slot, channel) scales ``(B, r)`` — the ``mla_latent_int8`` family
+of :mod:`repro.layers.cache` reuses ``quantize_kv_prefill`` /
+``kv_write_token`` / ``kv_write_chunk`` verbatim on its ``ckv`` /
+``krope`` leaves.
 """
 from __future__ import annotations
 
@@ -84,8 +92,9 @@ def init_kv_cache_q(batch: int, seq_len: int, num_kv_heads: int,
 
 
 def is_quantized_kv(cache: Any) -> bool:
-    """Does this per-layer cache dict hold int8 K/V?"""
-    return isinstance(cache, dict) and "k_q" in cache
+    """Does this per-layer cache dict hold int8 K/V (or int8 MLA
+    latents)?"""
+    return isinstance(cache, dict) and ("k_q" in cache or "ckv_q" in cache)
 
 
 # ---------------------------------------------------------------------------
@@ -158,38 +167,47 @@ def quantize_kv_tree(cache: PyTree, prompt_len: jax.Array | None = None
     """Quantize a full-precision stream cache into the int8 pool layout.
 
     Walks the cache pytree and replaces every GQA KV dict ``{"k","v"}``
-    (leaves ``(..., S, KH, D)`` — works on both per-layer and stacked
-    ``(L, B, S, KH, D)`` caches) with the quantized
-    ``{"k_q","k_scale","v_q","v_scale"}`` layout; non-KV state passes
-    through untouched.  ``prompt_len`` masks positions ``>= prompt_len``
-    (the right-padded prefill tail) out of both the values and the
-    absmax scale reduction, so the result is bit-identical to the
-    quantize-on-insert whole-prefill path.
+    (leaves ``(..., S, KH, D)``, sequence axis -3) and every MLA latent
+    dict ``{"ckv","krope"}`` (leaves ``(..., S, r)``, sequence axis -2)
+    with the quantized ``*_q``/``*_scale`` layout — works on both
+    per-layer and stacked ``(L, B, S, ...)`` caches; non-KV state
+    passes through untouched.  ``prompt_len`` masks positions
+    ``>= prompt_len`` (the right-padded prefill tail) out of both the
+    values and the absmax scale reduction, so the result is
+    bit-identical to the quantize-on-insert whole-prefill path.
 
     The chunked-prefill scheduler stages an in-flight prompt at full
     precision (chunk attention over the exact K/V prefix, so chunked
     greedy == whole-prefill greedy) and calls this once at slot insert
     — the stacked-cache one-shot twin of :func:`quantize_kv_prefill`.
     """
-    def one(x):
+    def one(x, seq_axis):
         xf = x.astype(jnp.float32)
         if prompt_len is not None:
-            s = x.shape[-3]
-            mask = (jnp.arange(s) < prompt_len).reshape((s, 1, 1))
+            s = x.shape[seq_axis]
+            mask = (jnp.arange(s) < prompt_len).reshape(
+                (s,) + (1,) * (-seq_axis - 1))
             xf = jnp.where(mask, xf, 0.0)
-        scale = jnp.max(jnp.abs(xf), axis=-3) / INT8_QMAX
-        sc = jnp.expand_dims(scale, -3)
+        scale = jnp.max(jnp.abs(xf), axis=seq_axis) / INT8_QMAX
+        sc = jnp.expand_dims(scale, seq_axis)
         safe = jnp.where(sc > 0, sc, 1.0)
         q = jnp.clip(jnp.round(xf / safe), -INT8_QMAX, INT8_QMAX)
         return q.astype(jnp.int8), scale
 
+    def pair(t, names, seq_axis):
+        out = {}
+        for name in names:
+            q, scale = one(t[name], seq_axis)
+            out[name + "_q"] = q
+            out[name + "_scale"] = scale
+        return out
+
     def rec(t):
         if isinstance(t, dict):
             if set(t) == {"k", "v"}:
-                k_q, k_scale = one(t["k"])
-                v_q, v_scale = one(t["v"])
-                return {"k_q": k_q, "k_scale": k_scale,
-                        "v_q": v_q, "v_scale": v_scale}
+                return pair(t, ("k", "v"), -3)
+            if set(t) == {"ckv", "krope"}:
+                return pair(t, ("ckv", "krope"), -2)
             return {key: rec(v) for key, v in t.items()}
         return t
 
@@ -242,6 +260,11 @@ def kv_bytes_per_step(slots: int, seq_len: int, num_kv_heads: int,
     are masked, not skipped), so the per-step read is the whole pool:
     values at 1 byte/elt for int8 (plus the f32 scale rows) vs
     ``dtype_bytes`` for the unquantized pool.
+
+    Analytic GQA convenience only — the serve pool and roofline derive
+    their numbers from :meth:`repro.layers.cache.CachePlan.
+    bytes_per_step` (which covers the MLA latent families too); the
+    plan-contract tests cross-check the two.
     """
     n = slots * seq_len * num_kv_heads * head_dim
     if quantize in (None, "none"):

@@ -11,20 +11,23 @@ responsibility each):
   never head-of-line-block live streams the way the old blocking
   per-admit prefill did.
 * :class:`repro.serve.pool.KVPoolManager` — the cache pytree
-  ``(..., B_slots, S_max, ...)`` (f32/bf16 or int8 via
-  :mod:`repro.quant.kv`), slot allocation, per-token byte accounting,
+  ``(..., B_slots, S_max, ...)`` in any :class:`repro.layers.cache.
+  CachePlan` family (``gqa_f32 | gqa_int8 | mla_latent |
+  mla_latent_int8``), slot allocation, plan-derived byte accounting,
   byte-budget admission, and **KV-pressure preemption**: the youngest
   stream is evicted and requeued with its generated prefix
   (bit-deterministic under greedy — chunked prefill == whole prefill
   == decode).
 * :class:`repro.serve.runner.ModelRunner` — params + every jitted step
   function behind one ``step(tokens, positions, seg_kind)`` entry
-  (``"decode"`` | ``"prefill_chunk"`` | ``"prefill"``).
+  (``"decode"`` | ``"prefill_chunk"`` | ``"prefill"``), threading the
+  right CachePlan into each segment.
 
-Chunked ("continuous") admission is the default for the dense GQA
-family; recurrent (SSM/hybrid), MoE-capacity, VLM, and MLA stacks keep
-the whole-prompt "blocking" admission path (prompt padding / chunking
-is not inert for them).  In-flight chunked prompts stage in a
+Chunked ("continuous") admission is the default for the dense family —
+plain GQA *and* MLA latent stacks (offset latent chunk writes make the
+segmented prefill exact); recurrent (SSM/hybrid), MoE-capacity, and
+VLM stacks keep the whole-prompt "blocking" admission path (prompt
+chunking is not inert for them).  In-flight chunked prompts stage in a
 full-precision batch=1 cache and land in the pool in one scatter
 (quantizing on insert for int8 pools), so chunked greedy output streams
 match whole-prefill exactly for BOTH cache dtypes.
@@ -72,11 +75,12 @@ class ServeEngine:
     #: lets pads displace real tokens — those families prefill unpadded.
     _BUCKET_FAMILIES = ("dense", "vlm")
 
-    #: families served with chunked continuous admission: plain GQA
-    #: attention stacks, where a chunk's K/V lands at a sequence offset
-    #: and causality makes the segmented prefill exact.  VLM (image KV
-    #: precompute), MLA, MoE capacity routing, and recurrent state keep
-    #: blocking whole-prompt admission.
+    #: families served with chunked continuous admission: attention
+    #: stacks where a chunk's K/V (or MLA latents) lands at a sequence
+    #: offset and absolute causality makes the segmented prefill exact.
+    #: VLM (image KV precompute), MoE capacity routing (per-chunk
+    #: expert capacity != whole-prompt capacity), and recurrent state
+    #: keep blocking whole-prompt admission.
     _CHUNK_FAMILIES = ("dense",)
 
     def __init__(self, run: RunConfig, params: PyTree, *, slots: int = 4,
@@ -90,7 +94,9 @@ class ServeEngine:
                  stats_window: int = STATS_WINDOW):
         """``quantize`` ("int8" | "fp8") quantizes the decomposed factors
         at load via :mod:`repro.quant`; ``kv_quantize`` ("int8") stores
-        the runtime KV pool quantized (:mod:`repro.quant.kv`).  Both
+        the runtime KV pool quantized (:mod:`repro.quant.kv`) — the GQA
+        K/V pool on plain attention stacks, the latent cache on MLA
+        stacks (cache family ``gqa_int8`` / ``mla_latent_int8``).  Both
         default to ``run.lrd``, as do ``prefill_chunk`` /
         ``step_token_budget`` (0 = engine defaults).
 
@@ -132,8 +138,8 @@ class ServeEngine:
                          else "blocking")
         elif admission == "continuous" and not self._supports_chunked():
             raise ValueError(
-                f"family {run.model.family!r} (mla={run.model.mla}) does "
-                "not support chunked admission; use admission='blocking'")
+                f"family {run.model.family!r} does not support chunked "
+                "admission; use admission='blocking'")
         elif admission not in ("continuous", "blocking"):
             raise ValueError(admission)
         self.admission = admission
@@ -144,7 +150,8 @@ class ServeEngine:
             or run.lrd.step_token_budget or (slots + self.prefill_chunk)
 
         self.runner = ModelRunner(self.model, params, self.opts,
-                                  max_seq=max_seq)
+                                  max_seq=max_seq,
+                                  kv_quantize=self.kv_quantize)
         self.pool = KVPoolManager(self.model, slots, max_seq,
                                   kv_quantize=self.kv_quantize,
                                   byte_budget=kv_byte_budget)
@@ -152,14 +159,17 @@ class ServeEngine:
                                    step_token_budget=self.step_token_budget)
         # Decode streams the entire KV pool (masked, not skipped) every
         # step — the runtime twin of ``weight_bytes`` in the roofline,
-        # and where kv_quantize="int8" pays.
+        # and where kv_quantize="int8" pays.  Both numbers derive from
+        # the CachePlans (layers/cache.py), never from hand-kept key
+        # lists, so every cache family is costed automatically.
         self.plan_summary["kv_bytes_per_step"] = self.pool.kv_bytes_per_step
+        if self.pool.plans:
+            self.plan_summary["kv_cache_family"] = self.pool.plans[0].family
         self.key = jax.random.PRNGKey(seed)
         self.stats: deque[dict] = deque(maxlen=stats_window)
 
     def _supports_chunked(self) -> bool:
-        return (self.run.model.family in self._CHUNK_FAMILIES
-                and not self.run.model.mla)
+        return self.run.model.family in self._CHUNK_FAMILIES
 
     # -- façade views (the pre-split engine surface) -------------------------
 

@@ -2,15 +2,20 @@
 
 The pool is the model's stacked cache pytree laid out
 ``(..., B_slots, S_max, ...)`` — one batch slot per in-flight stream,
-full-width or int8 (:mod:`repro.quant.kv`) K/V.  This manager owns the
-state side of the serve stack:
+any :class:`repro.layers.cache.CachePlan` family (full-width or int8
+GQA K/V, full-width or int8 MLA latents).  This manager owns the state
+side of the serve stack:
 
 * the cache pytree itself plus the per-slot write positions,
 * slot allocation with admission *tickets* (monotone age — KV-pressure
   preemption evicts the youngest stream first),
-* byte accounting: ``bytes_per_token`` is derived from the pool spec's
-  per-position KV leaves, ``used_bytes()`` weights it by each occupied
-  slot's logical occupancy, an optional ``byte_budget`` gates admission
+* byte accounting, derived from the model's cache plans —
+  ``CachePlan.bytes_per_token`` / ``bytes_per_step`` are the single
+  source of truth, so new cache families (the int8 MLA latent pool,
+  and whatever comes next) are costed automatically instead of being
+  silently undercounted by hand-maintained key lists.
+  ``used_bytes()`` weights per-token bytes by each occupied slot's
+  logical occupancy, an optional ``byte_budget`` gates admission
   (:meth:`can_admit`) and drives preemption (:meth:`pressure_victims`),
   and ``kv_bytes_per_step`` is the roofline's full-pool decode read,
 * the slot scatter (:meth:`insert`): a batch=1 stream cache lands in
@@ -30,30 +35,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.layers import cache as cache_mod
 from repro.quant import kv as kvq
 
 PyTree = Any
-
-#: cache leaf keys that stream from HBM every decode step (the runtime
-#: twin of weight bytes in the roofline): K/V pools, int8 pools + their
-#: scale rows, MLA latents.  SSM/conv state is recurrent, not a stream.
-KV_STEP_KEYS = ("k", "v", "k_q", "v_q", "k_scale", "v_scale",
-                "ckv", "krope")
-#: subset with a per-position sequence axis — the leaves whose bytes
-#: scale with occupancy (scale rows are per-slot constants; VLM image
-#: KV is per-image, not per generated token).
-KV_SEQ_KEYS = ("k", "v", "k_q", "v_q", "ckv", "krope")
 
 
 class KVPoolManager:
     """Slot/byte owner for one engine's KV pool."""
 
-    # Sequence-axis position (from the right) of cache leaves that hold
-    # per-position state, by leaf key: K/V pools are (..., S, KH, hd),
-    # MLA latents are (..., S, r).  Everything else (scales, SSM states,
-    # cross-attn image KV) has no prompt-length axis to mask.
-    _SEQ_AXIS = {"k": -3, "v": -3, "k_q": -3, "v_q": -3,
-                 "ckv": -2, "krope": -2}
+    # Sequence-axis position of per-position cache leaves, by key —
+    # shared with the plans (layers/cache.py owns the map).  Leaves
+    # without an entry (scales, SSM states, cross-attn image KV) have
+    # no prompt-length axis to mask.
+    _SEQ_AXIS = cache_mod.SEQ_AXIS
 
     def __init__(self, model, slots: int, max_seq: int, *,
                  kv_quantize: str | None = None,
@@ -70,20 +65,21 @@ class KVPoolManager:
         self.tickets = np.full((slots,), -1, np.int64)  # admission age; -1 free
         self._next_ticket = 0
 
-        kv_b = seq_b = 0
+        #: one CachePlan per cached attention layer — the declarative
+        #: source of ALL byte accounting (empty for recurrent models).
+        self.plans = model.cache_plans(kv_quantize)
+        #: per-position KV bytes of ONE stream across all layers
+        self.bytes_per_token = sum(p.bytes_per_token for p in self.plans)
+        #: HBM bytes the whole pool streams per decode step (masked,
+        #: not skipped — every slot's full S_max is read).  VLM
+        #: cross-attn image KV is a per-image constant stream outside
+        #: the per-token plans; it is read every step too.
+        self.kv_bytes_per_step = sum(
+            p.bytes_per_step(slots, max_seq) for p in self.plans)
         for path, leaf in jax.tree_util.tree_flatten_with_path(
                 self.cache)[0]:
-            keys = [str(getattr(p, "key", p)) for p in path]
-            n = leaf.size * leaf.dtype.itemsize
-            if keys[-1] in KV_STEP_KEYS:
-                kv_b += n
-            if keys[-1] in KV_SEQ_KEYS and "cross_kv" not in keys:
-                seq_b += n
-        #: HBM bytes the whole pool streams per decode step (masked,
-        #: not skipped — every slot's full S_max is read).
-        self.kv_bytes_per_step = kv_b
-        #: per-position KV bytes of ONE stream across all layers
-        self.bytes_per_token = seq_b / (slots * max_seq)
+            if any(str(getattr(p, "key", p)) == "cross_kv" for p in path):
+                self.kv_bytes_per_step += leaf.size * leaf.dtype.itemsize
 
         self._jit_insert = jax.jit(self._insert_slot, donate_argnums=(0,))
         self._jit_insert_q = jax.jit(self._insert_slot_quantizing,

@@ -19,6 +19,13 @@ kind compiles once per bucket, not once per prompt length; ``start_pos``
 and ``prompt_len`` ride along as traced scalars.  The chunk entry
 donates the staging cache (in-place stream growth); the whole-pool
 decode cache is NOT donated (the engine aliases it across steps).
+
+The runner threads the :class:`repro.layers.cache.CachePlan` for each
+segment's cache into the model (static metadata closed over by the
+jitted fns): the *pool* plan (``kv_quantize`` family) for decode and
+blocking whole-prefill, and the full-precision *stream* plan for
+chunked-prefill staging caches — chunk attention runs over the exact
+K/V prefix and the pool quantizes once at slot insert.
 """
 from __future__ import annotations
 
@@ -34,25 +41,32 @@ SEG_KINDS = ("decode", "prefill_chunk", "prefill")
 
 
 class ModelRunner:
-    def __init__(self, model, params: PyTree, opts, *, max_seq: int):
+    def __init__(self, model, params: PyTree, opts, *, max_seq: int,
+                 kv_quantize: str | None = None):
         self.model = model
         self.params = params
         self.opts = opts
         self.max_seq = max_seq
+        self.kv_quantize = kv_quantize
+        #: plan of the shared slot pool (and blocking-admission staging)
+        self.pool_plan = model.cache_plan(kv_quantize)
+        #: plan of a full-precision chunked-prefill staging cache
+        self.stream_plan = model.cache_plan(None)
         mdl = model
 
         def _prefill(params, batch, cache1, last_pos):
             return mdl.prefill(params, batch, cache1, last_pos=last_pos,
-                               opts=opts)
+                               cache_plan=self.pool_plan, opts=opts)
 
         def _prefill_chunk(params, batch, cache1, start_pos, prompt_len):
             return mdl.prefill_chunk(params, batch, cache1,
                                      start_pos=start_pos,
-                                     prompt_len=prompt_len, opts=opts)
+                                     prompt_len=prompt_len,
+                                     cache_plan=self.stream_plan, opts=opts)
 
         def _decode(params, tokens, positions, cache):
             return mdl.decode_step(params, tokens, positions, cache,
-                                   opts=opts)
+                                   cache_plan=self.pool_plan, opts=opts)
 
         def _sample_all(key, logits, temps):
             """One device call samples every slot: greedy argmax rows and

@@ -24,6 +24,11 @@ If the budget is smaller than the live batch, decode still runs in
 full (decode-first is strict) and prefill waits; with no live streams
 at least one bucket of prefill always proceeds, so the queue can never
 deadlock.
+
+The scheduler is family-agnostic — which families take continuous
+admission is the engine's gate (dense GQA *and* dense MLA latent
+stacks chunk; recurrent/MoE-capacity/VLM stay blocking), and cache
+layout is the :class:`repro.layers.cache.CachePlan`'s concern.
 """
 from __future__ import annotations
 

@@ -1,0 +1,460 @@
+"""CachePlan seam: plan contract per cache family, plan-derived byte
+accounting, the int8 MLA latent family end to end, and the fused latent
+decode kernel vs its oracle.
+
+The load-bearing invariants:
+
+* the plan (not hand-kept key lists) is the single source of truth for
+  cache layout and bytes — pool accounting, the engine's
+  ``kv_bytes_per_step``, and the analytic ``quant.kv`` formula all
+  agree with it;
+* an MLA stack serves end-to-end with ``kv_quantize="int8"``: greedy
+  output == the f32-latent engine, chunked-prefill admission == whole
+  prefill bit-exact, and the pool stays int8 throughout;
+* the fused latent kernel matches the dequantize-then-attend oracle to
+  1e-2 in interpret mode.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import LRDConfig, ModelConfig, ParallelConfig, \
+    RunConfig
+from repro.core import cost_model
+from repro.kernels import ops, ref
+from repro.layers import attention as attn
+from repro.layers import cache as cache_mod
+from repro.layers.param import ParamBuilder
+from repro.models.api import get_model
+from repro.quant import kv as kvq
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.pool import KVPoolManager
+
+# A dense-family MLA stack: chunked continuous admission applies (the
+# MoE-family MLA configs keep blocking admission — expert capacity
+# routing is not chunk-inert).
+MLA_CFG = ModelConfig(
+    name="mla-dense-tiny", family="dense", mla=True, num_layers=2,
+    d_model=32, num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+    q_lora_rank=0, kv_lora_rank=16, qk_rope_dim=8, qk_nope_dim=16,
+    v_head_dim=16, dtype="float32")
+
+LONG = tuple((i * 7 + 3) % 50 + 1 for i in range(21))
+
+
+@pytest.fixture(scope="module")
+def mla_setup():
+    run = RunConfig(model=MLA_CFG, parallel=ParallelConfig())
+    m = get_model(MLA_CFG)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    return run, m, params
+
+
+def _serve(eng, prompts, n=6):
+    reqs = [Request(uid=i, prompt=list(p), max_new_tokens=n)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.add_request(r)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    return [r.output for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# Plan contract: family / leaves / bytes per config
+# ---------------------------------------------------------------------------
+
+class TestPlanContract:
+    def test_gqa_f32(self):
+        plan = cache_mod.gqa_plan(2, 8, jnp.float32)
+        assert plan.family == "gqa_f32"
+        assert not plan.quantized and not plan.mla
+        assert {l.name for l in plan.leaves} == {"k", "v"}
+        assert plan.bytes_per_token == 2 * 2 * 8 * 4
+        assert plan.bytes_per_slot == 0
+        assert plan.spec(3, 16) == attn.kv_cache_spec(3, 16, 2, 8,
+                                                      jnp.float32)
+
+    def test_gqa_int8(self):
+        plan = cache_mod.gqa_plan(2, 8, jnp.float32, "int8")
+        assert plan.family == "gqa_int8"
+        assert plan.quantized
+        assert plan.quant_pairs == {"k_q": "k_scale", "v_q": "v_scale"}
+        assert plan.bytes_per_token == 2 * 2 * 8          # int8 values
+        assert plan.bytes_per_slot == 2 * 2 * 8 * 4       # f32 scale rows
+        assert plan.spec(3, 16) == kvq.kv_cache_spec_q(3, 16, 2, 8)
+
+    def test_mla_latent(self):
+        plan = cache_mod.mla_plan(16, 8, jnp.float32)
+        assert plan.family == "mla_latent"
+        assert plan.mla and not plan.quantized
+        assert plan.bytes_per_token == (16 + 8) * 4
+        assert plan.spec(1, 32) == attn.mla_cache_spec(1, 32, MLA_CFG,
+                                                       jnp.float32)
+
+    def test_mla_latent_int8(self):
+        plan = cache_mod.mla_plan(16, 8, jnp.float32, "int8")
+        assert plan.family == "mla_latent_int8"
+        assert plan.quant_pairs == {"ckv_q": "ckv_scale",
+                                    "krope_q": "krope_scale"}
+        assert plan.bytes_per_token == 16 + 8
+        assert plan.bytes_per_slot == (16 + 8) * 4
+        spec = plan.spec(2, 32)
+        assert spec["ckv_q"] == jax.ShapeDtypeStruct((2, 32, 16), jnp.int8)
+        assert spec["ckv_scale"] == jax.ShapeDtypeStruct((2, 16),
+                                                         jnp.float32)
+        init = plan.init(2, 32)
+        assert init["krope_q"].dtype == jnp.int8
+        # zero scales dequantize the zero pool to exact zeros
+        assert float(jnp.abs(kvq.dequantize_kv(
+            init["ckv_q"], init["ckv_scale"])).max()) == 0.0
+
+    def test_bytes_per_step_matches_analytic_gqa(self):
+        """The plan's pool-read figure == the analytic quant.kv formula
+        (the plan is the source of truth; the formula is the GQA twin)."""
+        for mode, dtype_bytes in ((None, 4), ("int8", 4)):
+            plan = cache_mod.gqa_plan(2, 64, jnp.float32, mode)
+            assert plan.bytes_per_step(4, 64) == kvq.kv_bytes_per_step(
+                4, 64, 2, 64, quantize=mode, dtype_bytes=dtype_bytes)
+
+    def test_build_from_config_and_cache(self):
+        gqa_cfg = registry.get("llama3.2-1b").smoke
+        plan = cache_mod.build_cache_plan(gqa_cfg, jnp.float32, "int8")
+        assert plan.family == "gqa_int8"
+        assert cache_mod.build_cache_plan(MLA_CFG, jnp.float32,
+                                          "int8").family == "mla_latent_int8"
+        # plan_from_cache round-trips every family from its leaves
+        for cfg, quant in ((gqa_cfg, None), (gqa_cfg, "int8"),
+                           (MLA_CFG, None), (MLA_CFG, "int8")):
+            p = cache_mod.build_cache_plan(cfg, jnp.float32, quant)
+            assert cache_mod.plan_from_cache(p.init(1, 8),
+                                             jnp.float32) is p
+
+    def test_unknown_mode_and_cache_raise(self):
+        with pytest.raises(ValueError):
+            cache_mod.gqa_plan(2, 8, jnp.float32, "int4")
+        with pytest.raises(ValueError):
+            cache_mod.plan_from_cache({"state": jnp.zeros((1, 2))})
+
+    def test_executor_family_guards(self):
+        gqa = cache_mod.gqa_plan(2, 8, jnp.float32)
+        mla = cache_mod.mla_plan(16, 8, jnp.float32)
+        q = jnp.zeros((1, 1, 4, 8))
+        with pytest.raises(ValueError):
+            mla.attend_decode(q, mla.init(1, 8), jnp.zeros((1,), jnp.int32))
+        with pytest.raises(ValueError):
+            gqa.attend_decode_latent(q, q, gqa.init(1, 8),
+                                     jnp.zeros((1,), jnp.int32), scale=1.0)
+
+
+class TestPlanDerivedAccounting:
+    def test_pool_bytes_from_plans(self, mla_setup):
+        run, m, params = mla_setup
+        for mode in (None, "int8"):
+            pool = KVPoolManager(m, 2, 32, kv_quantize=mode)
+            plan = m.cache_plan(mode)
+            assert len(pool.plans) == MLA_CFG.num_layers
+            assert pool.bytes_per_token \
+                == MLA_CFG.num_layers * plan.bytes_per_token
+            assert pool.kv_bytes_per_step \
+                == MLA_CFG.num_layers * plan.bytes_per_step(2, 32)
+
+    def test_latent_bytes_counted_not_undercounted(self, mla_setup):
+        """The old hand-kept key walk is gone: the engine's roofline
+        figure comes from the plans and covers the latent leaves."""
+        run, m, params = mla_setup
+        eng = ServeEngine(run, params, slots=2, max_seq=32)
+        assert eng.plan_summary["kv_bytes_per_step"] \
+            == eng.pool.kv_bytes_per_step > 0
+        assert eng.plan_summary["kv_cache_family"] == "mla_latent"
+        eng_q = ServeEngine(run, params, slots=2, max_seq=32,
+                            kv_quantize="int8")
+        assert eng_q.plan_summary["kv_cache_family"] == "mla_latent_int8"
+        ratio = (eng.plan_summary["kv_bytes_per_step"]
+                 / eng_q.plan_summary["kv_bytes_per_step"])
+        assert ratio >= 3.0      # ~4x values, minus the f32 scale rows
+
+    def test_cost_model_kv_bytes_from_plan(self):
+        plan = cache_mod.gqa_plan(2, 64, jnp.float32, "int8")
+        assert cost_model.plan_kv_bytes(plan, 4, 64) \
+            == plan.bytes_per_step(4, 64) \
+            == kvq.kv_bytes_per_step(4, 64, 2, 64, quantize="int8")
+
+    def test_ssm_has_no_plans(self):
+        cfg = registry.get("mamba2-2.7b").smoke
+        m = get_model(cfg)
+        assert m.cache_plans() == []
+        pool = KVPoolManager(m, 1, 16)
+        assert pool.bytes_per_token == 0 and pool.kv_bytes_per_step == 0
+
+
+# ---------------------------------------------------------------------------
+# Latent write primitives (quant/kv reused on (B, S, r) leaves)
+# ---------------------------------------------------------------------------
+
+class TestLatentWrites:
+    def test_write_token_latent_round_trip(self, rng):
+        b, s, r = 2, 12, 16
+        x = jax.random.normal(rng, (b, s, r), jnp.float32)
+        cache = jnp.zeros((b, s, r), jnp.int8)
+        scale = jnp.zeros((b, r), jnp.float32)
+        for t in range(s):
+            cache, scale = kvq.kv_write_token(
+                cache, scale, x[:, t], jnp.full((b,), t, jnp.int32))
+        _, scale_ref = kvq.quantize_kv_prefill(x)
+        np.testing.assert_allclose(np.asarray(scale),
+                                   np.asarray(scale_ref), rtol=1e-6)
+        back = kvq.dequantize_kv(cache, scale)
+        bound = jnp.broadcast_to(1.5 * scale[:, None] + 1e-8, x.shape)
+        assert bool(jnp.all(jnp.abs(back - x) <= bound))
+
+    def test_quantize_kv_tree_latent_stacked(self, rng):
+        """Stacked (L, 1, S, r) latent staging caches quantize with the
+        seq reduction on the right axis and the pad tail masked."""
+        ckv = jax.random.normal(rng, (3, 1, 8, 16), jnp.float32)
+        krope = jax.random.normal(jax.random.fold_in(rng, 1),
+                                  (3, 1, 8, 4), jnp.float32)
+        got = kvq.quantize_kv_tree({"blocks": {"ckv": ckv, "krope": krope}},
+                                   jnp.asarray(5))["blocks"]
+        assert got["ckv_q"].shape == (3, 1, 8, 16)
+        assert got["ckv_scale"].shape == (3, 1, 16)
+        assert got["krope_q"].dtype == jnp.int8
+        assert int(jnp.abs(got["ckv_q"][:, :, 5:]
+                           .astype(jnp.int32)).max()) == 0
+        # masked quantization == plan.write_prefill quantize-on-insert
+        plan = cache_mod.mla_plan(16, 4, jnp.float32, "int8")
+        want = plan.write_prefill(plan.init(1, 8),
+                                  {"ckv": ckv[0], "krope": krope[0]},
+                                  jnp.asarray(5))
+        np.testing.assert_array_equal(np.asarray(got["ckv_q"][0]),
+                                      np.asarray(want["ckv_q"]))
+        np.testing.assert_array_equal(np.asarray(got["ckv_scale"][0]),
+                                      np.asarray(want["ckv_scale"]))
+
+    def test_write_chunk_latent_matches_token_loop_scale(self, rng):
+        cache = jnp.zeros((1, 16, 8), jnp.int8)
+        scale = jnp.zeros((1, 8), jnp.float32)
+        new = jax.random.normal(rng, (1, 5, 8), jnp.float32)
+        _, sc = kvq.kv_write_chunk(cache, scale, new, jnp.asarray(3))
+        ct, st = cache, scale
+        for t in range(5):
+            ct, st = kvq.kv_write_token(ct, st, new[:, t],
+                                        jnp.full((1,), 3 + t, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(sc), np.asarray(st))
+
+
+# ---------------------------------------------------------------------------
+# Fused latent decode kernel vs oracle (interpret mode)
+# ---------------------------------------------------------------------------
+
+LATENT_SHAPES = [
+    # b, s, h, lora, rope, bs
+    (2, 64, 4, 32, 16, 32),       # multi-block online softmax
+    (3, 100, 2, 16, 8, 64),       # unaligned S -> padding path
+    (1, 16, 8, 64, 8, 128),       # S smaller than one block
+]
+
+
+class TestLatentKernel:
+    def _mk(self, rng, b, s, h, lora, rope):
+        ks = jax.random.split(jax.random.fold_in(rng, b * s + h), 5)
+        q_lat = jax.random.normal(ks[0], (b, 1, h, lora), jnp.float32) * 0.5
+        q_rope = jax.random.normal(ks[1], (b, 1, h, rope), jnp.float32) * 0.5
+        cq, cs = kvq.quantize_kv_prefill(
+            jax.random.normal(ks[2], (b, s, lora), jnp.float32))
+        rq, rs = kvq.quantize_kv_prefill(
+            jax.random.normal(ks[3], (b, s, rope), jnp.float32))
+        pos = jax.random.randint(ks[4], (b,), 1, s - 1)
+        return q_lat, q_rope, cq, cs, rq, rs, pos
+
+    @pytest.mark.parametrize("b,s,h,lora,rope,bs", LATENT_SHAPES)
+    def test_kernel_matches_ref(self, b, s, h, lora, rope, bs, rng):
+        args = self._mk(rng, b, s, h, lora, rope)
+        scale = 1.0 / ((lora + rope) ** 0.5)
+        got = ops.decode_attention_latent_q(*args, scale=scale, bs=bs,
+                                            force_kernel=True)
+        want = ref.decode_attention_latent_q_ref(*args, scale=scale)
+        assert got.shape == want.shape == (b, 1, h, lora)
+        assert float(jnp.abs(got - want).max()) <= 1e-2
+
+    def test_ref_matches_f32_latent_attention(self, rng):
+        """The oracle == the plan's f32 latent attend run on the
+        dequantized pool (same masking semantics)."""
+        q_lat, q_rope, cq, cs, rq, rs, pos = self._mk(rng, 2, 32, 4, 16, 8)
+        scale = 0.2
+        got = ref.decode_attention_latent_q_ref(
+            q_lat, q_rope, cq, cs, rq, rs, pos, scale=scale)
+        plan = cache_mod.mla_plan(16, 8, jnp.float32)
+        want = plan.attend_decode_latent(
+            q_lat, q_rope,
+            {"ckv": kvq.dequantize_kv(cq, cs),
+             "krope": kvq.dequantize_kv(rq, rs)}, pos, scale=scale)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_vmem_fallback_dispatch(self):
+        assert ops.kernel_fits("decode_latent_q", 4, c=512, s=128, r=128,
+                               r1=64)
+        assert not ops.kernel_fits("decode_latent_q", 4, c=65536, s=128,
+                                   r=4096, r1=64, bn=4096)
+
+
+# ---------------------------------------------------------------------------
+# MLA serving end to end: int8 latents, chunked admission
+# ---------------------------------------------------------------------------
+
+class TestMLAServeInt8:
+    def test_int8_latent_greedy_matches_f32(self, mla_setup):
+        run, m, params = mla_setup
+        eng_f = ServeEngine(run, params, slots=2, max_seq=64)
+        out_f = _serve(eng_f, [LONG, (4, 5, 6)])
+        eng_q = ServeEngine(run, params, slots=2, max_seq=64,
+                            kv_quantize="int8")
+        out_q = _serve(eng_q, [LONG, (4, 5, 6)])
+        assert out_f == out_q
+        leaves = jax.tree_util.tree_flatten_with_path(eng_q.cache)[0]
+        dtypes = {str(getattr(p[-1], "key", p[-1])): l.dtype
+                  for p, l in leaves}
+        assert dtypes["ckv_q"] == jnp.int8
+        assert dtypes["krope_q"] == jnp.int8
+        assert dtypes["ckv_scale"] == jnp.float32
+
+    @pytest.mark.parametrize("kvq_mode", [None, "int8"])
+    def test_chunked_equals_whole(self, mla_setup, kvq_mode):
+        """MLA stacks take continuous admission now (PR 4 gated them);
+        chunked greedy == whole-prefill greedy bit-exact, both pool
+        dtypes — the staging cache stays f32, the pool quantizes once
+        at insert."""
+        run, m, params = mla_setup
+        eng_b = ServeEngine(run, params, slots=2, max_seq=64,
+                            admission="blocking", kv_quantize=kvq_mode)
+        out_b = _serve(eng_b, [LONG, (4, 5, 6)])
+        eng_c = ServeEngine(run, params, slots=2, max_seq=64,
+                            admission="continuous", prefill_chunk=8,
+                            kv_quantize=kvq_mode)
+        out_c = _serve(eng_c, [LONG, (4, 5, 6)])
+        assert out_b == out_c
+        # chunking actually happened: 21-token prompt, 8-token chunks
+        assert max(s["prefill_tokens"] for s in eng_c.stats) <= 8 + 3
+
+    def test_continuous_is_default_for_dense_mla(self, mla_setup):
+        run, m, params = mla_setup
+        eng = ServeEngine(run, params, slots=1, max_seq=32)
+        assert eng.admission == "continuous"
+
+    def test_moe_mla_keeps_blocking(self):
+        """Expert-capacity routing is not chunk-inert: the MoE-family
+        MLA config (deepseek) still refuses continuous admission."""
+        cfg = registry.get("deepseek-v2-236b").smoke
+        run = RunConfig(model=cfg, parallel=ParallelConfig())
+        m = get_model(cfg)
+        params, _ = m.init(jax.random.PRNGKey(0))
+        eng = ServeEngine(run, params, slots=1, max_seq=32)
+        assert eng.admission == "blocking"
+        with pytest.raises(ValueError):
+            ServeEngine(run, params, slots=1, max_seq=32,
+                        admission="continuous")
+
+    def test_matches_full_forward_reference(self, mla_setup):
+        run, m, params = mla_setup
+        eng = ServeEngine(run, params, slots=2, max_seq=64,
+                          kv_quantize="int8", prefill_chunk=8)
+        (out,) = _serve(eng, [LONG], n=5)
+        toks = list(LONG)
+        for _ in range(5):
+            x, _ = m.forward(params, {"tokens": jnp.asarray([toks])})
+            logits = m.logits(params, x)
+            toks.append(int(jnp.argmax(logits[0, -1])))
+        assert out == toks[len(LONG):]
+
+    def test_use_pallas_matches_ref_path(self, mla_setup):
+        """lrd.use_pallas routes int8 latent decode through the fused
+        kernel (interpret mode on CPU) — outputs match the oracle."""
+        run, m, params = mla_setup
+        run_k = dataclasses.replace(run, lrd=LRDConfig(use_pallas=True))
+        eng_r = ServeEngine(run, params, slots=1, max_seq=32,
+                            kv_quantize="int8")
+        out_r = _serve(eng_r, [(1, 2, 3)], n=3)
+        eng_k = ServeEngine(run_k, params, slots=1, max_seq=32,
+                            kv_quantize="int8")
+        out_k = _serve(eng_k, [(1, 2, 3)], n=3)
+        assert out_r == out_k
+
+    def test_lrd_config_knob(self, mla_setup):
+        run, m, params = mla_setup
+        run_q = dataclasses.replace(
+            run, lrd=dataclasses.replace(LRDConfig(), kv_quantize="int8"))
+        eng = ServeEngine(run_q, params, slots=1, max_seq=32)
+        assert eng.kv_quantize == "int8"
+        assert eng.plan_summary["kv_cache_family"] == "mla_latent_int8"
+
+
+# ---------------------------------------------------------------------------
+# attention.py executes through the plan (no raw key branches left)
+# ---------------------------------------------------------------------------
+
+class TestAttentionIsThinExecutor:
+    def test_no_cache_key_sniffing_in_attention(self):
+        """The acceptance bar: every cache-layout dispatch goes through
+        CachePlan; attention.py no longer inspects cache keys."""
+        import inspect
+        import repro.layers.attention as attention
+        src = inspect.getsource(attention)
+        for pattern in ('"k_q" in', "'k_q' in", '"ckv" in', "'ckv' in",
+                        'is_quantized_kv', 'cache["k_q"]', 'cache["ckv"]'):
+            assert pattern not in src, pattern
+
+    def test_explicit_plan_equals_derived(self, rng):
+        """Threading the plan explicitly (the serve runner's path) and
+        deriving it from cache keys produce identical results."""
+        pb = ParamBuilder(rng, jnp.float32)
+        attn.init_attention(pb, "a", 32, 4, 2, 8)
+        p = pb.params["a"]
+        x = jax.random.normal(jax.random.fold_in(rng, 2), (1, 4, 32),
+                              jnp.float32)
+        kw = dict(num_heads=4, num_kv_heads=2, head_dim=8, rope_theta=1e4,
+                  positions=jnp.arange(4)[None, :])
+        plan = cache_mod.gqa_plan(2, 8, jnp.float32, "int8")
+        outs = []
+        for explicit in (None, plan):
+            cache = attn.init_kv_cache(1, 8, 2, 8, jnp.float32, "int8")
+            o, c = attn.apply_attention(p, x, cache=cache, plan=explicit,
+                                        **kw)
+            outs.append((o, c))
+        np.testing.assert_array_equal(np.asarray(outs[0][0]),
+                                      np.asarray(outs[1][0]))
+        np.testing.assert_array_equal(np.asarray(outs[0][1]["k_q"]),
+                                      np.asarray(outs[1][1]["k_q"]))
+
+    def test_mla_padded_chunk_rows_masked_at_write(self, rng):
+        """Bucket-padded MLA chunks zero pad-row latents at the write
+        (prompt_len = the chunk's real end), mirroring the GQA path —
+        required now that the scheduler chunks dense MLA stacks."""
+        pb = ParamBuilder(rng, jnp.float32)
+        attn.init_mla(pb, "mla", MLA_CFG)
+        p = pb.params["mla"]
+        s, s_max = 12, 32
+        x = jax.random.normal(jax.random.fold_in(rng, 7), (1, s, 32),
+                              jnp.float32) * 0.3
+        garbage = jnp.full((1, 3, 32), 7.7, jnp.float32)
+        whole = attn.init_mla_cache(1, s_max, MLA_CFG, jnp.float32)
+        _, c_whole = attn.apply_mla(p, x, MLA_CFG,
+                                    positions=jnp.arange(s)[None, :],
+                                    cache=whole)
+        cache = attn.init_mla_cache(1, s_max, MLA_CFG, jnp.float32)
+        _, cache = attn.apply_mla(
+            p, jnp.concatenate([x[:, :5], garbage], 1), MLA_CFG,
+            positions=jnp.arange(8)[None, :], cache=cache,
+            start_pos=jnp.asarray(0), prompt_len=jnp.asarray(5))
+        assert float(jnp.abs(cache["ckv"][:, 5:8]).max()) == 0.0
+        _, cache = attn.apply_mla(
+            p, x[:, 5:], MLA_CFG, positions=5 + jnp.arange(7)[None, :],
+            cache=cache, start_pos=jnp.asarray(5),
+            prompt_len=jnp.asarray(s))
+        np.testing.assert_allclose(np.asarray(cache["ckv"][:, :s]),
+                                   np.asarray(c_whole["ckv"][:, :s]),
+                                   atol=1e-6, rtol=1e-6)
