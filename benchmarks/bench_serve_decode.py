@@ -1,7 +1,8 @@
-"""Serve-decode benchmarks: KV quantization + admission scheduling.
+"""Serve-decode benchmarks: KV quantization + admission scheduling +
+paged KV pooling.
 
-Three sweeps share this module (select with
-``--sweep {all,kv,sched,mla}``):
+Four sweeps share this module (select with
+``--sweep {all,kv,sched,mla,paged}``):
 
 **kv** — f32 KV pool vs int8-quantized KV pool.
 
@@ -36,13 +37,25 @@ live stream for that step; the scheduler interleaves ``prefill_chunk``-
 token segments with decode, so live streams keep producing a token
 every step.  Reported per sweep point and mode: p50/p99/max
 *inter-token latency* of the short streams (the head-of-line metric),
-mean TTFT, and end-to-end tokens/s.
+mean TTFT, end-to-end tokens/s, and the cross-mode greedy
+``token_match``.  A **saturated** row per sweep point (all slots
+decoding equal-length streams, no admission at all) gives the decode
+ceiling the mixed rows' tok/s should be read against — the mixed-load
+number is admission-bubble-dominated by construction.
 
-Both sweeps append to the ``BENCH_serve.json`` trajectory at the repo
-root so successive PRs can track the serve numbers.
+**paged** — the paged block pool (``kv_layout="paged"``:
+``repro.serve.paging`` block tables + radix prefix cache) vs the slot
+pool under a shared-prefix load, f32 and int8: bytes/step, radix
+hit-rate over the shareable prefix blocks, tokens/s, and slot==paged
+greedy agreement.
+
+Every sweep appends to the ``BENCH_serve.json`` trajectory at the repo
+root (stamped with ``git_rev`` + ``hostname`` via
+:func:`benchmarks.common.run_stamp`) so successive PRs can track the
+serve numbers.
 
     PYTHONPATH=src python -m benchmarks.bench_serve_decode \
-        [--dry-run] [--sweep {all,kv,sched,mla}]
+        [--dry-run] [--sweep {all,kv,sched,mla,paged}]
 """
 from __future__ import annotations
 
@@ -234,7 +247,7 @@ def _mixed_load(eng, *, slots: int, long_len: int, short_new: int) -> dict:
     eng.run_until_done()
     eng.stats.clear()
 
-    gaps, ttfts = [], []
+    gaps, ttfts, outputs = [], [], []
     reps = 3
     for rep in range(reps):
         shorts = [Request(uid=100 * rep + i, prompt=[(i % 7) + 1] * 4,
@@ -253,12 +266,57 @@ def _mixed_load(eng, *, slots: int, long_len: int, short_new: int) -> dict:
         gaps.extend(np.diff(r.token_times) for r in shorts
                     if len(r.token_times) > 1)
         ttfts.extend(r.ttft for r in shorts + [longr])
+        outputs.extend(r.output for r in shorts + [longr])
     gaps = np.concatenate(gaps)
     return {"p50_itl_ms": round(float(np.percentile(gaps, 50)) * 1e3, 3),
             "p99_itl_ms": round(float(np.percentile(gaps, 99)) * 1e3, 3),
             "max_itl_ms": round(float(gaps.max()) * 1e3, 3),
             "ttft_mean_ms": round(sum(ttfts) / len(ttfts) * 1e3, 3),
-            "tokens_per_s": round(eng.throughput()["tokens_per_s"], 2)}
+            "tokens_per_s": round(eng.throughput()["tokens_per_s"], 2),
+            "outputs": outputs}
+
+
+def _saturated_load(eng, *, slots: int, new_tokens: int = 48) -> dict:
+    """All-slots-live steady decode: exactly ``slots`` equal-length
+    streams admitted together, then pure decode until done — no
+    admission bubbles, no prefill interleaving.  The mixed-load rows
+    are admission-bubble-dominated (tok/s there measures the bubbles);
+    this row is the pool's decode ceiling, making the gap legible."""
+    import numpy as np
+
+    from repro.serve.engine import Request
+
+    warm = [Request(uid=2000 + i, prompt=[2] * 4, max_new_tokens=3)
+            for i in range(slots)]
+    for r in warm:
+        eng.add_request(r)
+    eng.run_until_done()
+    eng.stats.clear()
+
+    reqs = [Request(uid=3000 + i, prompt=[(i % 7) + 1] * 4,
+                    max_new_tokens=new_tokens) for i in range(slots)]
+    for r in reqs:
+        eng.add_request(r)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    gaps = np.concatenate([np.diff(r.token_times) for r in reqs
+                           if len(r.token_times) > 1])
+    th = eng.throughput()
+    return {"p50_itl_ms": round(float(np.percentile(gaps, 50)) * 1e3, 3),
+            "p99_itl_ms": round(float(np.percentile(gaps, 99)) * 1e3, 3),
+            "max_itl_ms": round(float(gaps.max()) * 1e3, 3),
+            "ttft_mean_ms": round(sum(r.ttft for r in reqs)
+                                  / len(reqs) * 1e3, 3),
+            "tokens_per_s": round(th["tokens_per_s"], 2),
+            "outputs": [r.output for r in reqs]}
+
+
+def _token_match(a: list[list[int]], b: list[list[int]]) -> float:
+    """Position-wise greedy agreement fraction of two output sets."""
+    fa = [t for o in a for t in o]
+    fb = [t for o in b for t in o]
+    n = min(len(fa), len(fb))
+    return sum(x == y for x, y in zip(fa[:n], fb[:n])) / max(n, 1)
 
 
 def run_sched(fast: bool = True, dry_run: bool = False) -> str:
@@ -267,26 +325,46 @@ def run_sched(fast: bool = True, dry_run: bool = False) -> str:
         sweeps = sweeps[:1]
     elif not fast:
         sweeps.append((8, 512, 384, 16, 48))
-    csv = Csv(["mode", "slots", "s_max", "long_len", "p50_itl_ms",
-               "p99_itl_ms", "max_itl_ms", "ttft_mean_ms", "tok_s"])
+    csv = Csv(["load", "mode", "slots", "s_max", "long_len", "p50_itl_ms",
+               "p99_itl_ms", "max_itl_ms", "ttft_mean_ms", "tok_s",
+               "token_match"])
     records = []
     for slots, s_max, long_len, chunk, short_new in sweeps:
-        for mode in ("blocking", "continuous"):
-            eng = _build_sched(slots, s_max, mode, chunk)
-            r = _mixed_load(eng, slots=slots, long_len=long_len,
-                            short_new=short_new)
-            csv.row(mode, slots, s_max, long_len, r["p50_itl_ms"],
-                    r["p99_itl_ms"], r["max_itl_ms"], r["ttft_mean_ms"],
-                    r["tokens_per_s"])
-            records.append({"mode": mode, "slots": slots, "s_max": s_max,
-                            "long_len": long_len, "prefill_chunk": chunk,
-                            **r})
+        for load, runner in (("mixed", _mixed_load),
+                             ("saturated", _saturated_load)):
+            by_mode = {}
+            for mode in ("blocking", "continuous"):
+                eng = _build_sched(slots, s_max, mode, chunk)
+                if load == "mixed":
+                    by_mode[mode] = runner(eng, slots=slots,
+                                           long_len=long_len,
+                                           short_new=short_new)
+                else:
+                    by_mode[mode] = runner(eng, slots=slots)
+            # greedy token agreement across admission modes (chunked
+            # prefill is exact, so this is 1.0 unless something broke)
+            match = _token_match(by_mode["blocking"].pop("outputs"),
+                                 by_mode["continuous"].pop("outputs"))
+            for mode, r in by_mode.items():
+                csv.row(load, mode, slots, s_max,
+                        long_len if load == "mixed" else 0,
+                        r["p50_itl_ms"], r["p99_itl_ms"], r["max_itl_ms"],
+                        r["ttft_mean_ms"], r["tokens_per_s"],
+                        round(match, 4))
+                records.append({"load": load, "mode": mode, "slots": slots,
+                                "s_max": s_max,
+                                "long_len": long_len if load == "mixed"
+                                else 0,
+                                "prefill_chunk": chunk,
+                                "token_match": round(match, 4), **r})
     out = csv.dump("serve admission: blocking vs continuous (chunked "
                    "prefill) under mixed load; p99 inter-token latency of "
-                   "the live short streams is the head-of-line metric")
+                   "the live short streams is the head-of-line metric; "
+                   "'saturated' rows are the all-slots-live decode ceiling")
     by_mode = {}
     for r in records:
-        by_mode.setdefault(r["mode"], []).append(r["p99_itl_ms"])
+        if r["load"] == "mixed":
+            by_mode.setdefault(r["mode"], []).append(r["p99_itl_ms"])
     if len(by_mode) == 2:
         blk = max(by_mode["blocking"])
         cont = max(by_mode["continuous"])
@@ -299,7 +377,104 @@ def run_sched(fast: bool = True, dry_run: bool = False) -> str:
     return out
 
 
+def _build_paged(slots: int, max_seq: int, kv_quantize: str | None,
+                 kv_layout: str):
+    from repro.configs import registry
+    from repro.configs.base import ParallelConfig, RunConfig
+    from repro.models.api import get_model
+    from repro.serve.engine import ServeEngine
+
+    cfg = dataclasses.replace(registry.get("llama3.2-1b").smoke,
+                              dtype="float32")
+    run = RunConfig(model=cfg, parallel=ParallelConfig())
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    return ServeEngine(run, params, slots=slots, max_seq=max_seq,
+                       kv_quantize=kv_quantize, kv_layout=kv_layout)
+
+
+def _shared_prefix_load(eng, *, slots: int, prefix_len: int,
+                        n_requests: int) -> tuple[float, list[list[int]]]:
+    """``n_requests`` prompts sharing a ``prefix_len``-token prefix
+    (block-aligned), distinct suffixes.  More requests than slots, so
+    the later waves admit against a radix cache already holding the
+    prefix — the hit-rate rows below come from here."""
+    from repro.serve.engine import Request
+
+    prefix = [(i * 5 + 2) % 60 + 1 for i in range(prefix_len)]
+    reqs = [Request(uid=i, prompt=prefix + [(i % 9) + 1] * (3 + i % 4),
+                    max_new_tokens=8) for i in range(n_requests)]
+    for r in reqs:
+        eng.add_request(r)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    return eng.throughput()["tokens_per_s"], [r.output for r in reqs]
+
+
+def run_paged(fast: bool = True, dry_run: bool = False) -> str:
+    sweeps = [(2, 64, 32), (4, 128, 64), (4, 256, 128)]
+    if dry_run:
+        sweeps = sweeps[:1]
+    elif fast:
+        sweeps = sweeps[:2]
+    csv = Csv(["slots", "s_max", "prefix", "kv_bytes_slot",
+               "kv_bytes_paged", "kv_bytes_paged_q", "hit_blocks",
+               "hit_rate", "tok_s_slot", "tok_s_paged", "tok_s_paged_q",
+               "token_match"])
+    records = []
+    for slots, s_max, prefix_len in sweeps:
+        n_req = 2 * slots + 1
+        eng_s = _build_paged(slots, s_max, None, "slot")
+        tok_s, out_s = _shared_prefix_load(eng_s, slots=slots,
+                                           prefix_len=prefix_len,
+                                           n_requests=n_req)
+        eng_p = _build_paged(slots, s_max, None, "paged")
+        tok_p, out_p = _shared_prefix_load(eng_p, slots=slots,
+                                           prefix_len=prefix_len,
+                                           n_requests=n_req)
+        eng_q = _build_paged(slots, s_max, "int8", "paged")
+        tok_q, out_q = _shared_prefix_load(eng_q, slots=slots,
+                                           prefix_len=prefix_len,
+                                           n_requests=n_req)
+        assert eng_p.plan_summary["kv_cache_family"] == "gqa_paged_f32"
+        assert eng_q.plan_summary["kv_cache_family"] == "gqa_paged_int8"
+        st = eng_p.pool.prefix_stats()
+        # blocks attached instead of allocated, per radix-consulted
+        # admission, normalized by the shareable prefix blocks
+        bs = eng_p.pool.block_size
+        shareable = (prefix_len // bs) * max(n_req - slots, 0)
+        hit_rate = st["prefix_block_hits"] / max(shareable, 1)
+        b_s = eng_s.plan_summary["kv_bytes_per_step"]
+        b_p = eng_p.plan_summary["kv_bytes_per_step"]
+        b_q = eng_q.plan_summary["kv_bytes_per_step"]
+        match = _token_match(out_s, out_p)   # paged f32 == slot f32
+        csv.row(slots, s_max, prefix_len, b_s, b_p, b_q,
+                st["prefix_block_hits"], round(hit_rate, 3),
+                round(tok_s, 1), round(tok_p, 1), round(tok_q, 1),
+                round(match, 4))
+        records.append({"slots": slots, "s_max": s_max,
+                        "prefix_len": prefix_len,
+                        "kv_bytes_slot": b_s, "kv_bytes_paged": b_p,
+                        "kv_bytes_paged_int8": b_q,
+                        "prefix_block_hits": st["prefix_block_hits"],
+                        "prefix_queries": st["prefix_queries"],
+                        "hit_rate": round(hit_rate, 4),
+                        "cpu_tok_s_slot": round(tok_s, 2),
+                        "cpu_tok_s_paged": round(tok_p, 2),
+                        "cpu_tok_s_paged_int8": round(tok_q, 2),
+                        "token_match": round(match, 4)})
+    out = csv.dump("paged KV pool vs slot pool under a shared-prefix "
+                   "load: bytes/step (paged adds block tables, int8 "
+                   "shrinks values 4x), radix prefix hit-rate over the "
+                   "shareable blocks, and slot==paged greedy agreement")
+    _append_trajectory({"bench": "serve_paged", "dry_run": dry_run,
+                        "unix_time": int(time.time()), "rows": records})
+    out += f"\n# trajectory appended to {TRAJECTORY.name}"
+    return out
+
+
 def _append_trajectory(record: dict) -> None:
+    from benchmarks.common import run_stamp
     traj = []
     if TRAJECTORY.exists():
         try:
@@ -307,7 +482,7 @@ def _append_trajectory(record: dict) -> None:
             assert isinstance(traj, list)
         except Exception:
             traj = []
-    traj.append(record)
+    traj.append({**run_stamp(), **record})
     TRAJECTORY.write_text(json.dumps(traj, indent=1) + "\n")
 
 
@@ -316,7 +491,8 @@ if __name__ == "__main__":
     ap.add_argument("--dry-run", action="store_true",
                     help="one tiny sweep point; CPU smoke for CI")
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--sweep", choices=["all", "kv", "sched", "mla"],
+    ap.add_argument("--sweep", choices=["all", "kv", "sched", "mla",
+                                        "paged"],
                     default="all")
     args = ap.parse_args()
     if args.sweep in ("all", "kv"):
@@ -325,3 +501,5 @@ if __name__ == "__main__":
         print(run_mla(fast=not args.full, dry_run=args.dry_run))
     if args.sweep in ("all", "sched"):
         print(run_sched(fast=not args.full, dry_run=args.dry_run))
+    if args.sweep in ("all", "paged"):
+        print(run_paged(fast=not args.full, dry_run=args.dry_run))

@@ -1,11 +1,38 @@
 """Shared benchmark utilities: timing, model stats, CSV emission."""
 from __future__ import annotations
 
+import functools
+import socket
+import subprocess
 import time
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+
+@functools.lru_cache(maxsize=1)
+def run_stamp() -> dict:
+    """Provenance stamp merged into every bench record: the repo's git
+    revision (``<sha>[-dirty]``, or "unknown" outside a checkout) and
+    the host name — trajectory rows from different machines or
+    different commits must never be compared as one series."""
+    try:
+        rev = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+        if dirty:
+            rev += "-dirty"
+    except Exception:
+        rev = "unknown"
+    try:
+        host = socket.gethostname()
+    except Exception:
+        host = "unknown"
+    return {"git_rev": rev, "hostname": host}
 
 
 def time_jit(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:

@@ -1,7 +1,12 @@
 """Serve an LRD-compressed LM with continuous batching.
 
-    PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py [--kv-layout {slot,paged}]
+
+``--kv-layout paged`` serves from the paged KV pool (fixed-size blocks
+behind per-slot block tables + a radix prefix cache): the two requests
+below that share a prompt prefix store that prefix's KV blocks once.
 """
+import argparse
 import dataclasses
 
 import jax
@@ -14,6 +19,13 @@ from repro.serve.engine import Request, ServeEngine
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kv-layout", choices=["slot", "paged"],
+                    default="slot",
+                    help="KV pool memory layout (paged = block tables + "
+                         "copy-on-write prefix sharing)")
+    args = ap.parse_args()
+
     cfg = registry.get("llama3.2-1b").smoke
     model = get_model(cfg)
     params, axes = model.init(jax.random.PRNGKey(0))
@@ -25,9 +37,12 @@ def main():
     print(f"serving a {report.summary()['param_ratio']:.0%}-size model")
 
     run = RunConfig(model=cfg, lrd=lrd, parallel=ParallelConfig())
-    eng = ServeEngine(run, params, slots=4, max_seq=128)
+    eng = ServeEngine(run, params, slots=4, max_seq=128,
+                      kv_layout=args.kv_layout)
 
-    prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9], [10], [11, 12], [13, 14, 15]]
+    shared = list(range(1, 20))   # > one KV block: paged requests share it
+    prompts = [shared + [30], shared + [31, 32], [6, 7, 8, 9], [10],
+               [11, 12], [13, 14, 15]]
     reqs = [Request(uid=i, prompt=p, max_new_tokens=16,
                     temperature=0.0 if i % 2 == 0 else 0.8)
             for i, p in enumerate(prompts)]
@@ -37,6 +52,8 @@ def main():
     for r in reqs:
         print(f"req {r.uid}: prompt={r.prompt} -> {r.output}")
     print("throughput:", eng.throughput())
+    if args.kv_layout == "paged":
+        print("prefix cache:", eng.pool.prefix_stats())
 
 
 if __name__ == "__main__":

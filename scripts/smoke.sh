@@ -12,3 +12,4 @@ python -m benchmarks.bench_branched_quant --dry-run
 python -m benchmarks.bench_serve_decode --sweep kv --dry-run
 python -m benchmarks.bench_serve_decode --sweep mla --dry-run
 python -m benchmarks.bench_serve_decode --sweep sched --dry-run
+python -m benchmarks.bench_serve_decode --sweep paged --dry-run

@@ -247,6 +247,12 @@ class LRDConfig:
     # tokens.  0 = engine defaults (chunk 64; budget slots + chunk).
     prefill_chunk: int = 0
     step_token_budget: int = 0
+    # KV pool memory layout: "slot" reserves one contiguous (S_max, ...)
+    # region per stream; "paged" cuts KV into fixed-size blocks behind
+    # per-slot block tables with radix-tree copy-on-write prefix sharing
+    # (repro/serve/paging — dense non-MLA stacks, continuous admission).
+    kv_layout: str = "slot"           # "slot" | "paged"
+    kv_block_size: int = 0            # tokens per KV block (0 = 16)
 
 
 # ---------------------------------------------------------------------------

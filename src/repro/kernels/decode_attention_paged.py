@@ -1,0 +1,256 @@
+"""Fused block-table decode attention over a paged KV pool.
+
+The paged serve pool (:mod:`repro.serve.paging`) stores K/V as
+fixed-size physical blocks ``(num_blocks + 1, block_size, KH, D)`` and
+addresses them per stream through an int32 block table — so decode
+cannot stream a contiguous ``(slots, S_max, ...)`` region; each
+stream's logical sequence is scattered across the pool.  A
+gather-then-attend fallback materializes every stream's contiguous
+copy in HBM each step, handing back exactly the bytes paging saved.
+This kernel keeps the indirection in the *index maps*:
+
+* the block table and ``cache_pos`` ride in as **scalar-prefetch**
+  operands (:class:`pltpu.PrefetchScalarGridSpec`) — the k/v BlockSpec
+  index maps read ``bt[slot, blk]`` to aim each grid step's DMA at the
+  right physical block, so K/V tiles stream straight from their paged
+  homes into VMEM, one block per sequence step;
+* idle table entries alias the reserved dummy block (physical id
+  ``num_blocks``); the ``pos <= cache_pos`` validity mask kills their
+  logits, so the garbage they hold never reaches the softmax;
+* online softmax over the logical block sequence: f32 running max /
+  sum / accumulator in VMEM scratch across the arbitrary grid dim,
+  identical discipline to :mod:`repro.kernels.decode_attention_q`.
+
+``decode_attention_paged_q`` is the int8 twin.  Scales are PER BLOCK
+(``(num_blocks + 1, KH, D)`` f32 — blocked together with their values,
+so a copy-on-write shared prefix block travels with its own scales).
+Per-block K scales fold into the query row exactly as the slot kernel
+folds per-slot scales; per-block V scales can no longer fold into the
+final output (they change block to block), so each block's context
+contribution is scaled before accumulation — O(G*D) multiplies per
+block in place of O(bs*D) dequantization.
+
+Grid: ``(B_slots, KV_heads, blocks_per_slot)`` with the block dim
+innermost (arbitrary); slots and heads are parallel.  The GQA group of
+G = H/KH query heads rides as rows of the q/out tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.lowrank_matmul import CompilerParams
+
+_NEG_INF = -1e30
+_MINOR = 128        # f32 scratch lane width for the (G, 1) running stats
+
+
+def _kernel(bt_ref, cp_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale, softcap):
+    """q (1,1,G,D); k/v (1,bs,1,D) — the physical block the index map
+    aimed at; bt (B,nblk) / cache_pos (B,1) i32 SMEM (scalar prefetch);
+    o (1,1,G,D); scratch acc (G,D), m/l (G,128) f32 (col 0 live)."""
+    b = pl.program_id(0)
+    si = pl.program_id(2)
+    ns = pl.num_programs(2)
+    bs = k_ref.shape[1]
+
+    @pl.when(si == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                     # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)               # (bs, D)
+    s = jnp.dot(q * scale, k.T,
+                preferred_element_type=jnp.float32)         # (G, bs)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    pos = si * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    s = jnp.where(pos <= cp_ref[b, 0], s, _NEG_INF)
+
+    m_prev = m_ref[:, :1]                                   # (G, 1)
+    l_prev = l_ref[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                  # (G, bs)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)               # (bs, D)
+    acc = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(si == ns - 1)
+    def _flush():
+        o_ref[0, 0] = (acc / l_new).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def decode_attention_paged(q: jax.Array, k: jax.Array, v: jax.Array,
+                           block_tables: jax.Array, cache_pos: jax.Array,
+                           *, softcap: float = 0.0,
+                           interpret: bool = False) -> jax.Array:
+    """Fused decode attention over a full-width paged KV pool.
+
+    q (B, KH, G, D); k/v (NB+1, bs, KH, D) — batch axis = physical
+    block, id NB reserved dummy; block_tables (B, nblk) int32;
+    cache_pos (B, 1) int32 -> (B, KH, G, D) in q.dtype.  The sequence
+    block size IS the pool's block size (no padding: nblk covers
+    exactly blocks_per_slot logical blocks).
+    """
+    b, kh, g, d = q.shape
+    nb1, bs, kh2, d2 = k.shape
+    assert (kh, d) == (kh2, d2), (q.shape, k.shape)
+    assert k.shape == v.shape
+    nblk = block_tables.shape[1]
+    assert block_tables.shape == (b, nblk), block_tables.shape
+    assert cache_pos.shape == (b, 1), cache_pos.shape
+
+    grid = (b, kh, nblk)
+    kernel = functools.partial(_kernel, scale=1.0 / (d ** 0.5),
+                               softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda i, j, s, bt, cp: (i, j, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda i, j, s, bt, cp: (bt[i, s], 0, j, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda i, j, s, bt, cp: (bt[i, s], 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda i, j, s, bt, cp: (i, j, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g, d), jnp.float32),
+                        pltpu.VMEM((g, _MINOR), jnp.float32),
+                        pltpu.VMEM((g, _MINOR), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(block_tables, cache_pos, q, k, v)
+
+
+def _kernel_q(bt_ref, cp_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, o_ref,
+              acc_ref, m_ref, l_ref, *, scale, softcap):
+    """Int8 twin: k_q/v_q (1,bs,1,D) int8 + PER-BLOCK k/v_scale (1,1,D)
+    f32 tiles follow the same block-table index maps.  K scales fold
+    into the query row per block; V scales multiply each block's
+    context contribution before accumulation."""
+    b = pl.program_id(0)
+    si = pl.program_id(2)
+    ns = pl.num_programs(2)
+    bs = kq_ref.shape[1]
+
+    @pl.when(si == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                     # (G, D)
+    ks = ks_ref[0, 0].astype(jnp.float32)                   # (D,)
+    kq = kq_ref[0, :, 0, :].astype(jnp.float32)             # (bs, D)
+    s = jnp.dot(q * (ks * scale)[None, :], kq.T,
+                preferred_element_type=jnp.float32)         # (G, bs)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    pos = si * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    s = jnp.where(pos <= cp_ref[b, 0], s, _NEG_INF)
+
+    m_prev = m_ref[:, :1]                                   # (G, 1)
+    l_prev = l_ref[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                  # (G, bs)
+    vq = vq_ref[0, :, 0, :].astype(jnp.float32)             # (bs, D)
+    vs = vs_ref[0, 0].astype(jnp.float32)                   # (D,)
+    acc = acc_ref[...] * alpha + jnp.dot(
+        p, vq, preferred_element_type=jnp.float32) * vs[None, :]
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(si == ns - 1)
+    def _flush():
+        o_ref[0, 0] = (acc / l_new).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def decode_attention_paged_q(q: jax.Array, k_q: jax.Array,
+                             k_scale: jax.Array, v_q: jax.Array,
+                             v_scale: jax.Array, block_tables: jax.Array,
+                             cache_pos: jax.Array, *, softcap: float = 0.0,
+                             interpret: bool = False) -> jax.Array:
+    """Fused decode attention over an int8 paged KV pool.
+
+    q (B, KH, G, D); k_q/v_q (NB+1, bs, KH, D) int8; per-block
+    k/v_scale (NB+1, KH, D) f32; block_tables (B, nblk) int32;
+    cache_pos (B, 1) int32 -> (B, KH, G, D) in q.dtype.
+    """
+    b, kh, g, d = q.shape
+    nb1, bs, kh2, d2 = k_q.shape
+    assert (kh, d) == (kh2, d2), (q.shape, k_q.shape)
+    assert k_q.shape == v_q.shape
+    assert k_scale.shape == v_scale.shape == (nb1, kh, d), \
+        (k_scale.shape, v_scale.shape)
+    nblk = block_tables.shape[1]
+    assert block_tables.shape == (b, nblk), block_tables.shape
+    assert cache_pos.shape == (b, 1), cache_pos.shape
+
+    grid = (b, kh, nblk)
+    kernel = functools.partial(_kernel_q, scale=1.0 / (d ** 0.5),
+                               softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda i, j, s, bt, cp: (i, j, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda i, j, s, bt, cp: (bt[i, s], 0, j, 0)),
+            pl.BlockSpec((1, 1, d),
+                         lambda i, j, s, bt, cp: (bt[i, s], j, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda i, j, s, bt, cp: (bt[i, s], 0, j, 0)),
+            pl.BlockSpec((1, 1, d),
+                         lambda i, j, s, bt, cp: (bt[i, s], j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda i, j, s, bt, cp: (i, j, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g, d), jnp.float32),
+                        pltpu.VMEM((g, _MINOR), jnp.float32),
+                        pltpu.VMEM((g, _MINOR), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(block_tables, cache_pos, q, k_q, k_scale, v_q, v_scale)
+
+
+def vmem_bytes(g: int, d: int, block_size: int, act_bytes: int = 4,
+               q_bytes: int = 1) -> int:
+    """VMEM footprint of one grid step (fit check used by ops.py) —
+    same tile inventory as the slot kernel; the scale rows are absent
+    from the f32 variant but cost nothing to keep in the bound."""
+    return (g * d * act_bytes                 # q tile
+            + 2 * block_size * d * q_bytes    # k + v block tiles
+            + 2 * d * 4                       # per-block k/v scale rows
+            + g * d * act_bytes               # out tile
+            + g * d * 4                       # f32 accumulator
+            + 2 * g * _MINOR * 4)             # running max / sum

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.kernels import branched_matmul as bk
 from repro.kernels import branched_matmul_q as bqk
+from repro.kernels import decode_attention_paged as dap
 from repro.kernels import decode_attention_q as dak
 from repro.kernels import lowrank_matmul as lk
 from repro.kernels import lowrank_matmul_q as qk
@@ -73,6 +74,13 @@ def kernel_fits(kernel: str, m: int, *, c: int, s: int, r: int = 0,
         # Per-(slot, kv-head) program: c = head_dim, r = GQA group size,
         # bn = the sequence block; m (the slot count) is grid-parallel.
         return dak.vmem_bytes(max(1, r), c, bn or dak.DEFAULT_BS,
+                              q_bytes=q_bytes) <= VMEM_BUDGET
+    if kernel == "decode_attn_paged":
+        # Per-(slot, kv-head) program over one physical block: c =
+        # head_dim, r = GQA group size, bn = the pool's block size.
+        # Same tile inventory as the slot kernel (the f32 variant skips
+        # the scale rows, a rounding error in the bound).
+        return dap.vmem_bytes(max(1, r), c, bn or 16,
                               q_bytes=q_bytes) <= VMEM_BUDGET
     if kernel == "decode_latent_q":
         # Per-slot program: c = kv_lora_rank, r = head count, r1 = the
@@ -229,6 +237,65 @@ def decode_attention_q(q: jax.Array, k_q: jax.Array, k_scale: jax.Array,
         cache_pos.astype(jnp.int32).reshape(b, 1),
         bs=min(bs, kq_p.shape[1]), softcap=softcap,
         interpret=not _on_tpu())
+    return o.reshape(b, 1, h, d)
+
+
+def decode_attention_paged(q: jax.Array, k: jax.Array, v: jax.Array,
+                           block_tables: jax.Array, cache_pos: jax.Array,
+                           *, softcap: float = 0.0,
+                           force_kernel: bool = False) -> jax.Array:
+    """One decode step of attention over a full-width paged KV pool.
+
+    q (B, 1, H, D); k/v (NB+1, bs, KH, D) — batch axis = physical
+    block; block_tables (B, nblk) int32; cache_pos (B,) ->
+    (B, 1, H, D).  The kernel's sequence block IS the pool block (no S
+    padding); table entries beyond a stream's allocation alias the
+    dummy block and mask out by position.
+    """
+    b, sq, h, d = q.shape
+    assert sq == 1, q.shape
+    bs, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    q_bytes = jnp.dtype(k.dtype).itemsize
+    if not (force_kernel or kernel_fits("decode_attn_paged", b, c=d, s=bs,
+                                        r=g, q_bytes=q_bytes, bn=bs)):
+        return ref.decode_attention_paged_ref(q, k, v, block_tables,
+                                              cache_pos, softcap=softcap)
+    qg = q[:, 0].reshape(b, kh, g, d)
+    o = dap.decode_attention_paged(
+        qg, k, v, block_tables.astype(jnp.int32),
+        cache_pos.astype(jnp.int32).reshape(b, 1),
+        softcap=softcap, interpret=not _on_tpu())
+    return o.reshape(b, 1, h, d)
+
+
+def decode_attention_paged_q(q: jax.Array, k_q: jax.Array,
+                             k_scale: jax.Array, v_q: jax.Array,
+                             v_scale: jax.Array, block_tables: jax.Array,
+                             cache_pos: jax.Array, *, softcap: float = 0.0,
+                             force_kernel: bool = False) -> jax.Array:
+    """One decode step of attention over an int8 paged KV pool, fused.
+
+    q (B, 1, H, D); k_q/v_q (NB+1, bs, KH, D) int8; PER-BLOCK k/v_scale
+    (NB+1, KH, D) f32; block_tables (B, nblk) int32; cache_pos (B,) ->
+    (B, 1, H, D).  K scales fold into the query row per block, V scales
+    into each block's context contribution.
+    """
+    b, sq, h, d = q.shape
+    assert sq == 1, q.shape
+    bs, kh = k_q.shape[1], k_q.shape[2]
+    g = h // kh
+    q_bytes = jnp.dtype(k_q.dtype).itemsize
+    if not (force_kernel or kernel_fits("decode_attn_paged", b, c=d, s=bs,
+                                        r=g, q_bytes=q_bytes, bn=bs)):
+        return ref.decode_attention_paged_q_ref(
+            q, k_q, k_scale, v_q, v_scale, block_tables, cache_pos,
+            softcap=softcap)
+    qg = q[:, 0].reshape(b, kh, g, d)
+    o = dap.decode_attention_paged_q(
+        qg, k_q, k_scale, v_q, v_scale, block_tables.astype(jnp.int32),
+        cache_pos.astype(jnp.int32).reshape(b, 1),
+        softcap=softcap, interpret=not _on_tpu())
     return o.reshape(b, 1, h, d)
 
 

@@ -82,6 +82,71 @@ def decode_attention_q_ref(q: jax.Array, k_q: jax.Array, k_scale: jax.Array,
     return o.reshape(b, sq, h, d).astype(q.dtype)
 
 
+def decode_attention_paged_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                               block_tables: jax.Array,
+                               cache_pos: jax.Array, *,
+                               softcap: float = 0.0) -> jax.Array:
+    """Gather-then-attend oracle for the paged decode kernel.
+
+    q (B, 1, H, D); k/v (NB+1, bs, KH, D) — batch axis = physical
+    block, id NB is the reserved dummy; block_tables (B, nblk) int32;
+    cache_pos (B,) -> (B, 1, H, D).  Gathers each stream's blocks into
+    its logical (S, KH, D) view, then runs the exact slot-pool math
+    (same op order as ``layers.cache.gqa_decode_attention``, so the f32
+    paged path is bit-identical to the slot path).
+    """
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    nblk, bs = block_tables.shape[1], k.shape[1]
+    skv = nblk * bs
+    kk = k[block_tables].reshape(b, skv, kh, d)      # (B, S, KH, D)
+    vv = v[block_tables].reshape(b, skv, kh, d)
+    qg = q.reshape(b, sq, kh, h // kh, d)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kk,
+                   preferred_element_type=jnp.float32) * (1.0 / math.sqrt(d))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = jnp.arange(skv)[None, :] <= cache_pos[:, None]
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(vv.dtype)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, vv)
+    return o.reshape(b, sq, h, d)
+
+
+def decode_attention_paged_q_ref(q: jax.Array, k_q: jax.Array,
+                                 k_scale: jax.Array, v_q: jax.Array,
+                                 v_scale: jax.Array,
+                                 block_tables: jax.Array,
+                                 cache_pos: jax.Array, *,
+                                 softcap: float = 0.0) -> jax.Array:
+    """Dequantize-gather-attend oracle for the paged int8 decode kernel.
+
+    k_q/v_q (NB+1, bs, KH, D) int8 with PER-BLOCK scale rows
+    k/v_scale (NB+1, KH, D) — a shared prefix block carries its own
+    scales, so adopting it never requantizes.  Dequantizes per block,
+    gathers through the tables, then full f32 softmax like
+    :func:`decode_attention_q_ref`.
+    """
+    b, sq, h, d = q.shape
+    kh = k_q.shape[2]
+    nblk, bs = block_tables.shape[1], k_q.shape[1]
+    skv = nblk * bs
+    k = k_q.astype(jnp.float32) * k_scale[:, None]   # (NB+1, bs, KH, D)
+    v = v_q.astype(jnp.float32) * v_scale[:, None]
+    kk = k[block_tables].reshape(b, skv, kh, d)
+    vv = v[block_tables].reshape(b, skv, kh, d)
+    qg = q.astype(jnp.float32).reshape(b, sq, kh, h // kh, d)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kk,
+                   preferred_element_type=jnp.float32) / math.sqrt(d)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = jnp.arange(skv)[None, :] <= cache_pos[:, None]
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, vv)
+    return o.reshape(b, sq, h, d).astype(q.dtype)
+
+
 def decode_attention_latent_q_ref(q_lat: jax.Array, q_rope: jax.Array,
                                   ckv_q: jax.Array, ckv_scale: jax.Array,
                                   krope_q: jax.Array, krope_scale: jax.Array,

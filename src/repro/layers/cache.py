@@ -11,9 +11,12 @@ branching, and the byte accounting in :mod:`repro.serve.pool` and
 A :class:`CachePlan` is the cache twin of :class:`repro.layers.plan.
 LinearPlan`: one plan per attention layer declaring
 
-* **family** — ``gqa_f32 | gqa_int8 | mla_latent | mla_latent_int8``
-  (``*_f32``/unsuffixed families hold the model dtype, f32 *or* bf16;
-  the name records "full width");
+* **family** — ``gqa_f32 | gqa_int8 | mla_latent | mla_latent_int8 |
+  gqa_paged_f32 | gqa_paged_int8`` (``*_f32``/unsuffixed families hold
+  the model dtype, f32 *or* bf16; the name records "full width"; the
+  paged families lay K/V out as fixed-size physical blocks addressed
+  through per-stream block tables — see :class:`PagedGeometry` and
+  :mod:`repro.serve.paging`);
 * **leaves** — per-leaf :class:`CacheLeafSpec` (shape template, dtype,
   which axis is the sequence axis, and the quantized-pair ref tying a
   ``*_q`` value leaf to its ``*_scale`` row);
@@ -57,8 +60,11 @@ FAMILY_GQA = "gqa_f32"
 FAMILY_GQA_INT8 = "gqa_int8"
 FAMILY_MLA = "mla_latent"
 FAMILY_MLA_INT8 = "mla_latent_int8"
+FAMILY_GQA_PAGED = "gqa_paged_f32"
+FAMILY_GQA_PAGED_INT8 = "gqa_paged_int8"
 
-FAMILIES = (FAMILY_GQA, FAMILY_GQA_INT8, FAMILY_MLA, FAMILY_MLA_INT8)
+FAMILIES = (FAMILY_GQA, FAMILY_GQA_INT8, FAMILY_MLA, FAMILY_MLA_INT8,
+            FAMILY_GQA_PAGED, FAMILY_GQA_PAGED_INT8)
 
 #: sequence-axis position (from the right) of every per-position cache
 #: leaf, by key — K/V pools are (..., S, KH, hd), latents (..., S, r).
@@ -70,6 +76,33 @@ SEQ_AXIS: dict[str, int] = {
 }
 
 _NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedGeometry:
+    """Static geometry of a paged KV pool.
+
+    Device K/V leaves are laid out ``(num_blocks + 1, block_size, ...)``
+    — the batch axis indexes *physical blocks*, not streams.  Physical
+    block id ``num_blocks`` is a reserved garbage block: idle slots'
+    block-table rows point at it, so their (discarded) decode scatters
+    and reads never touch live data.  A per-layer ``block_tables`` leaf
+    ``(slots, blocks_per_slot) int32`` maps each stream's logical block
+    index to its physical block.
+    """
+
+    block_size: int       #: tokens per KV block
+    num_blocks: int       #: usable blocks (device arrays hold +1 dummy)
+    slots: int            #: concurrent streams (block-table rows)
+    blocks_per_slot: int  #: max_seq // block_size (table row width)
+
+    @property
+    def dummy_block(self) -> int:
+        return self.num_blocks
+
+    @property
+    def max_seq(self) -> int:
+        return self.block_size * self.blocks_per_slot
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,12 +141,15 @@ class CachePlan:
 
     family: str
     leaves: tuple[CacheLeafSpec, ...]
+    #: paged families carry their block geometry; slot families None.
+    paged: PagedGeometry | None = None
 
     # -- contract -----------------------------------------------------------
 
     @property
     def quantized(self) -> bool:
-        return self.family in (FAMILY_GQA_INT8, FAMILY_MLA_INT8)
+        return self.family in (FAMILY_GQA_INT8, FAMILY_MLA_INT8,
+                               FAMILY_GQA_PAGED_INT8)
 
     @property
     def mla(self) -> bool:
@@ -132,14 +168,32 @@ class CachePlan:
 
     # -- construction -------------------------------------------------------
 
+    def _leaf_shape(self, l: CacheLeafSpec, batch: int,
+                    seq_len: int) -> tuple[int, ...]:
+        # Paged block tables are (slots, blocks_per_slot) regardless of
+        # the pool's (num_blocks + 1, block_size) leaf geometry.
+        if self.paged is not None and l.name == "block_tables":
+            return (self.paged.slots, self.paged.blocks_per_slot)
+        return l.shape(batch, seq_len)
+
     def spec(self, batch: int, seq_len: int) -> dict:
-        return {l.name: jax.ShapeDtypeStruct(l.shape(batch, seq_len), l.dtype)
+        return {l.name: jax.ShapeDtypeStruct(
+                    self._leaf_shape(l, batch, seq_len), l.dtype)
                 for l in self.leaves}
 
     def init(self, batch: int, seq_len: int) -> dict:
-        """Zero-initialized cache (zero scales dequantize to zeros)."""
-        return {l.name: jnp.zeros(l.shape(batch, seq_len), l.dtype)
-                for l in self.leaves}
+        """Zero-initialized cache (zero scales dequantize to zeros).
+        Paged block tables initialize to the reserved dummy block so an
+        unallocated stream can never alias live data."""
+        out = {}
+        for l in self.leaves:
+            shape = self._leaf_shape(l, batch, seq_len)
+            if self.paged is not None and l.name == "block_tables":
+                out[l.name] = jnp.full(shape, self.paged.dummy_block,
+                                       l.dtype)
+            else:
+                out[l.name] = jnp.zeros(shape, l.dtype)
+        return out
 
     # -- accounting (single source of truth for pool / roofline) ------------
 
@@ -150,12 +204,31 @@ class CachePlan:
 
     @property
     def bytes_per_slot(self) -> int:
-        """Per-slot constant bytes (f32 scale rows), this layer."""
-        return sum(l.bytes_per_slot for l in self.leaves)
+        """Per-slot constant bytes (f32 scale rows), this layer.  For
+        paged families "slot" means one physical block (the scale rows
+        are per-block); the int32 block tables are metadata, not KV."""
+        return sum(l.bytes_per_slot for l in self.leaves
+                   if l.name != "block_tables")
+
+    @property
+    def bytes_per_block(self) -> int:
+        """KV bytes of ONE physical block (paged families only):
+        ``block_size`` positions of values plus the per-block scale
+        rows."""
+        if self.paged is None:
+            raise ValueError(f"{self.family} is not a paged family")
+        return (self.paged.block_size * self.bytes_per_token
+                + self.bytes_per_slot)
 
     def bytes_per_step(self, slots: int, seq_len: int) -> int:
         """HBM bytes this layer's pool streams per decode step — decode
-        reads every slot's full ``seq_len`` (masked, not skipped)."""
+        reads every slot's full ``seq_len`` (masked, not skipped).  The
+        paged kernel streams one block per table entry (cold entries
+        alias the dummy block) plus the tables themselves."""
+        if self.paged is not None:
+            nblk = seq_len // self.paged.block_size
+            return slots * (nblk * self.bytes_per_block
+                            + nblk * jnp.dtype(jnp.int32).itemsize)
         return slots * (seq_len * self.bytes_per_token + self.bytes_per_slot)
 
     # -- write executors ----------------------------------------------------
@@ -183,6 +256,11 @@ class CachePlan:
                       prompt_len: jax.Array | None = None) -> dict:
         """Whole-prompt write at position 0 (quantize-on-insert for the
         int8 families, one-shot scales over the real prompt)."""
+        if self.paged is not None:
+            raise ValueError(
+                "paged pools take no sequential prefill writes — serve "
+                "stages prompts in a contiguous stream cache and the "
+                "pool manager scatters whole blocks at insert")
         if not self.quantized:
             return {k: lax.dynamic_update_slice_in_dim(cache[k], v, 0, 1)
                     for k, v in new.items()}
@@ -207,6 +285,10 @@ class CachePlan:
         at the write for BOTH dtypes: a later chunk's bucket is not
         guaranteed to overwrite them before they become attendable.
         """
+        if self.paged is not None:
+            raise ValueError(
+                "paged pools take no chunk writes — chunked prefill "
+                "stages into a contiguous stream cache")
         new = self._mask_new(new, start_pos, prompt_len)
         if not self.quantized:
             out = {k: lax.dynamic_update_slice_in_dim(cache[k], v,
@@ -229,6 +311,8 @@ class CachePlan:
         ``new`` values carry no S axis: (B, KH, D) / (B, r).  Int8
         families take the incremental running-max scale update
         (:func:`repro.quant.kv.kv_write_token`)."""
+        if self.paged is not None:
+            return self._write_decode_paged(cache, new, cache_pos)
         bidx = jnp.arange(cache_pos.shape[0])
         if not self.quantized:
             return {k: cache[k].at[bidx, cache_pos].set(v)
@@ -240,6 +324,40 @@ class CachePlan:
                                           cache_pos)
             out[key + "_q"] = q
             out[key + "_scale"] = scale
+        return out
+
+    def _write_decode_paged(self, cache: dict, new: dict,
+                            cache_pos: jax.Array) -> dict:
+        """One-token scatter through the block tables: the target block
+        is ``tables[slot, pos // bs]`` and the row ``pos % bs``.  Slots
+        whose table row still points at the dummy block (idle) write
+        garbage into the dummy — harmless by construction.  Int8 takes
+        the running-max scale update on the ONE gathered block, then
+        scatters block + scale row back (a requant touches only that
+        block, never the shared prefix blocks — which are never the
+        write target: decode always lands past the shared prefix)."""
+        geom = self.paged
+        bt = cache["block_tables"]
+        bidx = jnp.arange(cache_pos.shape[0])
+        blk = jnp.minimum(cache_pos // geom.block_size,
+                          geom.blocks_per_slot - 1)
+        phys = bt[bidx, blk]                              # (B,) physical ids
+        # a position past the table (slot-pool scatters drop it as OOB)
+        # must land in the dummy, not clamp into the slot's last block
+        phys = jnp.where(cache_pos < geom.max_seq, phys, geom.dummy_block)
+        row = cache_pos % geom.block_size
+        out = {"block_tables": bt}
+        if not self.quantized:
+            for key, x in new.items():
+                out[key] = cache[key].at[phys, row].set(
+                    x.astype(cache[key].dtype))
+            return out
+        for key, x in new.items():
+            blk = cache[key + "_q"][phys]                 # (B, bs, KH, D)
+            sc = cache[key + "_scale"][phys]              # (B, KH, D)
+            blk, sc = kvq.kv_write_token(blk, sc, x, row)
+            out[key + "_q"] = cache[key + "_q"].at[phys].set(blk)
+            out[key + "_scale"] = cache[key + "_scale"].at[phys].set(sc)
         return out
 
     # -- decode attention (the cache-coupled read) --------------------------
@@ -255,6 +373,19 @@ class CachePlan:
         if self.mla:
             raise ValueError("latent families attend via "
                              "attend_decode_latent")
+        if self.paged is not None:
+            from repro.kernels import ops as kops
+            from repro.kernels import ref as kref
+            bt = cache["block_tables"]
+            if not self.quantized:
+                fn = kops.decode_attention_paged if use_pallas \
+                    else kref.decode_attention_paged_ref
+                return fn(q, cache["k"], cache["v"], bt, cache_pos,
+                          softcap=softcap)
+            fn = kops.decode_attention_paged_q if use_pallas \
+                else kref.decode_attention_paged_q_ref
+            return fn(q, cache["k_q"], cache["k_scale"], cache["v_q"],
+                      cache["v_scale"], bt, cache_pos, softcap=softcap)
         if not self.quantized:
             skv = cache["k"].shape[1]
             valid = jnp.arange(skv)[None, :] <= cache_pos[:, None]  # (B,S)
@@ -358,6 +489,40 @@ def gqa_plan(num_kv_heads: int, head_dim: int, dtype,
     return plan
 
 
+def gqa_paged_plan(num_kv_heads: int, head_dim: int, dtype,
+                   quantize: str | None = None, *,
+                   geometry: PagedGeometry) -> CachePlan:
+    """The plan for one GQA layer's *paged* K/V pool.  Value leaves are
+    ``(num_blocks + 1, block_size, KH, D)`` — batch axis = physical
+    block — plus a ``(slots, blocks_per_slot)`` int32 ``block_tables``
+    leaf.  The int8 family blocks quantized values and their scale rows
+    together: one ``(KH, D)`` f32 scale row per physical block, so a
+    shared prefix block travels with its own scales."""
+    q = _check_quantize(quantize)
+    key = ("gqa_paged", num_kv_heads, head_dim, jnp.dtype(dtype).name, q,
+           geometry)
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        tail = (num_kv_heads, head_dim)
+        leaves = []
+        if q:
+            for name in ("k", "v"):
+                leaves.append(CacheLeafSpec(name + "_q", tail, jnp.int8,
+                                            SEQ_AXIS[name + "_q"]))
+                leaves.append(CacheLeafSpec(name + "_scale", tail,
+                                            jnp.float32, None,
+                                            scale_of=name + "_q"))
+            family = FAMILY_GQA_PAGED_INT8
+        else:
+            leaves = [CacheLeafSpec(n, tail, jnp.dtype(dtype), SEQ_AXIS[n])
+                      for n in ("k", "v")]
+            family = FAMILY_GQA_PAGED
+        leaves.append(CacheLeafSpec("block_tables", (), jnp.int32, None))
+        plan = CachePlan(family, tuple(leaves), paged=geometry)
+        _PLAN_CACHE[key] = plan
+    return plan
+
+
 def mla_plan(kv_lora_rank: int, qk_rope_dim: int, dtype,
              quantize: str | None = None) -> CachePlan:
     """The plan for one MLA layer's latent cache.  The latent *is* the
@@ -386,9 +551,17 @@ def mla_plan(kv_lora_rank: int, qk_rope_dim: int, dtype,
     return plan
 
 
-def build_cache_plan(cfg, dtype, kv_quantize: str | None = None) -> CachePlan:
+def build_cache_plan(cfg, dtype, kv_quantize: str | None = None,
+                     paged: PagedGeometry | None = None) -> CachePlan:
     """The per-attention-layer plan for a model config (``cfg.mla``
-    selects the latent families)."""
+    selects the latent families; a ``paged`` geometry selects the paged
+    GQA families)."""
+    if paged is not None:
+        if cfg.mla:
+            raise ValueError("paged KV pools serve the GQA families "
+                             "only (no paged MLA latent cache yet)")
+        return gqa_paged_plan(cfg.num_kv_heads, cfg.resolved_head_dim,
+                              dtype, kv_quantize, geometry=paged)
     if cfg.mla:
         return mla_plan(cfg.kv_lora_rank, cfg.qk_rope_dim, dtype,
                         kv_quantize)
@@ -402,6 +575,15 @@ def plan_from_cache(cache: dict, dtype=jnp.float32) -> CachePlan:
     layer-level use; the serve stack always threads plans).  Geometry
     comes from the leaf shapes; ``dtype`` is only needed for int8
     families (full-width leaves carry theirs)."""
+    if "block_tables" in cache:
+        val = cache.get("k", cache.get("k_q"))
+        nb1, bs, kh, hd = val.shape[-4:]
+        slots, bpslot = cache["block_tables"].shape[-2:]
+        geom = PagedGeometry(bs, nb1 - 1, slots, bpslot)
+        if "k_q" in cache:
+            return gqa_paged_plan(kh, hd, dtype, "int8", geometry=geom)
+        return gqa_paged_plan(kh, hd, cache["k"].dtype, None,
+                              geometry=geom)
     if "ckv_q" in cache:
         return mla_plan(cache["ckv_q"].shape[-1], cache["krope_q"].shape[-1],
                         dtype, "int8")

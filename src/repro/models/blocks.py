@@ -115,18 +115,20 @@ def apply_block(p: dict, x: jax.Array, cfg, *, positions, cache=None,
 
 
 def block_cache_spec(cfg, batch: int, seq_len: int, dtype,
-                     kv_quantize: str | None = None) -> dict:
+                     kv_quantize: str | None = None, paged=None) -> dict:
     # One declarative seam for every family: gqa_f32 | gqa_int8 |
-    # mla_latent | mla_latent_int8 (the MLA latent — itself the paper's
-    # rank-compressed K/V factor — quantizes like any other pool now).
-    return cache_mod.build_cache_plan(cfg, dtype,
-                                      kv_quantize).spec(batch, seq_len)
+    # mla_latent | mla_latent_int8 | gqa_paged_* (the MLA latent —
+    # itself the paper's rank-compressed K/V factor — quantizes like
+    # any other pool now; a PagedGeometry selects the paged layout,
+    # where batch/seq_len mean (num_blocks + 1, block_size)).
+    return cache_mod.build_cache_plan(cfg, dtype, kv_quantize,
+                                      paged).spec(batch, seq_len)
 
 
 def init_block_cache(cfg, batch: int, seq_len: int, dtype,
-                     kv_quantize: str | None = None) -> dict:
-    return cache_mod.build_cache_plan(cfg, dtype,
-                                      kv_quantize).init(batch, seq_len)
+                     kv_quantize: str | None = None, paged=None) -> dict:
+    return cache_mod.build_cache_plan(cfg, dtype, kv_quantize,
+                                      paged).init(batch, seq_len)
 
 
 # ---------------------------------------------------------------------------

@@ -464,15 +464,25 @@ class LMModel:
     # -- caches ----------------------------------------------------------------
 
     def _cache_tree(self, batch: int, seq_len: int, make_leaf,
-                    kv_quantize: str | None = None) -> PyTree:
+                    kv_quantize: str | None = None,
+                    paged=None) -> PyTree:
         cfg = self.cfg
         f = cfg.family
         dt = self.dtype
         def kv(n=None, inner=None):
-            spec = B.block_cache_spec(cfg, batch, seq_len, dt, kv_quantize)
+            spec = B.block_cache_spec(cfg, batch, seq_len, dt, kv_quantize,
+                                      paged)
             lead = tuple(d for d in (n, inner) if d is not None)
-            return jax.tree.map(
+            tree = jax.tree.map(
                 lambda s: make_leaf((*lead, *s.shape), s.dtype), spec)
+            if paged is not None and "block_tables" in tree:
+                bt = tree["block_tables"]
+                if not isinstance(bt, jax.ShapeDtypeStruct):
+                    # unallocated table rows must alias the dummy block,
+                    # never physical block 0 (zeros would)
+                    tree["block_tables"] = jnp.full(
+                        bt.shape, paged.dummy_block, bt.dtype)
+            return tree
         if f in ("dense", "moe"):
             out = {"blocks": kv(cfg.num_layers - cfg.moe_first_dense)}
             if f == "moe" and cfg.moe_first_dense:
@@ -503,22 +513,28 @@ class LMModel:
         raise ValueError(f)
 
     def cache_spec(self, batch: int, seq_len: int,
-                   kv_quantize: str | None = None) -> PyTree:
+                   kv_quantize: str | None = None, paged=None) -> PyTree:
         return self._cache_tree(batch, seq_len, jax.ShapeDtypeStruct,
-                                kv_quantize)
+                                kv_quantize, paged)
 
     def init_cache(self, batch: int, seq_len: int,
-                   kv_quantize: str | None = None) -> PyTree:
+                   kv_quantize: str | None = None, paged=None) -> PyTree:
+        """For paged pools ``batch``/``seq_len`` are the leaf geometry
+        ``(num_blocks + 1, block_size)``; block-table leaves take their
+        ``(slots, blocks_per_slot)`` shape from the geometry and
+        initialize to the dummy block."""
         return self._cache_tree(batch, seq_len,
-                                lambda s, d: jnp.zeros(s, d), kv_quantize)
+                                lambda s, d: jnp.zeros(s, d), kv_quantize,
+                                paged)
 
-    def cache_plan(self, kv_quantize: str | None = None
+    def cache_plan(self, kv_quantize: str | None = None, paged=None
                    ) -> cache_mod.CachePlan:
         """The per-attention-layer :class:`repro.layers.cache.CachePlan`
         (one geometry for all of this model's attention layers)."""
-        return cache_mod.build_cache_plan(self.cfg, self.dtype, kv_quantize)
+        return cache_mod.build_cache_plan(self.cfg, self.dtype, kv_quantize,
+                                          paged)
 
-    def cache_plans(self, kv_quantize: str | None = None
+    def cache_plans(self, kv_quantize: str | None = None, paged=None
                     ) -> list[cache_mod.CachePlan]:
         """One plan per cached attention layer — the declarative source
         the serve pool and roofline derive ALL byte accounting from
@@ -533,7 +549,7 @@ class LMModel:
             n = self.n_groups
         else:                     # ssm / encoder: no attention KV pools
             return []
-        return [self.cache_plan(kv_quantize)] * n
+        return [self.cache_plan(kv_quantize, paged)] * n
 
     # -- prefill / decode -------------------------------------------------------
 

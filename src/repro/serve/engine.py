@@ -49,7 +49,8 @@ import numpy as np
 
 from repro.configs.base import RunConfig
 from repro.models.api import get_model
-from repro.serve.pool import KVPoolManager
+from repro.serve import paging
+from repro.serve.pool import KVPoolManager, PagedKVPoolManager
 from repro.serve.runner import ModelRunner
 from repro.serve.scheduler import (PREFILL_BUCKET_MIN, PrefillStream,
                                    Request, Scheduler)
@@ -91,6 +92,9 @@ class ServeEngine:
                  prefill_chunk: int | None = None,
                  step_token_budget: int | None = None,
                  kv_byte_budget: int | None = None,
+                 kv_layout: str | None = None,
+                 kv_block_size: int | None = None,
+                 kv_num_blocks: int | None = None,
                  stats_window: int = STATS_WINDOW):
         """``quantize`` ("int8" | "fp8") quantizes the decomposed factors
         at load via :mod:`repro.quant`; ``kv_quantize`` ("int8") stores
@@ -107,6 +111,19 @@ class ServeEngine:
         (bytes of per-position KV across all streams) gates admission
         and triggers youngest-first preemption when decode growth
         crosses it; None = never preempt.
+
+        ``kv_layout`` ("slot" | "paged"; default ``run.lrd.kv_layout``)
+        selects the pool memory layout.  "paged" backs the pool with
+        fixed-size KV blocks behind per-slot block tables and a radix
+        prefix cache (:mod:`repro.serve.paging`): requests sharing a
+        block-aligned prompt prefix attach to the same physical blocks
+        copy-on-write, and byte accounting / preemption go block-
+        granular.  Paged serving needs chunked continuous admission
+        (the prefix gather stages into the chunk path) and a dense
+        non-MLA stack; ``kv_block_size`` (tokens per block, default
+        ``run.lrd.kv_block_size`` or 16) must divide ``max_seq``, and
+        ``kv_num_blocks`` sizes the physical pool (default
+        ``slots * max_seq / block_size`` — the slot pool's capacity).
         """
         self.run = run
         self.model = get_model(run.model)
@@ -149,12 +166,36 @@ class ServeEngine:
         self.step_token_budget = step_token_budget \
             or run.lrd.step_token_budget or (slots + self.prefill_chunk)
 
+        if kv_layout is None:
+            kv_layout = getattr(run.lrd, "kv_layout", "slot") or "slot"
+        if kv_layout not in ("slot", "paged"):
+            raise ValueError(
+                f"kv_layout {kv_layout!r} (want 'slot' or 'paged')")
+        self.kv_layout = kv_layout
+        # pool before runner: the paged runner's pool plan needs the
+        # pool's PagedGeometry (block count / size / tables)
+        if kv_layout == "paged":
+            if self.admission != "continuous":
+                raise ValueError(
+                    "kv_layout='paged' needs continuous admission (the "
+                    "radix prefix gather stages into the chunked "
+                    "prefill path)")
+            self.pool = PagedKVPoolManager(
+                self.model, slots, max_seq,
+                kv_quantize=self.kv_quantize,
+                byte_budget=kv_byte_budget,
+                block_size=(kv_block_size or run.lrd.kv_block_size
+                            or paging.DEFAULT_BLOCK_SIZE),
+                num_blocks=kv_num_blocks)
+        else:
+            self.pool = KVPoolManager(self.model, slots, max_seq,
+                                      kv_quantize=self.kv_quantize,
+                                      byte_budget=kv_byte_budget)
         self.runner = ModelRunner(self.model, params, self.opts,
                                   max_seq=max_seq,
-                                  kv_quantize=self.kv_quantize)
-        self.pool = KVPoolManager(self.model, slots, max_seq,
                                   kv_quantize=self.kv_quantize,
-                                  byte_budget=kv_byte_budget)
+                                  paged=getattr(self.pool, "geometry",
+                                                None))
         self.scheduler = Scheduler(slots, prefill_chunk=self.prefill_chunk,
                                    step_token_budget=self.step_token_budget)
         # Decode streams the entire KV pool (masked, not skipped) every
@@ -163,6 +204,7 @@ class ServeEngine:
         # the CachePlans (layers/cache.py), never from hand-kept key
         # lists, so every cache family is costed automatically.
         self.plan_summary["kv_bytes_per_step"] = self.pool.kv_bytes_per_step
+        self.plan_summary["kv_layout"] = kv_layout
         if self.pool.plans:
             self.plan_summary["kv_cache_family"] = self.pool.plans[0].family
         self.key = jax.random.PRNGKey(seed)
@@ -330,6 +372,13 @@ class ServeEngine:
                 # attention sees the exact K/V prefix, the pool
                 # quantizes once at insert -> chunked == whole, bit-exact
                 ps.cache = self.runner.new_stream_cache()
+                if ps.written:
+                    # paged prefix hit: the first `written` positions'
+                    # KV is already pooled — gather it into the staging
+                    # cache (dequantizing int8 blocks) and chunk-prefill
+                    # only the suffix
+                    ps.cache = self.pool.gather_prefix(
+                        ps.cache, ps.slot, ps.written)
             b = self._bucket_len(c)
             if ps.written + b > self.max_seq:   # keep the offset write
                 b = self.max_seq - ps.written   # inside the slot
@@ -389,7 +438,10 @@ class ServeEngine:
         produced = 0
         for i in live:
             self._append_token(self.active[i], int(toks[i]), now)
-            pool.grow(i)
+            # the KV this step wrote at the slot's position belongs to
+            # the *input* token — the paged pool's prefix registry
+            # tracks it so released blocks stay radix-matchable
+            pool.grow(i, token=int(tokens[i, 0]))
             produced += 1
             self._maybe_finish(i)
         return produced

@@ -29,6 +29,7 @@ ModelRunner`); policy never lives here (that is
 """
 from __future__ import annotations
 
+import functools
 from typing import Any
 
 import jax
@@ -37,6 +38,7 @@ import numpy as np
 
 from repro.layers import cache as cache_mod
 from repro.quant import kv as kvq
+from repro.serve import paging
 
 PyTree = Any
 
@@ -93,18 +95,28 @@ class KVPoolManager:
     def occupied_slots(self) -> list[int]:
         return [i for i in range(self.slots) if self.tickets[i] >= 0]
 
-    def allocate(self, slot: int, length: int) -> None:
+    def allocate(self, slot: int, length: int,
+                 tokens: list[int] | None = None) -> int:
         """Reserve ``slot`` for a stream of ``length`` prompt tokens.
         The full prompt's bytes are reserved up front, so admission
-        cannot overshoot the budget mid-prefill."""
+        cannot overshoot the budget mid-prefill.  ``tokens`` is the
+        prompt itself — unused here; the paged pool prefix-matches it.
+        Returns the number of leading prompt tokens whose KV is already
+        pooled (always 0 for the slot layout)."""
+        del tokens
         assert self.tickets[slot] < 0, slot
         self.tickets[slot] = self._next_ticket
         self._next_ticket += 1
         self.lengths[slot] = length
         self.positions[slot] = 0
+        return 0
 
-    def grow(self, slot: int, n: int = 1) -> None:
-        """Account ``n`` decoded tokens of KV growth for ``slot``."""
+    def grow(self, slot: int, n: int = 1,
+             token: int | None = None) -> None:
+        """Account ``n`` decoded tokens of KV growth for ``slot``
+        (``token`` — the id whose KV just landed — matters only to the
+        paged pool's prefix registry)."""
+        del token
         self.positions[slot] += n
         self.lengths[slot] += n
 
@@ -118,10 +130,12 @@ class KVPoolManager:
     def used_bytes(self) -> int:
         return int(self.lengths.sum() * self.bytes_per_token)
 
-    def can_admit(self, prompt_len: int) -> bool:
+    def can_admit(self, prompt_len: int,
+                  tokens: list[int] | None = None) -> bool:
         """Admission gate: does a ``prompt_len``-token stream fit the
         byte budget?  An empty pool always admits (otherwise a single
         over-budget prompt could deadlock the queue)."""
+        del tokens
         if self.byte_budget is None or self.bytes_per_token == 0:
             return True
         if not self.occupied_slots():
@@ -196,3 +210,413 @@ class KVPoolManager:
                         jnp.asarray(length, jnp.int32))
         self.positions[slot] = length
         self.lengths[slot] = length
+
+
+class PagedKVPoolManager:
+    """Block-granular pool: the engine-facing :class:`KVPoolManager`
+    surface backed by a :class:`repro.serve.paging.BlockPool`, per-slot
+    block tables, and a radix prefix cache.
+
+    Device state is the paged cache pytree — K/V leaves
+    ``(num_blocks + 1, block_size, ...)`` plus per-layer
+    ``(slots, blocks_per_slot)`` int32 block tables (physical id
+    ``num_blocks`` is the reserved dummy; idle table entries alias it).
+    Host state is the refcounted :class:`BlockPool`, each slot's block
+    table and token list (exactly the tokens whose KV is pooled —
+    prompt at insert, +1 per decode step), and the usual
+    positions/lengths/tickets arrays.
+
+    Lifecycle vs the slot pool:
+
+    * :meth:`allocate` radix-matches the prompt (capped at
+      ``length - 1`` so at least one token always re-prefills — the
+      engine needs its logits), retains matched blocks read-only, and
+      allocates fresh blocks past the divergence point;
+    * the engine gathers the matched prefix into the stream's staging
+      cache (:meth:`gather_prefix`) and chunk-prefills only the
+      suffix;
+    * :meth:`insert` re-matches against the radix first (adoption
+      dedup: a concurrent identical prompt may have registered the
+      same blocks since admission — ours are released, theirs
+      retained), registers the stream's remaining full prompt blocks
+      first-writer-wins, then scatters the staged KV into the blocks
+      the stream still owns (int8 pools quantize per block on the
+      way in — one scale row per block, blocked with its values);
+    * :meth:`release` publishes the stream's *generated* full blocks
+      to the radix too (a preempted stream resumes by re-matching its
+      own blocks — near-zero recompute, deterministic under greedy)
+      and drops all references: unreferenced registered blocks go
+      cold (LRU-recyclable), unregistered ones free.
+
+    ``used_bytes`` counts referenced (ref > 0) physical blocks — the
+    block-granular byte accounting the ISSUE's preemption policy runs
+    on: shared prefix bytes are counted once, not per stream.
+    """
+
+    _SEQ_AXIS = cache_mod.SEQ_AXIS
+
+    def __init__(self, model, slots: int, max_seq: int, *,
+                 kv_quantize: str | None = None,
+                 byte_budget: int | None = None,
+                 block_size: int = paging.DEFAULT_BLOCK_SIZE,
+                 num_blocks: int | None = None):
+        if max_seq % block_size:
+            raise ValueError(
+                f"max_seq {max_seq} must be a multiple of the KV block "
+                f"size {block_size}")
+        bpslot = max_seq // block_size
+        if num_blocks is None:
+            num_blocks = slots * bpslot
+        if num_blocks < bpslot:
+            raise ValueError(
+                f"num_blocks {num_blocks} cannot cover one full stream "
+                f"({bpslot} blocks)")
+        self.model = model
+        self.slots = slots
+        self.max_seq = max_seq
+        self.kv_quantize = kv_quantize
+        self.byte_budget = byte_budget
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.blocks_per_slot = bpslot
+        self.geometry = cache_mod.PagedGeometry(block_size, num_blocks,
+                                                slots, bpslot)
+
+        self.cache = model.init_cache(num_blocks + 1, block_size,
+                                      kv_quantize=kv_quantize,
+                                      paged=self.geometry)
+        self.positions = np.zeros((slots,), np.int32)   # next write pos
+        self.lengths = np.zeros((slots,), np.int64)     # logical KV tokens
+        self.tickets = np.full((slots,), -1, np.int64)  # admission age
+        self._next_ticket = 0
+
+        self.blocks = paging.BlockPool(num_blocks, block_size)
+        self.tables: list[list[int]] = [[] for _ in range(slots)]
+        self.tokens: list[list[int]] = [[] for _ in range(slots)]
+        #: leading radix-adopted blocks per slot (read-only shares)
+        self._shared: list[int] = [0] * slots
+        #: fresh blocks replaced by a concurrent twin's at insert
+        self.adoptions = 0
+
+        self.plans = model.cache_plans(kv_quantize, paged=self.geometry)
+        self.bytes_per_token = sum(p.bytes_per_token for p in self.plans)
+        #: KV bytes of one physical block across all layers
+        self.bytes_per_block = sum(p.bytes_per_block for p in self.plans)
+        self.kv_bytes_per_step = sum(
+            p.bytes_per_step(slots, max_seq) for p in self.plans)
+
+        self._jit_table = jax.jit(self._table_update, donate_argnums=(0,))
+        self._jit_gather = jax.jit(self._gather_prefix, donate_argnums=(0,),
+                                   static_argnames=("block_size",))
+        self._jit_insert = jax.jit(
+            functools.partial(self._insert_blocks, quantize=False),
+            donate_argnums=(0,), static_argnames=("block_size",))
+        self._jit_insert_q = jax.jit(
+            functools.partial(self._insert_blocks, quantize=True),
+            donate_argnums=(0,), static_argnames=("block_size",))
+
+    # -- slot bookkeeping ---------------------------------------------------
+
+    def free_slots(self) -> list[int]:
+        return [i for i in range(self.slots) if self.tickets[i] < 0]
+
+    def occupied_slots(self) -> list[int]:
+        return [i for i in range(self.slots) if self.tickets[i] >= 0]
+
+    def allocate(self, slot: int, length: int,
+                 tokens: list[int] | None = None) -> int:
+        """Reserve ``slot`` for a ``length``-token prompt: attach to
+        the radix-cached prefix (capped one block short of the whole
+        prompt — the final token must re-prefill for its logits) and
+        allocate fresh blocks covering positions ``[0, length]`` (the
+        +1 is the first decode write).  Returns the matched token
+        count — the engine skips prefilling that prefix."""
+        assert self.tickets[slot] < 0, slot
+        toks = [int(t) for t in tokens] if tokens is not None else []
+        matched = self.blocks.match_retain(toks, max_tokens=length - 1) \
+            if toks else []
+        table = list(matched)
+        need = min(length // self.block_size + 1, self.blocks_per_slot)
+        while len(table) < need:
+            table.append(self.blocks.alloc())
+        self.tickets[slot] = self._next_ticket
+        self._next_ticket += 1
+        self.lengths[slot] = length
+        self.positions[slot] = 0
+        self.tables[slot] = table
+        self.tokens[slot] = toks[:length]
+        self._shared[slot] = len(matched)
+        # the device table row stays at the dummy until :meth:`insert`
+        # activates the stream: decode steps scatter a garbage row for
+        # every non-live slot at its position (0 here), and a published
+        # table would route that write into a radix-shared block
+        return len(matched) * self.block_size
+
+    def grow(self, slot: int, n: int = 1,
+             token: int | None = None) -> None:
+        """Account ``n`` decoded tokens for ``slot`` (``token`` is the
+        id whose KV the decode step just wrote — it extends the slot's
+        token list so release can publish generated blocks).  Allocates
+        the next block when the write position crosses into it."""
+        if token is not None:
+            self.tokens[slot].append(int(token))
+        self.positions[slot] += n
+        self.lengths[slot] += n
+        need = min(int(self.positions[slot]) // self.block_size + 1,
+                   self.blocks_per_slot)
+        grew = False
+        while len(self.tables[slot]) < need:
+            self.tables[slot].append(self.blocks.alloc())
+            grew = True
+        if grew:
+            self._push_table(slot)
+
+    def release(self, slot: int) -> None:
+        """Free ``slot``: publish its full token blocks to the radix
+        (prompt AND generated — a preempted request readmits onto its
+        own blocks), drop every block reference, and point the device
+        table row back at the dummy block."""
+        if self.positions[slot] > 0:      # KV actually landed
+            n_full = int(self.positions[slot]) // self.block_size
+            n_full = min(n_full, len(self.tables[slot]))
+            if n_full:
+                self.blocks.register(
+                    self.tokens[slot][:n_full * self.block_size],
+                    self.tables[slot][:n_full])
+        for bid in self.tables[slot]:
+            self.blocks.release(bid)
+        self.tables[slot] = []
+        self.tokens[slot] = []
+        self._shared[slot] = 0
+        self.tickets[slot] = -1
+        self.lengths[slot] = 0
+        self.positions[slot] = 0
+        self._push_table(slot)
+
+    # -- byte budget --------------------------------------------------------
+
+    def used_bytes(self) -> int:
+        """Bytes of referenced (ref > 0) physical blocks — a shared
+        prefix counts once, however many streams attach to it."""
+        return int(self.blocks.used_blocks() * self.bytes_per_block)
+
+    def can_admit(self, prompt_len: int,
+                  tokens: list[int] | None = None) -> bool:
+        """Admission gate in blocks: fresh blocks the prompt needs
+        (radix hits subtract — shared blocks are already paid for)
+        must fit both the physical pool and the byte budget.  An empty
+        pool always admits budget-wise (a single over-budget prompt
+        must not deadlock the queue)."""
+        need = min(prompt_len // self.block_size + 1, self.blocks_per_slot)
+        if tokens is not None:
+            need -= len(self.blocks.match_peek(
+                [int(t) for t in tokens], max_tokens=prompt_len - 1))
+        if need > self.blocks.free_capacity():
+            return False                   # physically impossible right now
+        if self.byte_budget is None or self.bytes_per_block == 0:
+            return True
+        if not self.occupied_slots():
+            return True
+        projected = self.used_bytes() + need * self.bytes_per_block
+        return projected <= self.byte_budget
+
+    def pressure_victims(self) -> list[int]:
+        """Slots to preempt, youngest ticket first: first until the
+        referenced-block bytes are back under the byte budget, then
+        until the pool can physically cover every surviving stream's
+        imminent block allocation (recycling cold blocks counts).  At
+        least one stream always survives."""
+        occ = sorted(self.occupied_slots(), key=lambda s: self.tickets[s])
+        victims: list[int] = []
+
+        def sole_blocks(s):   # blocks only this stream holds
+            return sum(1 for b in self.tables[s] if self.blocks.ref[b] == 1)
+
+        if self.byte_budget is not None and self.bytes_per_block:
+            used = self.used_bytes()
+            while used > self.byte_budget and len(occ) > 1:
+                s = occ.pop()                  # youngest admission
+                used -= sole_blocks(s) * self.bytes_per_block
+                victims.append(s)
+
+        def needs_block(s):   # next grow crosses into an unallocated block
+            nxt = int(self.positions[s]) + 1
+            need = min(nxt // self.block_size + 1, self.blocks_per_slot)
+            return self.positions[s] > 0 and need > len(self.tables[s])
+
+        cap = self.blocks.free_capacity()
+        while len(occ) > 1 and cap < sum(map(needs_block, occ)):
+            s = occ.pop()
+            cap += sole_blocks(s)
+            victims.append(s)
+        return victims
+
+    # -- device gather / scatter --------------------------------------------
+
+    def _ids_row(self, table: list[int]) -> np.ndarray:
+        row = np.full((self.blocks_per_slot,), self.geometry.dummy_block,
+                      np.int32)
+        row[:len(table)] = table
+        return row
+
+    def _push_table(self, slot: int) -> None:
+        self.cache = self._jit_table(self.cache,
+                                     jnp.asarray(slot, jnp.int32),
+                                     jnp.asarray(self._ids_row(
+                                         self.tables[slot])))
+
+    @staticmethod
+    def _table_update(cache: PyTree, slot: jax.Array,
+                      row: jax.Array) -> PyTree:
+        """Write one slot's block-table row on every layer's table."""
+        def leaf(path, x):
+            if str(getattr(path[-1], "key", path[-1])) != "block_tables":
+                return x
+            ix = (slice(None),) * (x.ndim - 2) + (slot,)
+            return x.at[ix].set(row)
+        return jax.tree_util.tree_map_with_path(leaf, cache)
+
+    @staticmethod
+    def _gather_prefix(staging: PyTree, cache: PyTree, ids: jax.Array,
+                       upto: jax.Array, *, block_size: int) -> PyTree:
+        """Copy the pooled KV of blocks ``ids`` into a contiguous
+        batch=1 staging cache, dequantizing int8 blocks, masking
+        positions ``>= upto`` to the staging zeros."""
+        def layer(pld, sgd):
+            out = {}
+            for name in ("k", "v"):
+                if name in pld:
+                    g = jnp.take(pld[name], ids, axis=pld[name].ndim - 4)
+                else:
+                    qv = jnp.take(pld[name + "_q"], ids,
+                                  axis=pld[name + "_q"].ndim - 4)
+                    sc = jnp.take(pld[name + "_scale"], ids,
+                                  axis=pld[name + "_scale"].ndim - 3)
+                    g = qv.astype(jnp.float32) * sc[..., :, None, :, :]
+                # (..., nblk, bs, KH, D) -> (..., 1, S, KH, D)
+                lead = g.shape[:-4]
+                seq = g.shape[-4] * g.shape[-3]
+                g = g.reshape(*lead, 1, seq, *g.shape[-2:])
+                mask = (jnp.arange(seq) < upto).reshape(
+                    (1,) * (len(lead) + 1) + (seq, 1, 1))
+                out[name] = jnp.where(mask, g.astype(sgd[name].dtype),
+                                      sgd[name])
+            return out
+
+        def rec(pld, sgd):
+            if isinstance(pld, dict) and "block_tables" in pld:
+                return layer(pld, sgd)
+            if isinstance(pld, dict):
+                return {k: rec(pld[k], sgd[k]) for k in pld}
+            return sgd
+        return rec(cache, staging)
+
+    @staticmethod
+    def _insert_blocks(cache: PyTree, cache1: PyTree, sc_ids: jax.Array,
+                       length: jax.Array, *, block_size: int,
+                       quantize: bool) -> PyTree:
+        """Scatter a staged batch=1 stream cache into physical blocks.
+
+        ``sc_ids (blocks_per_slot,)`` — destination physical block per
+        logical block; blocks the stream does NOT own (radix-adopted,
+        or past the prompt's coverage) are pre-pointed at the dummy, so
+        a shared prefix block is never written (the copy-on-write
+        invariant lives here).  Rows ``>= length`` are zero-masked.
+        Int8 pools quantize per block: one absmax scale row per
+        physical block, blocked together with its values.
+        """
+        def layer(pld, sgd):
+            out = dict(pld)
+            for name in ("k", "v"):
+                x = sgd[name]                     # (..., 1, S, KH, D)
+                seq = x.shape[-3]
+                xb = x.reshape(*x.shape[:-4], seq // block_size,
+                               block_size, *x.shape[-2:])
+                pos = jnp.arange(seq).reshape(seq // block_size,
+                                              block_size)
+                xb = jnp.where((pos < length)[..., None, None], xb, 0.0)
+                if not quantize and name in pld:
+                    ax = pld[name].ndim - 4
+                    ix = (slice(None),) * ax + (sc_ids,)
+                    out[name] = pld[name].at[ix].set(
+                        xb.astype(pld[name].dtype))
+                    continue
+                scale = kvq.kv_scales(xb, axis=-3)     # (..., nblk, KH, D)
+                qv = kvq.quantize_kv(xb, jnp.expand_dims(scale, -3))
+                axv = pld[name + "_q"].ndim - 4
+                out[name + "_q"] = pld[name + "_q"].at[
+                    (slice(None),) * axv + (sc_ids,)].set(qv)
+                axs = pld[name + "_scale"].ndim - 3
+                out[name + "_scale"] = pld[name + "_scale"].at[
+                    (slice(None),) * axs + (sc_ids,)].set(scale)
+            return out
+
+        def rec(pld, sgd):
+            if isinstance(pld, dict) and "block_tables" in pld:
+                return layer(pld, sgd)
+            if isinstance(pld, dict):
+                return {k: rec(pld[k], sgd[k]) if k in sgd else pld[k]
+                        for k in pld}
+            return pld
+        return rec(cache, cache1)
+
+    def gather_prefix(self, staging: PyTree, slot: int,
+                      upto: int) -> PyTree:
+        """Fill a fresh staging cache with ``slot``'s first ``upto``
+        pooled positions (the radix-matched prefix)."""
+        return self._jit_gather(staging, self.cache,
+                                jnp.asarray(self._ids_row(
+                                    self.tables[slot])),
+                                jnp.asarray(upto, jnp.int32),
+                                block_size=self.block_size)
+
+    def insert(self, cache1: PyTree, slot: int, length: int, *,
+               from_full_precision: bool = False) -> None:
+        """Land a finished stream cache in its blocks (one jitted
+        scatter; the old pool buffer is donated).
+
+        Host-side adoption first: if another stream registered blocks
+        for our full prompt blocks since admission, adopt theirs
+        (retain the published block, release our redundant fresh one)
+        — N concurrent identical prompts still store the prefix
+        exactly once.  Then register our remaining full blocks
+        first-writer-wins and scatter only into blocks we own.
+        """
+        del from_full_precision   # staging is always full-precision here
+        toks = self.tokens[slot]
+        table = self.tables[slot]
+        n_full = min(length // self.block_size, len(table))
+        path = self.blocks.match_peek(toks[:n_full * self.block_size])
+        for i in range(len(path)):
+            if table[i] != path[i]:
+                self.blocks.retain(path[i])
+                self.blocks.release(table[i])   # fresh, never written
+                table[i] = path[i]
+                self.adoptions += 1
+        self._shared[slot] = max(self._shared[slot], len(path))
+        if n_full > len(path):
+            self.blocks.register(toks[:n_full * self.block_size],
+                                 table[:n_full])
+        # scatter staged KV into owned blocks only; adopted entries
+        # aim at the dummy (their content is already pooled)
+        ids = self._ids_row(table)
+        ids[:self._shared[slot]] = self.geometry.dummy_block
+        fn = self._jit_insert_q if self.kv_quantize else self._jit_insert
+        self.cache = fn(self.cache, cache1, jnp.asarray(ids),
+                        jnp.asarray(length, jnp.int32),
+                        block_size=self.block_size)
+        self.positions[slot] = length
+        self.lengths[slot] = length
+        self._push_table(slot)
+
+    # -- stats (bench / tests) ----------------------------------------------
+
+    def physical_blocks_in_use(self) -> int:
+        return self.blocks.used_blocks()
+
+    def prefix_stats(self) -> dict:
+        st = self.blocks.stats
+        return {"prefix_queries": st.prefix_queries,
+                "prefix_block_hits": st.prefix_block_hits,
+                "adopted_blocks": self.adoptions,
+                "evictions": st.evictions}

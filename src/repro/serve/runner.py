@@ -42,14 +42,15 @@ SEG_KINDS = ("decode", "prefill_chunk", "prefill")
 
 class ModelRunner:
     def __init__(self, model, params: PyTree, opts, *, max_seq: int,
-                 kv_quantize: str | None = None):
+                 kv_quantize: str | None = None, paged=None):
         self.model = model
         self.params = params
         self.opts = opts
         self.max_seq = max_seq
         self.kv_quantize = kv_quantize
-        #: plan of the shared slot pool (and blocking-admission staging)
-        self.pool_plan = model.cache_plan(kv_quantize)
+        #: plan of the shared pool (slot or, given a PagedGeometry,
+        #: block-table paged) and of blocking-admission staging
+        self.pool_plan = model.cache_plan(kv_quantize, paged=paged)
         #: plan of a full-precision chunked-prefill staging cache
         self.stream_plan = model.cache_plan(None)
         mdl = model

@@ -119,11 +119,15 @@ class Scheduler:
             # a preempted request resumes by re-prefilling its prompt
             # plus everything it already generated
             toks = list(req.prompt) + list(req.output)
-            if not pool.can_admit(len(toks)):
+            if not pool.can_admit(len(toks), tokens=toks):
                 break
             self.waiting.popleft()
-            pool.allocate(slot, len(toks))
-            ps = PrefillStream(req, slot, toks)
+            # a paged pool prefix-matches the prompt against its radix
+            # cache: `matched` leading tokens are already pooled, so the
+            # stream starts with them written (the engine gathers their
+            # KV into the staging cache before the first chunk)
+            matched = pool.allocate(slot, len(toks), tokens=toks)
+            ps = PrefillStream(req, slot, toks, written=matched)
             self.prefilling.append(ps)
             started.append(ps)
         return started

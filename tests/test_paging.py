@@ -1,0 +1,487 @@
+"""Paged KV pool: block allocator, radix prefix cache, paged CachePlan
+families, the block-table fused decode kernel, and paged serving.
+
+The load-bearing invariants:
+
+* N requests sharing a block-aligned prompt prefix store that prefix's
+  KV blocks exactly ONCE — via the admit-time radix match AND via the
+  insert-time adoption dedup for concurrently admitted twins (physical
+  block counts asserted);
+* a shared block is never written (copy-on-write = fresh allocation
+  past the divergence point; the tail partial block is always private);
+* paged greedy decode is token-identical to the slot pool for f32
+  (bit-exact: exact gather + identical attention op order) and int8;
+* the paged decode kernel matches its ref.py oracle <= 1e-2 in
+  interpret mode, for f32 / int8 / softcap, and the ``kernel_fits``
+  fallback dispatch returns the oracle bit-for-bit;
+* preemption under a block byte budget stays greedy-deterministic, and
+  ``used_bytes`` returns to exactly zero after every release.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import ModelConfig, ParallelConfig, RunConfig
+from repro.layers import cache as cache_mod
+from repro.kernels import ops, ref
+from repro.models.api import get_model
+from repro.quant import kv as kvq
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.paging import BlockPool, RadixPrefixCache
+from repro.serve.pool import KVPoolManager, PagedKVPoolManager
+
+BS = 16
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(registry.get("llama3.2-1b").smoke,
+                              dtype="float32")
+    run = RunConfig(model=cfg, parallel=ParallelConfig())
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    return run, m, params
+
+
+def _engine(run, params, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("prefill_chunk", 8)
+    return ServeEngine(run, params, **kw)
+
+
+def _serve(eng, prompts, n=6):
+    reqs = [Request(uid=i, prompt=list(p), max_new_tokens=n)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.add_request(r)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    return [r.output for r in reqs]
+
+
+# robust prompt: int8 quantization noise (per-slot OR per-block scales)
+# stays below every greedy argmax margin along this trajectory
+ROBUST = tuple((i * 7 + 14) % 50 + 1 for i in range(21))
+SHARED = tuple((i * 5 + 2) % 60 + 1 for i in range(33))   # 2 full blocks
+
+
+# ---------------------------------------------------------------------------
+# RadixPrefixCache / BlockPool units
+# ---------------------------------------------------------------------------
+
+class TestRadix:
+    def test_match_block_aligned_prefix_only(self):
+        rx = RadixPrefixCache(4)
+        rx.insert(list(range(8)), [10, 11])
+        assert rx.match(list(range(8))) == [10, 11]
+        assert rx.match(list(range(12))) == [10, 11]    # tail not cached
+        assert rx.match(list(range(4)) + [99] * 4) == [10]
+        assert rx.match([99] * 8) == []
+        assert rx.match([0, 1, 2]) == []                # partial block
+
+    def test_insert_first_writer_wins(self):
+        rx = RadixPrefixCache(4)
+        rx.insert(list(range(8)), [10, 11])
+        kept = rx.insert(list(range(8)), [20, 21])
+        assert kept == [10, 11]                         # theirs survived
+        assert 20 not in rx and 21 not in rx
+
+    def test_forget_leaf_only(self):
+        rx = RadixPrefixCache(4)
+        rx.insert(list(range(8)), [10, 11])
+        assert not rx.is_leaf(10) and rx.is_leaf(11)
+        rx.forget(11)
+        assert 11 not in rx and rx.is_leaf(10)
+        assert rx.match(list(range(8))) == [10]
+
+
+class TestBlockPool:
+    def test_refcount_states(self):
+        bp = BlockPool(4, 4)
+        a = bp.alloc()
+        assert bp.used_blocks() == 1 and bp.free_capacity() == 3
+        bp.release(a)                       # unregistered -> free
+        assert bp.used_blocks() == 0
+        b = bp.alloc()
+        bp.register(list(range(4)), [b])
+        bp.release(b)                       # registered -> cold
+        assert bp.used_blocks() == 0 and bp.free_capacity() == 4
+        ids = bp.match_retain(list(range(4)))
+        assert ids == [b] and bp.used_blocks() == 1   # cold -> warm
+
+    def test_lru_cold_eviction_is_leaf_only(self):
+        bp = BlockPool(2, 4)
+        a, b = bp.alloc(), bp.alloc()
+        bp.register(list(range(8)), [a, b])   # a interior, b leaf
+        bp.release(a)
+        bp.release(b)
+        c = bp.alloc()                        # must evict leaf b, not a
+        assert c == b
+        assert bp.match_peek(list(range(8))) == [a]
+        assert bp.stats.evictions == 1
+
+    def test_exhaustion_raises(self):
+        bp = BlockPool(1, 4)
+        bp.alloc()
+        with pytest.raises(RuntimeError):
+            bp.alloc()
+
+    def test_match_retain_cap(self):
+        bp = BlockPool(4, 4)
+        a, b = bp.alloc(), bp.alloc()
+        bp.register(list(range(8)), [a, b])
+        bp.release(a)
+        bp.release(b)
+        # cap one token short of the full match: the last block must
+        # stay unmatched so at least one token re-prefills
+        assert bp.match_retain(list(range(8)), max_tokens=7) == [a]
+        assert bp.ref[a] == 1 and bp.ref[b] == 0
+
+
+# ---------------------------------------------------------------------------
+# CachePlan paged families
+# ---------------------------------------------------------------------------
+
+class TestPagedPlan:
+    GEOM = cache_mod.PagedGeometry(block_size=4, num_blocks=8, slots=2,
+                                   blocks_per_slot=4)
+
+    def test_families_and_spec(self):
+        plan = cache_mod.gqa_paged_plan(2, 8, jnp.float32,
+                                        geometry=self.GEOM)
+        assert plan.family == "gqa_paged_f32"
+        spec = plan.spec(9, 4)              # (num_blocks + 1, block_size)
+        assert spec["k"] == jax.ShapeDtypeStruct((9, 4, 2, 8), jnp.float32)
+        assert spec["block_tables"] == jax.ShapeDtypeStruct((2, 4),
+                                                            jnp.int32)
+        init = plan.init(9, 4)
+        assert int(init["block_tables"].min()) == self.GEOM.dummy_block
+
+    def test_int8_blocked_scales(self):
+        plan = cache_mod.gqa_paged_plan(2, 8, jnp.float32, "int8",
+                                        geometry=self.GEOM)
+        assert plan.family == "gqa_paged_int8" and plan.quantized
+        spec = plan.spec(9, 4)
+        assert spec["k_q"] == jax.ShapeDtypeStruct((9, 4, 2, 8), jnp.int8)
+        # ONE scale row per physical block, blocked with its values
+        assert spec["k_scale"] == jax.ShapeDtypeStruct((9, 2, 8),
+                                                       jnp.float32)
+
+    def test_bytes_per_block(self):
+        plan = cache_mod.gqa_paged_plan(2, 8, jnp.float32,
+                                        geometry=self.GEOM)
+        assert plan.bytes_per_block == 4 * plan.bytes_per_token
+        planq = cache_mod.gqa_paged_plan(2, 8, jnp.float32, "int8",
+                                         geometry=self.GEOM)
+        # int8 values + the block's f32 scale rows
+        assert planq.bytes_per_block == 4 * (2 * 2 * 8) + 2 * 2 * 8 * 4
+
+    def test_prefill_writes_rejected(self):
+        plan = cache_mod.gqa_paged_plan(2, 8, jnp.float32,
+                                        geometry=self.GEOM)
+        cache = plan.init(9, 4)
+        with pytest.raises(ValueError):
+            plan.write_prefill(cache, {"k": jnp.zeros((1, 4, 2, 8)),
+                                       "v": jnp.zeros((1, 4, 2, 8))})
+
+    def test_plan_from_cache_roundtrip(self):
+        for q in (None, "int8"):
+            plan = cache_mod.gqa_paged_plan(2, 8, jnp.float32, q,
+                                            geometry=self.GEOM)
+            got = cache_mod.plan_from_cache(plan.init(9, 4), jnp.float32)
+            assert got.family == plan.family
+            assert got.paged == self.GEOM
+
+    def test_mla_paged_rejected(self):
+        cfg = ModelConfig(
+            name="mla-t", family="dense", mla=True, num_layers=1,
+            d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+            vocab_size=64, q_lora_rank=0, kv_lora_rank=32, qk_rope_dim=16,
+            qk_nope_dim=32, v_head_dim=32, dtype="float32")
+        with pytest.raises(ValueError):
+            cache_mod.build_cache_plan(cfg, jnp.float32, None, self.GEOM)
+
+    def test_decode_write_oob_hits_dummy(self):
+        """At position == max_seq the write must land in the dummy
+        block, not clamp onto the stream's last real block."""
+        geom = self.GEOM
+        plan = cache_mod.gqa_paged_plan(2, 8, jnp.float32, geometry=geom)
+        cache = plan.init(9, 4)
+        bt = cache["block_tables"].at[0].set(jnp.arange(4, dtype=jnp.int32))
+        cache["block_tables"] = bt.at[1].set(
+            jnp.arange(4, 8, dtype=jnp.int32))
+        key = jax.random.PRNGKey(0)
+        cache["k"] = jax.random.normal(key, cache["k"].shape)
+        cache["v"] = jax.random.normal(key, cache["v"].shape)
+        before_k = cache["k"]
+        new = {"k": jnp.ones((2, 2, 8)), "v": jnp.ones((2, 2, 8))}
+        out = plan.write_decode(cache, new,
+                                jnp.asarray([geom.max_seq, 3]))
+        # slot 0 (full) wrote only the dummy block; slot 1 wrote
+        # row 3 of its first block (physical block 4)
+        np.testing.assert_array_equal(
+            np.asarray(out["k"][:8]),
+            np.asarray(before_k.at[4, 3].set(1.0)[:8]))
+        assert float(out["k"][geom.dummy_block, 0].min()) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Paged decode kernel vs oracle
+# ---------------------------------------------------------------------------
+
+def _paged_case(key, b=2, kh=2, g=2, d=16, nb=6, bs=8, nblk=3):
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, 1, kh * g, d), jnp.float32)
+    k = jax.random.normal(ks[1], (nb + 1, bs, kh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (nb + 1, bs, kh, d), jnp.float32)
+    # distinct physical blocks per stream, some entries at the dummy
+    bt = jnp.asarray([[0, 2, nb], [1, 4, 5]], jnp.int32)[:b, :nblk]
+    cache_pos = jnp.asarray([11, 20][:b], jnp.int32)
+    return q, k, v, bt, cache_pos
+
+
+class TestPagedKernel:
+    def test_f32_matches_ref(self):
+        q, k, v, bt, pos = _paged_case(jax.random.PRNGKey(0))
+        want = ref.decode_attention_paged_ref(q, k, v, bt, pos)
+        got = ops.decode_attention_paged(q, k, v, bt, pos,
+                                         force_kernel=True)
+        assert float(jnp.max(jnp.abs(got - want))) <= 1e-2
+        assert got.shape == q.shape
+
+    def test_f32_softcap(self):
+        q, k, v, bt, pos = _paged_case(jax.random.PRNGKey(1))
+        want = ref.decode_attention_paged_ref(q, k, v, bt, pos,
+                                              softcap=20.0)
+        got = ops.decode_attention_paged(q, k, v, bt, pos, softcap=20.0,
+                                         force_kernel=True)
+        assert float(jnp.max(jnp.abs(got - want))) <= 1e-2
+
+    def test_f32_ref_matches_slot_gqa_exactly(self):
+        """Paged f32 attention == the slot path's gqa_decode_attention
+        bit-for-bit when the gathered blocks reproduce the slot cache —
+        the op-order contract behind paged==slot token identity."""
+        q, k, v, bt, pos = _paged_case(jax.random.PRNGKey(2))
+        b, d = q.shape[0], q.shape[-1]
+        kh = k.shape[2]
+        ks = k[bt].reshape(b, -1, kh, d)
+        vs = v[bt].reshape(b, -1, kh, d)
+        valid = jnp.arange(ks.shape[1])[None, :] <= pos[:, None]
+        want = cache_mod.gqa_decode_attention(q, ks, vs, valid, 0.0)
+        got = ref.decode_attention_paged_ref(q, k, v, bt, pos)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_int8_matches_ref(self):
+        q, k, v, bt, pos = _paged_case(jax.random.PRNGKey(3))
+        k_scale = kvq.kv_scales(k, axis=1)
+        v_scale = kvq.kv_scales(v, axis=1)
+        k_q = kvq.quantize_kv(k, k_scale[:, None])
+        v_q = kvq.quantize_kv(v, v_scale[:, None])
+        want = ref.decode_attention_paged_q_ref(q, k_q, k_scale, v_q,
+                                                v_scale, bt, pos)
+        got = ops.decode_attention_paged_q(q, k_q, k_scale, v_q, v_scale,
+                                           bt, pos, force_kernel=True)
+        assert float(jnp.max(jnp.abs(got - want))) <= 1e-2
+
+    def test_fallback_dispatch(self, monkeypatch):
+        """With the VMEM budget squeezed to nothing, kernel_fits routes
+        both wrappers to the jnp oracle bit-for-bit."""
+        monkeypatch.setattr(ops, "VMEM_BUDGET", 1)
+        assert not ops.kernel_fits("decode_attn_paged", 2, c=16, s=8, r=2,
+                                   q_bytes=4, bn=8)
+        q, k, v, bt, pos = _paged_case(jax.random.PRNGKey(4))
+        want = ref.decode_attention_paged_ref(q, k, v, bt, pos)
+        got = ops.decode_attention_paged(q, k, v, bt, pos)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        k_scale = kvq.kv_scales(k, axis=1)
+        v_scale = kvq.kv_scales(v, axis=1)
+        k_q = kvq.quantize_kv(k, k_scale[:, None])
+        v_q = kvq.quantize_kv(v, v_scale[:, None])
+        want_q = ref.decode_attention_paged_q_ref(q, k_q, k_scale, v_q,
+                                                  v_scale, bt, pos)
+        got_q = ops.decode_attention_paged_q(q, k_q, k_scale, v_q, v_scale,
+                                             bt, pos)
+        np.testing.assert_array_equal(np.asarray(got_q), np.asarray(want_q))
+
+
+# ---------------------------------------------------------------------------
+# PagedKVPoolManager: sharing, accounting, round trips
+# ---------------------------------------------------------------------------
+
+class TestPagedPool:
+    def _prefill_stream(self, m, params, prompt, max_seq=64):
+        stream = m.init_cache(1, max_seq)
+        toks = jnp.asarray([list(prompt)], jnp.int32)
+        pad = jnp.zeros((1, max_seq - len(prompt)), jnp.int32)
+        logits, stream = m.prefill(
+            params, {"tokens": jnp.concatenate([toks, pad], 1)}, stream,
+            last_pos=jnp.asarray(len(prompt) - 1))
+        return stream, int(jnp.argmax(logits[0]))
+
+    def test_insert_gather_roundtrip_exact(self, setup):
+        run, m, params = setup
+        pool = PagedKVPoolManager(m, 2, 64, block_size=BS)
+        stream, _ = self._prefill_stream(m, params, SHARED)
+        pool.allocate(0, len(SHARED), tokens=list(SHARED))
+        pool.insert(stream, 0, len(SHARED))
+        pool.release(0)
+        matched = pool.allocate(1, len(SHARED), tokens=list(SHARED))
+        assert matched == (len(SHARED) // BS) * BS      # 2 full blocks
+        staged = pool.gather_prefix(m.init_cache(1, 64), 1, matched)
+
+        def first_leaf(tree, name):
+            if isinstance(tree, dict):
+                if name in tree:
+                    return tree[name]
+                for v in tree.values():
+                    r = first_leaf(v, name)
+                    if r is not None:
+                        return r
+            return None
+        for name in ("k", "v"):
+            want = first_leaf(stream, name)[..., 0, :matched, :, :]
+            got = first_leaf(staged, name)[..., 0, :matched, :, :]
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_prefix_stored_once_admit_match(self, setup):
+        """Sequential same-prefix requests re-attach to the registered
+        blocks: block count grows by the private tail only."""
+        run, m, params = setup
+        pool = PagedKVPoolManager(m, 3, 64, block_size=BS)
+        stream, _ = self._prefill_stream(m, params, SHARED)
+        pool.allocate(0, len(SHARED), tokens=list(SHARED))
+        pool.insert(stream, 0, len(SHARED))
+        pool.release(0)
+        n_shared = (len(SHARED) // BS)                  # 2 full blocks
+        pool.allocate(0, len(SHARED), tokens=list(SHARED))
+        pool.allocate(1, len(SHARED), tokens=list(SHARED))
+        pool.allocate(2, len(SHARED), tokens=list(SHARED))
+        # 2 shared prefix blocks + one private tail block per stream
+        assert pool.physical_blocks_in_use() == n_shared + 3
+        assert pool.blocks.ref[pool.tables[0][0]] == 3
+        # copy-on-write: every stream's tail block is private
+        tails = {pool.tables[i][-1] for i in range(3)}
+        assert len(tails) == 3
+        st = pool.prefix_stats()
+        assert st["prefix_block_hits"] == 3 * n_shared
+
+    def test_used_bytes_counts_shared_once(self, setup):
+        run, m, params = setup
+        pool = PagedKVPoolManager(m, 2, 64, block_size=BS)
+        stream, _ = self._prefill_stream(m, params, SHARED)
+        pool.allocate(0, len(SHARED), tokens=list(SHARED))
+        pool.insert(stream, 0, len(SHARED))
+        pool.release(0)
+        pool.allocate(0, len(SHARED), tokens=list(SHARED))
+        pool.allocate(1, len(SHARED), tokens=list(SHARED))
+        assert pool.used_bytes() == 4 * pool.bytes_per_block  # 2+1+1
+        pool.release(0)
+        pool.release(1)
+        assert pool.used_bytes() == 0
+
+    def test_grow_allocates_block_on_crossing(self, setup):
+        run, m, params = setup
+        pool = PagedKVPoolManager(m, 2, 64, block_size=BS)
+        pool.allocate(0, BS - 1, tokens=list(range(1, BS)))
+        assert len(pool.tables[0]) == 1
+        pool.positions[0] = BS - 1                      # as if inserted
+        pool.grow(0, token=7)                           # crosses into blk 1
+        assert len(pool.tables[0]) == 2
+
+
+# ---------------------------------------------------------------------------
+# Engine end to end: token identity, sharing, preemption
+# ---------------------------------------------------------------------------
+
+class TestPagedEngine:
+    def test_f32_token_identical_to_slot(self, setup):
+        run, m, params = setup
+        base = _serve(_engine(run, params), [ROBUST, (4, 5, 6)])
+        out = _serve(_engine(run, params, kv_layout="paged"),
+                     [ROBUST, (4, 5, 6)])
+        assert out == base
+
+    def test_int8_token_identical_to_slot(self, setup):
+        run, m, params = setup
+        base = _serve(_engine(run, params, kv_quantize="int8"),
+                      [ROBUST, (4, 5, 6)])
+        out = _serve(_engine(run, params, kv_quantize="int8",
+                             kv_layout="paged"), [ROBUST, (4, 5, 6)])
+        assert out == base
+        assert base == _serve(_engine(run, params), [ROBUST, (4, 5, 6)])
+
+    def test_concurrent_twins_store_prefix_once(self, setup):
+        """Identical prompts admitted in the SAME wave (nothing in the
+        radix yet) converge at insert: the adoption dedup retains the
+        first twin's registered blocks and frees the duplicates."""
+        run, m, params = setup
+        eng = _engine(run, params, slots=3, kv_layout="paged")
+        reqs = [Request(uid=i, prompt=list(SHARED), max_new_tokens=16)
+                for i in range(3)]
+        for r in reqs:
+            eng.add_request(r)
+        n_shared = len(SHARED) // BS
+        seen = []
+        for _ in range(200):
+            if not eng.scheduler.busy():
+                break
+            eng.step()
+            if all(r is not None for r in eng.scheduler.active):
+                seen.append(eng.pool.physical_blocks_in_use())
+        assert all(r.done for r in reqs)
+        assert seen, "streams never cohabited"
+        # while all three decoded together (before any block growth
+        # past the prompt): 2 shared + 3 private tails = 5, not 9
+        assert min(seen) == n_shared + 3
+        assert reqs[0].output == reqs[1].output == reqs[2].output
+        # the two later twins each adopted the first's registered blocks
+        assert eng.pool.prefix_stats()["adopted_blocks"] == 2 * n_shared
+
+    def test_shared_prefix_outputs_match_slot(self, setup):
+        run, m, params = setup
+        prompts = [list(SHARED) + [40 + i] for i in range(4)]
+        base = _serve(_engine(run, params, slots=2), prompts, n=4)
+        out = _serve(_engine(run, params, slots=2, kv_layout="paged"),
+                     prompts, n=4)
+        assert out == base
+
+    def test_paged_preempt_requeue_deterministic(self, setup):
+        """Block-budget preemption requeues the youngest stream; it
+        re-admits onto its own radix-registered blocks and finishes
+        with EXACTLY the unconstrained greedy tokens."""
+        run, m, params = setup
+        # both streams cross block boundaries mid-decode: 15+20 -> 3
+        # blocks, 3+20 -> 2 blocks; a 3-block budget must preempt
+        prompts = [ROBUST[:15], (9, 8, 7)]
+        base = _serve(_engine(run, params, kv_layout="paged"), prompts,
+                      n=20)
+        eng = _engine(run, params, kv_layout="paged")
+        bpb = eng.pool.bytes_per_block
+        eng2 = _engine(run, params, kv_layout="paged",
+                       kv_byte_budget=int(bpb * 3))
+        out = _serve(eng2, prompts, n=20)
+        assert eng2.preemptions > 0
+        assert out == base
+        assert eng2.pool.used_bytes() == 0
+
+    def test_blocking_admission_rejected(self, setup):
+        run, m, params = setup
+        with pytest.raises(ValueError):
+            _engine(run, params, kv_layout="paged", admission="blocking")
+
+    def test_block_size_must_divide_max_seq(self, setup):
+        run, m, params = setup
+        with pytest.raises(ValueError):
+            _engine(run, params, kv_layout="paged", max_seq=60)
+
+    def test_plan_summary_reports_layout(self, setup):
+        run, m, params = setup
+        eng = _engine(run, params, kv_layout="paged", kv_quantize="int8")
+        assert eng.plan_summary["kv_layout"] == "paged"
+        assert eng.plan_summary["kv_cache_family"] == "gqa_paged_int8"
+        assert _engine(run, params).plan_summary["kv_layout"] == "slot"

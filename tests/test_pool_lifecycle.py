@@ -1,0 +1,119 @@
+"""Ticket-lifecycle edges shared by both KV pool managers.
+
+Both layouts must agree on the lifecycle contract the scheduler leans
+on: ``release`` after a pressure preemption returns ``used_bytes`` to
+EXACTLY zero (no leaked bytes/blocks — drift here compounds into
+phantom pressure and spurious preemptions), and the ``can_admit``
+empty-pool override admits a single over-budget prompt rather than
+deadlocking the queue head forever.  Exercised through the real engine
+too, so the override is proven to unstick an actual request.
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import ParallelConfig, RunConfig
+from repro.models.api import get_model
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.pool import KVPoolManager, PagedKVPoolManager
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(registry.get("llama3.2-1b").smoke,
+                              dtype="float32")
+    run = RunConfig(model=cfg, parallel=ParallelConfig())
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    return run, m, params
+
+
+def _pools(m, budget=None):
+    return [KVPoolManager(m, 2, 64, byte_budget=budget),
+            PagedKVPoolManager(m, 2, 64, byte_budget=budget,
+                               block_size=16)]
+
+
+TOKS = [list(range(1, 41)), [7, 8, 9]]
+
+
+class TestReleaseAfterPreempt:
+    def test_used_bytes_returns_to_exact_zero(self, setup):
+        _, m, _ = setup
+        for pool in _pools(m):
+            for slot, toks in enumerate(TOKS):
+                pool.allocate(slot, len(toks), tokens=toks)
+                pool.positions[slot] = len(toks)   # as if inserted
+                for t in (11, 12, 13):
+                    pool.grow(slot, token=t)
+            assert pool.used_bytes() > 0
+            # preemption order: release victims youngest-first, then
+            # drain the survivor — exactly what ServeEngine.step does
+            for slot in (1, 0):
+                pool.release(slot)
+                assert pool.tickets[slot] < 0
+            assert pool.used_bytes() == 0, type(pool).__name__
+            assert pool.free_slots() == [0, 1]
+
+    def test_budget_pressure_then_release_zeroes(self, setup):
+        _, m, _ = setup
+        for pool in _pools(m):
+            unit = getattr(pool, "bytes_per_block", 0) or \
+                pool.bytes_per_token * 16
+            pool.byte_budget = int(unit * 2)
+            for slot, toks in enumerate(TOKS):
+                pool.allocate(slot, len(toks), tokens=toks)
+                pool.positions[slot] = len(toks)
+            victims = pool.pressure_victims()
+            assert victims == [1], type(pool).__name__   # youngest
+            for slot in victims:
+                pool.release(slot)
+            pool.release(0)
+            assert pool.used_bytes() == 0, type(pool).__name__
+
+    def test_paged_release_registers_then_rezeroes(self, setup):
+        """The paged release publishes blocks to the radix; cold
+        (registered, unreferenced) blocks must NOT count as used."""
+        _, m, _ = setup
+        pool = PagedKVPoolManager(m, 2, 64, block_size=16)
+        toks = list(range(1, 41))
+        pool.allocate(0, len(toks), tokens=toks)
+        pool.positions[0] = len(toks)
+        pool.release(0)
+        assert pool.used_bytes() == 0
+        assert pool.blocks.match_peek(toks) != []   # radix kept them
+        # re-admission revives the cold blocks, release re-zeroes
+        pool.allocate(0, len(toks), tokens=toks)
+        assert pool.used_bytes() > 0
+        pool.release(0)
+        assert pool.used_bytes() == 0
+
+
+class TestEmptyPoolOverride:
+    def test_over_budget_prompt_admits_on_empty_pool(self, setup):
+        _, m, _ = setup
+        for pool in _pools(m, budget=1):        # nothing truly fits
+            assert pool.can_admit(40, tokens=list(range(1, 41))), \
+                type(pool).__name__
+            pool.allocate(0, 40, tokens=list(range(1, 41)))
+            # non-empty now: the same ask must be rejected
+            assert not pool.can_admit(40, tokens=list(range(41, 81))), \
+                type(pool).__name__
+
+    def test_engine_drains_over_budget_queue(self, setup):
+        """End to end: a queue of prompts, each alone over the byte
+        budget, still drains one stream at a time — no deadlock."""
+        run, _, params = setup
+        for layout in ("slot", "paged"):
+            eng = ServeEngine(run, params, slots=2, max_seq=64,
+                              prefill_chunk=8, kv_layout=layout,
+                              kv_byte_budget=1)
+            reqs = [Request(uid=i, prompt=list(range(1, 20)),
+                            max_new_tokens=4) for i in range(3)]
+            for r in reqs:
+                eng.add_request(r)
+            eng.run_until_done()
+            assert all(r.done for r in reqs), layout
+            assert eng.pool.used_bytes() == 0, layout
