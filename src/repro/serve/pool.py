@@ -404,20 +404,29 @@ class PagedKVPoolManager:
                   tokens: list[int] | None = None) -> bool:
         """Admission gate in blocks: fresh blocks the prompt needs
         (radix hits subtract — shared blocks are already paid for)
-        must fit both the physical pool and the byte budget.  An empty
-        pool always admits budget-wise (a single over-budget prompt
-        must not deadlock the queue)."""
+        must fit both the physical pool and the byte budget.  Matched
+        blocks that are currently *cold* count against both: they sit
+        in ``free_capacity`` now but :meth:`allocate` warms them
+        (removing them from the recyclable set, and into the ref > 0
+        bytes ``used_bytes`` counts).  An empty pool always admits
+        budget-wise (a single over-budget prompt must not deadlock the
+        queue)."""
         need = min(prompt_len // self.block_size + 1, self.blocks_per_slot)
+        matched_cold = 0
         if tokens is not None:
-            need -= len(self.blocks.match_peek(
-                [int(t) for t in tokens], max_tokens=prompt_len - 1))
-        if need > self.blocks.free_capacity():
+            matched = self.blocks.match_peek(
+                [int(t) for t in tokens], max_tokens=prompt_len - 1)
+            need -= len(matched)
+            matched_cold = sum(
+                1 for b in matched if self.blocks.ref[b] == 0)
+        if need + matched_cold > self.blocks.free_capacity():
             return False                   # physically impossible right now
         if self.byte_budget is None or self.bytes_per_block == 0:
             return True
         if not self.occupied_slots():
             return True
-        projected = self.used_bytes() + need * self.bytes_per_block
+        projected = self.used_bytes() + \
+            (need + matched_cold) * self.bytes_per_block
         return projected <= self.byte_budget
 
     def pressure_victims(self) -> list[int]:
@@ -428,15 +437,28 @@ class PagedKVPoolManager:
         least one stream always survives."""
         occ = sorted(self.occupied_slots(), key=lambda s: self.tickets[s])
         victims: list[int] = []
+        # simulated refcounts across the whole victim set: a block two
+        # victims share (ref == 2) frees once BOTH are popped — a
+        # static ref == 1 snapshot would never count it and preempt
+        # more streams than the budget requires
+        ref = list(self.blocks.ref)
 
-        def sole_blocks(s):   # blocks only this stream holds
-            return sum(1 for b in self.tables[s] if self.blocks.ref[b] == 1)
+        def pop_frees(s):     # blocks that reach ref 0 when s releases
+            n = 0
+            for b in self.tables[s]:
+                ref[b] -= 1
+                if ref[b] == 0:
+                    n += 1
+            return n
 
+        freed = 0
         if self.byte_budget is not None and self.bytes_per_block:
             used = self.used_bytes()
             while used > self.byte_budget and len(occ) > 1:
                 s = occ.pop()                  # youngest admission
-                used -= sole_blocks(s) * self.bytes_per_block
+                n = pop_frees(s)
+                freed += n
+                used -= n * self.bytes_per_block
                 victims.append(s)
 
         def needs_block(s):   # next grow crosses into an unallocated block
@@ -444,10 +466,11 @@ class PagedKVPoolManager:
             need = min(nxt // self.block_size + 1, self.blocks_per_slot)
             return self.positions[s] > 0 and need > len(self.tables[s])
 
-        cap = self.blocks.free_capacity()
+        # byte-budget victims' blocks land on the free/cold lists too
+        cap = self.blocks.free_capacity() + freed
         while len(occ) > 1 and cap < sum(map(needs_block, occ)):
             s = occ.pop()
-            cap += sole_blocks(s)
+            cap += pop_frees(s)
             victims.append(s)
         return victims
 

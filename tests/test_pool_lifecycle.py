@@ -91,6 +91,88 @@ class TestReleaseAfterPreempt:
         assert pool.used_bytes() == 0
 
 
+class TestColdBlockAdmission:
+    """Radix-matched blocks that are currently *cold* sit in
+    ``free_capacity`` and outside ``used_bytes`` — but ``allocate``
+    warms them.  Admission must charge for that transition on both the
+    physical and the byte axis, or an admitted request exhausts the
+    pool / overshoots the budget."""
+
+    X = list(range(1, 41))               # 40 tokens -> 2 full blocks
+
+    def _cold_prefix_pool(self, m, num_blocks):
+        """A pool with X's 2 full blocks cold-cached and one live
+        stream holding 2 referenced blocks."""
+        pool = PagedKVPoolManager(m, 2, 64, block_size=16,
+                                  num_blocks=num_blocks)
+        pool.allocate(0, len(self.X), tokens=self.X)
+        pool.positions[0] = len(self.X)
+        pool.release(0)                  # 2 cold registered, 1 freed
+        live = list(range(100, 117))     # 17 tokens -> 2 fresh blocks
+        pool.allocate(0, len(live), tokens=live)
+        pool.positions[0] = len(live)
+        return pool
+
+    def test_physical_gate_counts_cold_matched_blocks(self, setup):
+        """4-block pool, 2 cold cached + 2 live: a 64-token prompt
+        matching the cold prefix needs 2 fresh blocks AND removes the
+        2 matched blocks from the recyclable set — impossible.  Pre-fix
+        can_admit said yes and allocate() raised RuntimeError."""
+        _, m, _ = setup
+        pool = self._cold_prefix_pool(m, num_blocks=4)
+        assert pool.blocks.free_capacity() == 2
+        probe = self.X + list(range(200, 224))      # 64 tokens
+        assert not pool.can_admit(len(probe), tokens=probe)
+        # no over-rejection: a 17-token miss recycles the cold pair
+        fresh = list(range(300, 317))
+        assert pool.can_admit(len(fresh), tokens=fresh)
+        pool.allocate(1, len(fresh), tokens=fresh)  # must not raise
+
+    def test_byte_projection_counts_cold_matched_blocks(self, setup):
+        """Matched cold blocks become referenced (-> used_bytes) at
+        allocate; the projection must include them or admission
+        overshoots the budget and leans on later preemption."""
+        _, m, _ = setup
+        pool = self._cold_prefix_pool(m, num_blocks=8)
+        bpb = pool.bytes_per_block
+        assert pool.used_bytes() == 2 * bpb
+        probe = self.X + list(range(200, 224))      # 64 tokens
+        # post-allocate: 2 live + 2 warmed + 2 fresh = 6 blocks
+        pool.byte_budget = 5 * bpb
+        assert not pool.can_admit(len(probe), tokens=probe)
+        pool.byte_budget = 6 * bpb
+        assert pool.can_admit(len(probe), tokens=probe)
+        pool.allocate(1, len(probe), tokens=probe)
+        assert pool.used_bytes() == 6 * bpb
+
+
+class TestPressureSharedBlocks:
+    def test_victim_estimate_counts_jointly_freed_blocks(self, setup):
+        """A ref==2 block shared by two victims frees when the SECOND
+        one is preempted; a static ref==1 snapshot never counts it, so
+        the used-bytes estimate stays high and an extra stream (slot 1
+        here) gets preempted beyond what the budget requires."""
+        _, m, _ = setup
+        pool = PagedKVPoolManager(m, 4, 64, block_size=16,
+                                  num_blocks=16)
+        shared = list(range(1, 33))          # 2 full blocks
+        pool.allocate(2, len(shared), tokens=shared)   # throwaway:
+        pool.positions[2] = len(shared)                # register the
+        pool.release(2)                                # prefix cold
+        for slot, toks in ((0, list(range(100, 110))),
+                           (1, list(range(200, 210))),
+                           (2, shared + [300]),
+                           (3, shared + [301])):
+            pool.allocate(slot, len(toks), tokens=toks)
+            pool.positions[slot] = len(toks)
+        bpb = pool.bytes_per_block
+        assert pool.used_bytes() == 6 * bpb  # 1 + 1 + (2 shared + 1 + 1)
+        pool.byte_budget = 2 * bpb
+        # preempting 3 frees 1 block, then 2 frees 3 (its private one
+        # plus the shared pair, now at ref 0) -> budget met, 1 survives
+        assert pool.pressure_victims() == [3, 2]
+
+
 class TestEmptyPoolOverride:
     def test_over_budget_prompt_admits_on_empty_pool(self, setup):
         _, m, _ = setup
