@@ -1,0 +1,223 @@
+"""Compression-frontier benchmark: rank x sparsity x dtype, end to end.
+
+The paper compresses along one axis (rank); this repo adds two more —
+int8 factor quantization and 2:4 semi-structured sparsity of the
+factors.  The three compose multiplicatively on the decode roofline's
+weight stream (bytes/token ~ density x width x rank), but each also
+costs accuracy, so the interesting object is the *frontier*: for every
+(compression alpha, quantize, sparsify) point this bench records
+
+* ``weight_bytes`` — whole-tree HBM weight stream (engine plan
+  accounting) and ``factor_bytes`` — the decomposed lowrank/branched
+  subtrees only (the part the sparse packing acts on),
+* ``tokens_per_s`` — end-to-end ``ServeEngine`` throughput (CPU here;
+  the byte columns are the TPU-relevant signal),
+* ``token_match`` — greedy position-wise agreement vs the *dense f32*
+  baseline model (the honest accuracy proxy at smoke scale: the model
+  is random-init, so 2:4 pruning is destructive — the column shows the
+  cost axis, not a tuned-model result),
+
+plus interpret-mode parity of the fused sparse-int8 kernels vs their
+``ref.py`` oracles, and the headline ``sp_int8_gain``: factor bytes of
+int8-only over 2:4+int8 at equal rank (>= 1.8x is the acceptance bar —
+the mask-shared-over-S packing costs one int8 index per group of 4
+plus unchanged f32 scale rows, so the ratio approaches 2x as the
+factors grow; the model here is sized so scale rows don't dominate).
+
+Appends a JSON record to ``BENCH_frontier.json`` at the repo root.
+
+    PYTHONPATH=src python -m benchmarks.bench_frontier [--dry-run]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Csv, run_stamp
+
+TRAJECTORY = Path(__file__).resolve().parent.parent / "BENCH_frontier.json"
+
+#: mid-size smoke model: big enough that f32 scale rows don't dominate
+#: the packed factor bytes (at d_model 64 the int8->2:4+int8 ratio caps
+#: near 1.7x; at 256 it reaches ~1.9x), small enough for CPU serving.
+_MODEL = dict(name="frontier-bench", family="dense", num_layers=2,
+              d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+              d_ff=512, vocab_size=512, dtype="float32")
+
+
+def _model_and_params():
+    from repro.configs.base import ModelConfig
+    from repro.models.api import get_model
+
+    cfg = ModelConfig(**_MODEL)
+    m = get_model(cfg)
+    params, axes = m.init(jax.random.PRNGKey(0))
+    return cfg, params, axes
+
+
+def _decomposed(params, axes, alpha: float):
+    import dataclasses  # noqa: F401  (kept for symmetry with benches)
+
+    from repro.configs.base import LRDConfig
+    from repro.core.surgery import decompose_model
+
+    # rank_align=8 keeps every rank divisible by the 2:4 group size, so
+    # both factors of each pair are sparsifiable.
+    lrd = LRDConfig(enabled=True, compression=alpha, rank_mode="aligned",
+                    rank_align=8, min_dim=32)
+    p, a, _ = decompose_model(params, axes, lrd)
+    return p, a, lrd
+
+
+def _engine(cfg, lrd, params, quantize: str | None, sparsify: str | None):
+    from repro.configs.base import LRDConfig, ParallelConfig, RunConfig
+    from repro.serve.engine import ServeEngine
+
+    run = RunConfig(model=cfg, parallel=ParallelConfig(),
+                    lrd=lrd or LRDConfig())
+    return ServeEngine(run, params, slots=2, max_seq=64,
+                       quantize=quantize or "none",
+                       sparsify=sparsify or "none")
+
+
+def _serve(eng, n_requests: int, max_new: int):
+    from repro.serve.engine import Request
+
+    reqs = [Request(uid=i, prompt=[(i % 7) + 1] * (3 + (i % 8)),
+                    max_new_tokens=max_new) for i in range(n_requests)]
+    for r in reqs:
+        eng.add_request(r)
+    eng.run_until_done()
+    return eng.throughput()["tokens_per_s"], [r.output for r in reqs]
+
+
+def _token_match(base: list[list[int]], got: list[list[int]]) -> float:
+    flat_b = [t for o in base for t in o]
+    flat_g = [t for o in got for t in o]
+    assert len(flat_b) == len(flat_g) and flat_b
+    return sum(a == b for a, b in zip(flat_b, flat_g)) / len(flat_b)
+
+
+def _factor_bytes(eng) -> int:
+    """Weight-stream bytes of the decomposed (lowrank/branched) subtrees
+    only — the denominators of the compression headline."""
+    from repro.layers.plan import KIND_BRANCHED, KIND_LOWRANK, LinearPlan
+
+    plans = [p for p in jax.tree.leaves(
+        eng.plans, is_leaf=lambda n: isinstance(n, LinearPlan))
+        if isinstance(p, LinearPlan)]
+    return sum(p.weight_bytes for p in plans
+               if p.kind in (KIND_LOWRANK, KIND_BRANCHED))
+
+
+def _kernel_parity() -> dict:
+    """Interpret-mode max error of both fused sq kernels vs ref.py —
+    runs in every mode (incl. --dry-run) so CI exercises the kernels."""
+    from repro.kernels import ops, ref
+    from repro.quant import quantize_array
+    from repro.quant.sparse import sparsify_array
+
+    ks = jax.random.split(jax.random.PRNGKey(7), 6)
+    c, r, s, m = 128, 32, 128, 8
+    w0 = jax.random.normal(ks[0], (c, r)) * 0.05
+    w1 = jax.random.normal(ks[1], (r, s)) * 0.05
+    x = (jax.random.normal(ks[2], (m, c)) * 0.1).astype(jnp.bfloat16)
+    lr = ops.lowrank_matmul_sq(x, *sparsify_array(w0), *sparsify_array(w1),
+                               force_kernel=True)
+    lr_ref = ref.lowrank_matmul_sq_ref(x, *sparsify_array(w0),
+                                       *sparsify_array(w1))
+    n, r1, r2 = 2, 16, 16
+    u = jax.random.normal(ks[3], (n, c, r1)) * 0.05
+    xc = jax.random.normal(ks[4], (n, r1, r2)) * 0.05
+    v = jax.random.normal(ks[5], (n, r2, s)) * 0.05
+    args = (x, *sparsify_array(u), *quantize_array(xc), *sparsify_array(v))
+    br = ops.branched_matmul_sq(*args, force_kernel=True)
+    br_ref = ref.branched_matmul_sq_ref(*args)
+    err = lambda a, b: float(jnp.abs(a.astype(jnp.float32)  # noqa: E731
+                                     - b.astype(jnp.float32)).max())
+    return {"lowrank_sq_max_err": err(lr, lr_ref),
+            "branched_sq_max_err": err(br, br_ref)}
+
+
+#: the dtype x sparsity grid at each rank point
+_MODES = [("none", "none"), ("none", "2:4"),
+          ("int8", "none"), ("int8", "2:4")]
+
+
+def run(fast: bool = True, dry_run: bool = False) -> str:
+    del fast  # one size: the mid-size smoke model is the whole point
+    csv = Csv(["alpha", "quantize", "sparsify", "weight_bytes",
+               "factor_bytes", "tokens_per_s", "token_match"])
+    cfg, params, axes = _model_and_params()
+    n_req, max_new = (4, 4) if dry_run else (4, 8)
+
+    base_eng = _engine(cfg, None, params, None, None)
+    base_tok, base_out = _serve(base_eng, n_req, max_new)
+    dense_bytes = base_eng.plan_summary["weight_bytes"]
+
+    alphas = [2.0] if dry_run else [2.0, 4.0]
+    records, gains = [], {}
+    for alpha in alphas:
+        dp, _, lrd = _decomposed(params, axes, alpha)
+        fb = {}
+        for quantize, sparsify in _MODES:
+            eng = _engine(cfg, lrd, dp, quantize, sparsify)
+            tok_s, out = _serve(eng, n_req, max_new)
+            match = _token_match(base_out, out)
+            fbytes = _factor_bytes(eng)
+            fb[(quantize, sparsify)] = fbytes
+            rec = {"alpha": alpha, "quantize": quantize,
+                   "sparsify": sparsify,
+                   "weight_bytes": eng.plan_summary["weight_bytes"],
+                   "factor_bytes": fbytes,
+                   "tokens_per_s": round(tok_s, 2),
+                   "token_match": round(match, 4)}
+            records.append(rec)
+            csv.row(alpha, quantize, sparsify, rec["weight_bytes"],
+                    fbytes, rec["tokens_per_s"], rec["token_match"])
+        gains[alpha] = fb[("int8", "none")] / fb[("int8", "2:4")]
+
+    parity = _kernel_parity()
+    out = csv.dump("compression frontier: rank x sparsity x dtype "
+                   "(token_match vs dense f32 on the random-init smoke "
+                   "model — the accuracy-cost axis, not a tuned result)")
+    out += f"\n# dense f32 weight_bytes: {dense_bytes}, {base_tok:.1f} tok/s"
+    for alpha, g in gains.items():
+        out += (f"\n# alpha={alpha}: factor bytes int8-only / 2:4+int8 "
+                f"= {g:.2f}x")
+    out += (f"\n# kernel parity (interpret): "
+            f"lowrank_sq {parity['lowrank_sq_max_err']:.1e}, "
+            f"branched_sq {parity['branched_sq_max_err']:.1e}")
+    _append_trajectory({
+        "bench": "frontier", "dry_run": dry_run,
+        "unix_time": int(time.time()),
+        "dense_weight_bytes": dense_bytes,
+        "sp_int8_gain": {str(a): round(g, 3) for a, g in gains.items()},
+        "kernel_parity": parity, "rows": records})
+    out += f"\n# trajectory appended to {TRAJECTORY.name}"
+    return out
+
+
+def _append_trajectory(record: dict) -> None:
+    traj = []
+    if TRAJECTORY.exists():
+        try:
+            traj = json.loads(TRAJECTORY.read_text())
+            assert isinstance(traj, list)
+        except Exception:
+            traj = []
+    traj.append({**run_stamp(), **record})
+    TRAJECTORY.write_text(json.dumps(traj, indent=1) + "\n")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="single alpha, short decodes; CPU CI smoke")
+    args = ap.parse_args()
+    print(run(dry_run=args.dry_run))

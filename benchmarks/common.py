@@ -50,14 +50,15 @@ def time_jit(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
 
 
 def param_count(tree) -> int:
-    """Logical model parameters.  ``*_scale`` leaves (repro/quant) are
-    quantization metadata, not weights — counting them skews the
-    compression ratios reported for quantized trees."""
-    from repro.quant import SCALE_SUFFIX
+    """Stored model parameters.  ``*_scale`` and ``*_idx`` leaves
+    (repro/quant) are quantization / 2:4-packing metadata, not weights —
+    counting them skews the compression ratios reported for compressed
+    trees.  Packed ``*_sp`` values count at their stored (kept) size."""
+    from repro.quant import IDX_SUFFIX, SCALE_SUFFIX
     total = 0
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         last = str(getattr(path[-1], "key", path[-1])) if path else ""
-        if last.endswith(SCALE_SUFFIX):
+        if last.endswith(SCALE_SUFFIX) or last.endswith(IDX_SUFFIX):
             continue
         total += int(leaf.size)
     return total

@@ -19,15 +19,16 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table3,rank,branch,lm,kernels,"
                          "quant,branched_quant,serve_decode,serve_mla,"
-                         "serve_sched,serve_paged")
+                         "serve_sched,serve_paged,frontier")
     ap.add_argument("--list", action="store_true",
                     help="print registered benchmark names and exit")
     args = ap.parse_args()
     fast = not args.full
 
     from benchmarks import (bench_branched_quant, bench_branching,
-                            bench_kernels, bench_quant, bench_rank_sweep,
-                            bench_serve_decode, bench_table1, bench_table3,
+                            bench_frontier, bench_kernels, bench_quant,
+                            bench_rank_sweep, bench_serve_decode,
+                            bench_table1, bench_table3,
                             bench_transformer_lrd)
     benches = {
         "table1": bench_table1.run,
@@ -42,6 +43,7 @@ def main() -> None:
         "serve_mla": bench_serve_decode.run_mla,
         "serve_sched": bench_serve_decode.run_sched,
         "serve_paged": bench_serve_decode.run_paged,
+        "frontier": bench_frontier.run,
     }
     if args.list:
         print("\n".join(benches))

@@ -235,6 +235,14 @@ class LRDConfig:
     quant_targets: Sequence[str] = (  # which factor keys to quantize
         "w0", "w1", "u", "xc", "v", "tucker_u", "core", "tucker_v",
     )
+    # 2:4 semi-structured sparsity of the decomposed factors
+    # (repro/quant/sparse): the third compression axis, composable with
+    # `quantize` — the packed values adopt the quantized dtype, so
+    # 2:4 + int8 roughly halves the int8 factor bytes again.  The small
+    # branched core ``xc`` is excluded by default (pruning the already-
+    # tiny trainable core buys little and costs accuracy).
+    sparsify: str = "none"            # "none" | "2:4"
+    sparse_targets: Sequence[str] = ("w0", "w1", "u", "v")
     # Runtime KV-cache quantization (repro/quant/kv): the decode step's
     # *activation* stream — int8 K/V pool + per-(slot, head, channel)
     # scales on GQA stacks, int8 MLA latents + per-(slot, channel)

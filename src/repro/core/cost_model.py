@@ -78,11 +78,14 @@ def plan_layer_time(plan, m: int, *, act_bytes: int = 2, kv_bytes: int = 0,
     ``m`` tokens (rows / output pixels) — the plan-driven, quant-aware
     generalization of the per-kind timers above.
 
-    Compute walks the plan's matmul chain on MXU-padded dims; memory
-    streams the activations at ``act_bytes`` plus the plan's
-    ``weight_bytes`` — which is where int8/fp8 factors pay off: a
-    quantized plan moves half the weight bytes of its bf16 twin, so the
-    memory-bound decode term drops while compute is unchanged.
+    Compute walks the plan's matmul chain on MXU-padded dims, scaled by
+    each factor's ``chain_density()`` (2:4 factors run at half rate on
+    sparsity-capable MXUs); memory streams the activations at
+    ``act_bytes`` plus the plan's ``weight_bytes`` — which is where
+    int8/fp8 factors pay off: a quantized plan moves half the weight
+    bytes of its bf16 twin, so the memory-bound decode term drops while
+    compute is unchanged, and a 2:4-packed plan halves the int8 value
+    bytes again.
 
     ``kv_bytes`` adds a runtime stream to the same memory term: the KV
     pool bytes this layer reads per step (decode attention streams the
@@ -96,7 +99,9 @@ def plan_layer_time(plan, m: int, *, act_bytes: int = 2, kv_bytes: int = 0,
     """
     mp = mxu_padded(m, spec)
     flops = sum(2.0 * mult * mp * mxu_padded(k, spec) * mxu_padded(n, spec)
-                for mult, k, n in plan.matmul_chain())
+                * density
+                for (mult, k, n), density in zip(plan.matmul_chain(),
+                                                 plan.chain_density()))
     compute = flops / spec.peak_flops_bf16
     memory = (act_bytes * m * (plan.d_in + plan.d_out)
               + plan.weight_bytes + kv_bytes) / spec.hbm_bandwidth

@@ -327,3 +327,35 @@ def decompose_model(params: PyTree, axes: PyTree, lrd: LRDConfig, *,
 
     new_params, new_axes = walk(params, axes, ())
     return new_params, new_axes, report
+
+
+# ---------------------------------------------------------------------------
+# 2:4 sparsification pass (compound compression, after decomposition)
+# ---------------------------------------------------------------------------
+
+def sparsify_model(params: PyTree, axes: PyTree, lrd: LRDConfig, *,
+                   mode: str | None = None) -> tuple[PyTree, PyTree]:
+    """Magnitude-based 2:4 sparsification of the decomposed factors.
+
+    The third compression axis, applied *after* :func:`decompose_model`:
+    every ``lrd.sparse_targets`` factor whose input dim divides the
+    group size is rewritten to the packed ``k_sp``/``k_idx``
+    (+ ``k_scale``) convention of :mod:`repro.quant.sparse` — keeping,
+    per group of 4 input rows, the 2 with the largest L1 row norm
+    (mask shared across the output axis, so the index metadata costs
+    one int8 per group instead of two bits per value).  ``mode``
+    defaults to ``lrd.quantize``: when the factors are also being
+    quantized the kept values pack straight to the narrow dtype
+    (compound 2:4 x int8); otherwise they stay in the source dtype
+    (reference-path only — no fused kernel serves bf16-sparse).
+
+    Returns rewritten ``(params, axes)``; a no-op when
+    ``lrd.sparsify == "none"``.
+    """
+    if lrd.sparsify == "none":
+        return params, axes
+    from repro.quant.sparse import sparsify_tree
+    quant = lrd.quantize if mode is None else mode
+    return sparsify_tree(params, pattern=lrd.sparsify,
+                         mode=quant if quant != "none" else "none",
+                         targets=lrd.sparse_targets, axes=axes)

@@ -18,10 +18,12 @@ import jax.numpy as jnp
 
 from repro.kernels import branched_matmul as bk
 from repro.kernels import branched_matmul_q as bqk
+from repro.kernels import branched_matmul_sq as bsk
 from repro.kernels import decode_attention_paged as dap
 from repro.kernels import decode_attention_q as dak
 from repro.kernels import lowrank_matmul as lk
 from repro.kernels import lowrank_matmul_q as qk
+from repro.kernels import lowrank_matmul_sq as sk
 from repro.kernels import ref
 
 # v5e practical per-core VMEM working-set budget (conservative).
@@ -63,12 +65,20 @@ def kernel_fits(kernel: str, m: int, *, c: int, s: int, r: int = 0,
         return qk.vmem_bytes(_bm_eff(bm or qk.DEFAULT_BM, m), c, r,
                              bn or qk.DEFAULT_BN,
                              q_bytes=q_bytes) <= VMEM_BUDGET
+    if kernel == "lowrank_sq":
+        return sk.vmem_bytes(_bm_eff(bm or sk.DEFAULT_BM, m), c, r,
+                             bn or sk.DEFAULT_BN,
+                             q_bytes=q_bytes) <= VMEM_BUDGET
     if kernel == "branched":
         return bk.vmem_bytes(_bm_eff(bm or bk.DEFAULT_BM, m), c, r1, r2,
                              bn or bk.DEFAULT_BN) <= VMEM_BUDGET
     if kernel == "branched_q":
         return bqk.vmem_bytes(_bm_eff(bm or bqk.DEFAULT_BM, m), c, r1, r2,
                               bn or bqk.DEFAULT_BN,
+                              q_bytes=q_bytes) <= VMEM_BUDGET
+    if kernel == "branched_sq":
+        return bsk.vmem_bytes(_bm_eff(bm or bsk.DEFAULT_BM, m), c, r1, r2,
+                              bn or bsk.DEFAULT_BN,
                               q_bytes=q_bytes) <= VMEM_BUDGET
     if kernel == "decode_attn_q":
         # Per-(slot, kv-head) program: c = head_dim, r = GQA group size,
@@ -144,6 +154,39 @@ def lowrank_matmul_q(x: jax.Array, w0_q: jax.Array, w0_scale: jax.Array,
     return y.reshape(*lead, s)
 
 
+def lowrank_matmul_sq(x: jax.Array, w0_sp: jax.Array, w0_idx: jax.Array,
+                      w0_scale: jax.Array, w1_sp: jax.Array,
+                      w1_idx: jax.Array, w1_scale: jax.Array, *,
+                      bm: int = sk.DEFAULT_BM, bn: int = sk.DEFAULT_BN,
+                      force_kernel: bool = False) -> jax.Array:
+    """y = (x @ ds(w0)) @ ds(w1) with the fused sparse-int8 kernel —
+    2:4-packed factors expanded + dequantized in VMEM."""
+    lead = x.shape[:-1]
+    c = x.shape[-1]
+    r = w0_sp.shape[-1]
+    s = w1_sp.shape[-1]
+    x2 = x.reshape(-1, c)
+    m = x2.shape[0]
+    bm_eff = _bm_eff(bm, m)
+    q_bytes = jnp.dtype(w0_sp.dtype).itemsize
+    if not (force_kernel or kernel_fits("lowrank_sq", m, c=c, r=r, s=s,
+                                        q_bytes=q_bytes, bm=bm, bn=bn)):
+        return ref.lowrank_matmul_sq_ref(x, w0_sp, w0_idx, w0_scale,
+                                         w1_sp, w1_idx, w1_scale)
+    x2, pad_m = _pad_to(x2, 0, bm_eff)
+    w1p, pad_s = _pad_to(w1_sp, 2, bn)
+    w1sp, _ = _pad_to(w1_scale, 1, bn)     # zero scales -> zero columns
+    y = sk.lowrank_matmul_sq(x2, w0_sp, w0_idx, w0_scale,
+                             w1p, w1_idx, w1sp,
+                             bm=bm_eff, bn=min(bn, w1p.shape[2]),
+                             interpret=not _on_tpu())
+    if pad_m:
+        y = y[:m]
+    if pad_s:
+        y = y[:, :s]
+    return y.reshape(*lead, s)
+
+
 def branched_matmul(x: jax.Array, u: jax.Array, xc: jax.Array,
                     v: jax.Array, *, bm: int = bk.DEFAULT_BM,
                     bn: int = bk.DEFAULT_BN,
@@ -200,6 +243,44 @@ def branched_matmul_q(x: jax.Array, u_q: jax.Array, u_scale: jax.Array,
     y = bqk.branched_matmul_q(x2, u_q, u_scale, xc_q, xc_scale, vp, vsp,
                               bm=bm_eff, bn=min(bn, vp.shape[2]),
                               interpret=not _on_tpu())
+    if pad_m:
+        y = y[:m]
+    if pad_s:
+        y = y[:, :s]
+    return y.reshape(*lead, s)
+
+
+def branched_matmul_sq(x: jax.Array, u_sp: jax.Array, u_idx: jax.Array,
+                       u_scale: jax.Array, xc_q: jax.Array,
+                       xc_scale: jax.Array, v_sp: jax.Array,
+                       v_idx: jax.Array, v_scale: jax.Array, *,
+                       bm: int = bsk.DEFAULT_BM, bn: int = bsk.DEFAULT_BN,
+                       force_kernel: bool = False) -> jax.Array:
+    """y = sum_n ((x @ ds(u_n)) @ dq(xc_n)) @ ds(v_n) with the fused
+    sparse-int8 branched kernel — 2:4-packed u/v tiles expanded +
+    dequantized in VMEM, int8 core, branch sum in scratch."""
+    lead = x.shape[:-1]
+    c = x.shape[-1]
+    r1 = u_sp.shape[-1]
+    r2 = xc_q.shape[-1]
+    s = v_sp.shape[-1]
+    x2 = x.reshape(-1, c)
+    m = x2.shape[0]
+    bm_eff = _bm_eff(bm, m)
+    q_bytes = jnp.dtype(u_sp.dtype).itemsize
+    if not (force_kernel or kernel_fits("branched_sq", m, c=c, r1=r1,
+                                        r2=r2, s=s, q_bytes=q_bytes,
+                                        bm=bm, bn=bn)):
+        return ref.branched_matmul_sq_ref(
+            x2, u_sp, u_idx, u_scale, xc_q, xc_scale, v_sp, v_idx,
+            v_scale).reshape(*lead, s)
+    x2, pad_m = _pad_to(x2, 0, bm_eff)
+    vp, pad_s = _pad_to(v_sp, 3, bn)
+    vsp, _ = _pad_to(v_scale, 2, bn)       # zero scales -> zero columns
+    y = bsk.branched_matmul_sq(x2, u_sp, u_idx, u_scale, xc_q, xc_scale,
+                               vp, v_idx, vsp, bm=bm_eff,
+                               bn=min(bn, vp.shape[3]),
+                               interpret=not _on_tpu())
     if pad_m:
         y = y[:m]
     if pad_s:

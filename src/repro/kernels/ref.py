@@ -28,6 +28,20 @@ def lowrank_matmul_q_ref(x: jax.Array, w0_q: jax.Array, w0_scale: jax.Array,
     return lowrank_matmul_ref(x, w0, w1, accum_dtype)
 
 
+def lowrank_matmul_sq_ref(x: jax.Array, w0_sp: jax.Array, w0_idx: jax.Array,
+                          w0_scale: jax.Array, w1_sp: jax.Array,
+                          w1_idx: jax.Array, w1_scale: jax.Array,
+                          accum_dtype=jnp.float32) -> jax.Array:
+    """Expand-dequantize-then-matmul oracle for the fused sparse-int8
+    kernel: scatters each factor's 2:4-packed rows back to dense in
+    ``x.dtype`` (matching the kernel's in-VMEM expand + dequant) and
+    reuses the plain reference chain."""
+    from repro.quant.sparse import expand_sparse
+    w0 = expand_sparse(w0_sp, w0_idx, w0_scale, x.dtype)
+    w1 = expand_sparse(w1_sp, w1_idx, w1_scale, x.dtype)
+    return lowrank_matmul_ref(x, w0, w1, accum_dtype)
+
+
 def branched_matmul_ref(x: jax.Array, u: jax.Array, xc: jax.Array,
                         v: jax.Array, accum_dtype=jnp.float32) -> jax.Array:
     """y = sum_n ((x @ u_n) @ xc_n) @ v_n  (paper Eq. 17).
@@ -52,6 +66,22 @@ def branched_matmul_q_ref(x: jax.Array, u_q: jax.Array, u_scale: jax.Array,
     u = (u_q.astype(accum_dtype) * u_scale).astype(x.dtype)
     xc = (xc_q.astype(accum_dtype) * xc_scale).astype(x.dtype)
     v = (v_q.astype(accum_dtype) * v_scale).astype(x.dtype)
+    return branched_matmul_ref(x, u, xc, v, accum_dtype)
+
+
+def branched_matmul_sq_ref(x: jax.Array, u_sp: jax.Array, u_idx: jax.Array,
+                           u_scale: jax.Array, xc_q: jax.Array,
+                           xc_scale: jax.Array, v_sp: jax.Array,
+                           v_idx: jax.Array, v_scale: jax.Array,
+                           accum_dtype=jnp.float32) -> jax.Array:
+    """Oracle for the fused sparse-int8 branched kernel: the outer
+    ``u``/``v`` factors expand from their 2:4 packing per branch, the
+    core ``xc`` dequantizes as a plain int8 tile, then the branched
+    reference chain runs in ``x.dtype``."""
+    from repro.quant.sparse import expand_sparse
+    u = expand_sparse(u_sp, u_idx, u_scale, x.dtype)
+    xc = (xc_q.astype(accum_dtype) * xc_scale).astype(x.dtype)
+    v = expand_sparse(v_sp, v_idx, v_scale, x.dtype)
     return branched_matmul_ref(x, u, xc, v, accum_dtype)
 
 

@@ -132,9 +132,11 @@ def linear_out_dim(p: dict) -> int:
 
 
 def linear_param_count(p: dict) -> int:
-    """Logical model parameters of one linear subtree.  ``*_scale``
-    leaves are quantization metadata, not parameters — they are excluded
-    (quantized ``*_q`` values count, at their logical element count)."""
+    """Stored model parameters of one linear subtree.  ``*_scale`` and
+    ``*_idx`` leaves are quantization / 2:4-packing metadata, not
+    parameters — they are excluded (quantized ``*_q`` values count at
+    their logical element count; packed ``*_sp`` values at the kept
+    count)."""
     from repro.layers.plan import build_plan, is_linear_subtree
     if is_linear_subtree(p):
         return build_plan(p).param_count

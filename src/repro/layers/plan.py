@@ -25,9 +25,10 @@ and ``parallel/sharding.py`` was blind to quantized keys entirely.  A
   branched_tucker_conv``, classified once from the keys present
   (quantized or not);
 * **per-factor** :class:`FactorSpec` — logical name, shape/dtype,
-  whether the value lives as a plain array or a quantized
-  ``k_q``/``k_scale`` pair, and the freeze policy (paper §2.2: the
-  teacher-derived factors receive no gradient);
+  whether the value lives as a plain array, a quantized
+  ``k_q``/``k_scale`` pair, or a 2:4-packed ``k_sp``/``k_idx``
+  (+ optional ``k_scale``) triple, and the freeze policy (paper §2.2:
+  the teacher-derived factors receive no gradient);
 * **kernel eligibility + VMEM fit** — :meth:`LinearPlan.kernel_for`
   decides fused-Pallas vs jnp-reference once, using the kernels' own
   footprint formulas (``repro.kernels.ops.kernel_fits``).  Leading batch
@@ -56,8 +57,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.quant.quantize import (QUANT_SUFFIX as _QUANT_SUFFIX,
-                                  SCALE_SUFFIX as _SCALE_SUFFIX)
+from repro.quant.quantize import (IDX_SUFFIX as _IDX_SUFFIX,
+                                  QUANT_SUFFIX as _QUANT_SUFFIX,
+                                  SCALE_SUFFIX as _SCALE_SUFFIX,
+                                  SP_SUFFIX as _SP_SUFFIX)
 
 PyTree = Any
 
@@ -100,20 +103,38 @@ class FactorSpec:
     """
 
     name: str                      # logical key ("w0", "xc", "tucker_u", ...)
-    shape: tuple[int, ...]         # logical (unquantized) shape
-    dtype: Any                     # value dtype (q dtype when quantized)
+    shape: tuple[int, ...]         # logical (unquantized, dense) shape
+    dtype: Any                     # value dtype (q/packed dtype when narrow)
     quantized: bool                # stored as name_q / name_scale pair
     frozen: bool                   # §2.2: stop_gradient under freeze policy
     scale_shape: tuple[int, ...] | None = None
+    sparsity: str | None = None    # "2:4" when stored name_sp / name_idx
+    idx_shape: tuple[int, ...] | None = None
+
+    @property
+    def density(self) -> float:
+        """Kept fraction of the logical values (1.0 when dense)."""
+        if self.sparsity is None:
+            return 1.0
+        keep, group = (int(t) for t in self.sparsity.split(":"))
+        return keep / group
 
     @property
     def size(self) -> int:
         return int(math.prod(self.shape))
 
     @property
+    def stored_size(self) -> int:
+        """Values actually stored (the 2:4 packing keeps half of them)."""
+        return int(round(self.size * self.density))
+
+    @property
     def bytes(self) -> int:
-        """HBM bytes this factor's storage occupies (incl. scales)."""
-        n = self.size * jnp.dtype(self.dtype).itemsize
+        """HBM bytes this factor's storage occupies (incl. scale and
+        sparse-index metadata)."""
+        n = self.stored_size * jnp.dtype(self.dtype).itemsize
+        if self.idx_shape is not None:
+            n += int(math.prod(self.idx_shape))         # int8 indices
         if self.quantized and self.scale_shape is not None:
             n += int(math.prod(self.scale_shape)) * 4   # f32 scales
         return n
@@ -125,6 +146,20 @@ def _spec_from(p: dict, kind: str, name: str) -> FactorSpec:
         v = p[name]
         return FactorSpec(name, tuple(int(d) for d in v.shape),
                           jnp.dtype(v.dtype), False, frozen)
+    if name + _SP_SUFFIX in p:
+        # 2:4-packed factor: slot-major (..., 2, G, S) values + index
+        # metadata; the logical dense shape has 4G input rows.
+        sp = p[name + _SP_SUFFIX]
+        idx = p[name + _IDX_SUFFIX]
+        scale = p.get(name + _SCALE_SUFFIX)
+        shape = (*(int(d) for d in sp.shape[:-3]),
+                 4 * int(sp.shape[-2]), int(sp.shape[-1]))
+        return FactorSpec(name, shape, jnp.dtype(sp.dtype),
+                          scale is not None, False,
+                          tuple(int(d) for d in scale.shape)
+                          if scale is not None else None,
+                          sparsity="2:4",
+                          idx_shape=tuple(int(d) for d in idx.shape))
     q = p[name + _QUANT_SUFFIX]
     scale = p[name + _SCALE_SUFFIX]
     # Quantized factors carry no gradient (serve-time transform), so the
@@ -153,9 +188,14 @@ class LinearPlan:
               freeze: bool = False) -> jax.Array:
         """Fetch factor ``name`` from tree ``p``: dequantizes a
         ``k_q``/``k_scale`` pair on the fly (to ``dtype``, default bf16
-        — the serving activation dtype) and applies the §2.2 freeze
-        policy to plain factors."""
+        — the serving activation dtype), expands a 2:4-packed
+        ``k_sp``/``k_idx`` factor back to dense, and applies the §2.2
+        freeze policy to plain factors."""
         spec = self.factor(name)
+        if spec.sparsity is not None:
+            from repro.quant.sparse import expand_sparse
+            return expand_sparse(p[name + _SP_SUFFIX], p[name + _IDX_SUFFIX],
+                                 p.get(name + _SCALE_SUFFIX), dtype)
         if spec.quantized:
             from repro.quant.quantize import dequantize_array
             return dequantize_array(p[name + _QUANT_SUFFIX],
@@ -179,6 +219,11 @@ class LinearPlan:
         return all(f.quantized for f in self.factors)
 
     @property
+    def sparse(self) -> bool:
+        """Any factor stored 2:4-packed."""
+        return any(f.sparsity is not None for f in self.factors)
+
+    @property
     def d_in(self) -> int:
         return self.factors[0].shape[-2]
 
@@ -196,11 +241,12 @@ class LinearPlan:
 
     @property
     def param_count(self) -> int:
-        """Logical model parameters.  Quantized values count (they *are*
-        the weights, in narrow storage); the f32 ``*_scale`` rows are
-        codebook metadata, not parameters — counting them skewed the
-        compression ratios for quantized trees."""
-        return sum(f.size for f in self.factors)
+        """Stored model parameters.  Quantized / 2:4-packed values count
+        (they *are* the weights, in narrow storage, at the *kept* count
+        for sparse factors); the f32 ``*_scale`` rows and int8 ``*_idx``
+        position metadata are codebook bookkeeping, not parameters —
+        counting them skewed the compression ratios."""
+        return sum(f.stored_size for f in self.factors)
 
     @property
     def quant_bytes(self) -> int:
@@ -241,11 +287,19 @@ class LinearPlan:
         kh, kw, _, r2 = s["core"][-4:]
         return [(n, c, r1), (n, kh * kw * r1, r2), (n, r2, s["v"][-1])]
 
+    def chain_density(self) -> tuple[float, ...]:
+        """Per-matmul kept fraction, aligned with :meth:`matmul_chain`
+        (2:4 factors feed sparsity-capable MXUs at half the FLOPs)."""
+        return tuple(self.factor(name).density
+                     for name in _KIND_FACTORS[self.kind])
+
     @property
     def flops_per_token(self) -> float:
         """Forward matmul FLOPs per input row (per output pixel for
-        spatial conv kinds)."""
-        return sum(2.0 * mult * k * n for mult, k, n in self.matmul_chain())
+        spatial conv kinds), density-scaled for 2:4 factors."""
+        return sum(2.0 * mult * k * n * d
+                   for (mult, k, n), d in zip(self.matmul_chain(),
+                                              self.chain_density()))
 
     # -- kernel dispatch ----------------------------------------------------
 
@@ -258,8 +312,9 @@ class LinearPlan:
         any ``(..., d_in)`` activation is eligible — including
         decode-shaped ``(B, 1, d)`` — the fit decision runs on
         ``M = prod(leading dims)``.  Returns one of ``"lowrank"``,
-        ``"lowrank_q"``, ``"branched"``, ``"branched_q"`` or ``None``
-        (jnp reference path).
+        ``"lowrank_q"``, ``"lowrank_sq"``, ``"branched"``,
+        ``"branched_q"``, ``"branched_sq"`` or ``None`` (jnp reference
+        path).
         """
         if not use_pallas or len(x_shape) < 2:
             return None
@@ -269,13 +324,36 @@ class LinearPlan:
         want_ndim = 2 if self.kind == KIND_LOWRANK else 3
         if any(len(f.shape) != want_ndim for f in self.factors):
             return None
+        from repro.kernels import ops as kops
+        m = int(math.prod(x_shape[:-1]))
+        chain = self.matmul_chain()
+        if self.sparse:
+            # The fused sq kernels want the canonical compound layout:
+            # every sparse factor also int8 (sp + idx + scale), and for
+            # branched the small core plain-int8 (sparsity excluded from
+            # its default targets).  Anything else — bf16-sparse
+            # (mode="none") or a partial sparse_targets mix — expands
+            # through the reference path.
+            if self.kind == KIND_LOWRANK:
+                if not all(f.sparsity is not None and f.quantized
+                           for f in self.factors):
+                    return None
+                fits = kops.kernel_fits("lowrank_sq", m, c=chain[0][1],
+                                        r=chain[0][2], s=self.d_out)
+                return "lowrank_sq" if fits else None
+            u, xc, v = (self.factor(n) for n in ("u", "xc", "v"))
+            if not (u.sparsity is not None and u.quantized
+                    and v.sparsity is not None and v.quantized
+                    and xc.quantized and xc.sparsity is None):
+                return None
+            fits = kops.kernel_fits("branched_sq", m, c=chain[0][1],
+                                    r1=chain[0][2], r2=chain[1][2],
+                                    s=self.d_out)
+            return "branched_sq" if fits else None
         # Mixed plain/quantized subtrees (partial quant_targets) take
         # the dequant reference path.
         if self.quantized and not self.fully_quantized:
             return None
-        from repro.kernels import ops as kops
-        m = int(math.prod(x_shape[:-1]))
-        chain = self.matmul_chain()
         q_bytes = (jnp.dtype(self.factors[0].dtype).itemsize
                    if self.fully_quantized else 1)
         if self.kind == KIND_LOWRANK:
@@ -310,6 +388,11 @@ class LinearPlan:
         kernel = self.kernel_for(x.shape, use_pallas)
         from repro.kernels import ops as kops
         if self.kind == KIND_LOWRANK:
+            if kernel == "lowrank_sq":
+                return kops.lowrank_matmul_sq(
+                    x, p["w0_sp"], p["w0_idx"], p["w0_scale"],
+                    p["w1_sp"], p["w1_idx"], p["w1_scale"],
+                    force_kernel=True)
             if kernel == "lowrank_q":
                 return kops.lowrank_matmul_q(
                     x, p["w0_q"], p["w0_scale"], p["w1_q"], p["w1_scale"],
@@ -321,6 +404,11 @@ class LinearPlan:
             h = _matmul(x, w0, accum_dtype)
             return _matmul(h, w1, accum_dtype)
         # branched: y = sum_j ((x @ u_j) @ xc_j) @ v_j   (paper Eq. 17)
+        if kernel == "branched_sq":
+            return kops.branched_matmul_sq(
+                x, p["u_sp"], p["u_idx"], p["u_scale"],
+                p["xc_q"], p["xc_scale"],
+                p["v_sp"], p["v_idx"], p["v_scale"], force_kernel=True)
         if kernel == "branched_q":
             return kops.branched_matmul_q(
                 x, p["u_q"], p["u_scale"], p["xc_q"], p["xc_scale"],
@@ -349,12 +437,13 @@ def _matmul(x: jax.Array, w: jax.Array, accum_dtype) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def _has(p: dict, key: str) -> bool:
-    return key in p or key + _QUANT_SUFFIX in p
+    return key in p or key + _QUANT_SUFFIX in p or key + _SP_SUFFIX in p
 
 
 def classify(p: dict) -> str:
     """Kind of a linear/conv subtree from the keys present (quantized
-    ``k_q``/``k_scale`` trees classify as their unquantized originals)."""
+    ``k_q``/``k_scale`` and 2:4-packed ``k_sp``/``k_idx`` trees classify
+    as their dense originals)."""
     if _has(p, "w"):
         return KIND_DENSE
     if _has(p, "tucker_u"):
@@ -373,7 +462,8 @@ def is_linear_subtree(node: Any) -> bool:
     if not isinstance(node, dict):
         return False
     for key in ("w", "w0", "xc", "tucker_u", "core", "u"):
-        v = node.get(key, node.get(key + _QUANT_SUFFIX))
+        v = node.get(key, node.get(key + _QUANT_SUFFIX,
+                                   node.get(key + _SP_SUFFIX)))
         if v is not None and hasattr(v, "shape"):
             return True
     return False
@@ -429,6 +519,7 @@ def tree_summary(plan_tree: PyTree) -> dict:
         "by_kind": {k: sum(1 for p in plans if p.kind == k)
                     for k in sorted({p.kind for p in plans})},
         "quantized": sum(1 for p in plans if p.quantized),
+        "sparse": sum(1 for p in plans if p.sparse),
         "param_count": sum(p.param_count for p in plans),
         "weight_bytes": sum(p.weight_bytes for p in plans),
         "quant_bytes": sum(p.quant_bytes for p in plans),

@@ -117,10 +117,13 @@ def make_param_shardings(mesh: Mesh, params: PyTree, axes: PyTree,
     """NamedSharding tree matching ``params`` (leaves may be arrays or
     ShapeDtypeStructs).
 
-    Quant-aware: a tree rewritten by ``repro.quant.quantize_tree`` after
+    Quant- and sparse-aware: a tree rewritten by
+    ``repro.quant.quantize_tree`` or ``repro.quant.sparsify_tree`` after
     the axes were built still resolves — ``k_q`` leaves inherit ``k``'s
-    logical axes and ``k_scale`` leaves shard on the out-dim axis (or
-    replicate), via ``repro.quant.align_quantized_axes`` per dict node.
+    logical axes, ``k_scale`` leaves shard on the out-dim axis (or
+    replicate), and 2:4-packed ``k_sp`` / ``k_idx`` leaves keep ``k``'s
+    out-dim sharding with the packed slot/group axes replicated — all
+    via ``repro.quant.align_quantized_axes`` per dict node.
     """
     from repro.quant.quantize import align_quantized_axes
     rules = _rules(parallel)

@@ -11,12 +11,22 @@
   KV cache pool (per-(slot, head, channel) scales, incremental decode
   writes), consumed directly by the fused
   :mod:`repro.kernels.decode_attention_q` kernel.
+* :mod:`repro.quant.sparse` — 2:4 semi-structured sparsity of the
+  factors (``k_sp``/``k_idx`` packed-value + index-metadata pairs),
+  composable with the int8 axis; the fused sparse hot path lives in
+  :mod:`repro.kernels.lowrank_matmul_sq` / ``branched_matmul_sq``.
 
 See ``src/repro/quant/README.md`` for the design and config knobs.
 """
 from repro.quant.quantize import (  # noqa: F401
-    FACTOR_KEYS, MODES, QUANT_SUFFIX, SCALE_SUFFIX,
+    FACTOR_KEYS, IDX_SUFFIX, MODES, QUANT_SUFFIX, SCALE_SUFFIX, SP_SUFFIX,
     align_quantized_axes, dequantize_array, dequantize_subtree,
     dequantize_tree, is_quantized, quantize_array, quantize_tree,
-    relative_error, scale_axes, tree_bytes,
+    relative_error, scale_axes, sparse_index_axes, sparse_value_axes,
+    tree_bytes,
+)
+from repro.quant.sparse import (  # noqa: F401
+    PATTERN_24, SPARSE_KEYS, desparsify_subtree, desparsify_tree,
+    expand_sparse, is_sparse, relative_error_sparse, sparsify_array,
+    sparsify_tree,
 )

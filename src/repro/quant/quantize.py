@@ -41,6 +41,12 @@ FACTOR_KEYS = ("w0", "w1", "u", "xc", "v", "tucker_u", "core", "tucker_v")
 
 QUANT_SUFFIX = "_q"
 SCALE_SUFFIX = "_scale"
+# 2:4 structured-sparsity pair (repro.quant.sparse): ``k_sp`` packed
+# values (slot-major ``(..., 2, C/4, S)``) + ``k_idx`` int8 within-group
+# row positions ``(..., 2, C/4, 1)``.  Defined here so the axes
+# alignment below covers sparse trees without a circular import.
+SP_SUFFIX = "_sp"
+IDX_SUFFIX = "_idx"
 
 INT8_QMAX = 127.0          # symmetric narrow range [-127, 127]
 FP8_MAX = 448.0            # e4m3 max finite
@@ -117,15 +123,40 @@ def scale_axes(axes: tuple) -> tuple:
     return (*axes[:-2], None, axes[-1])
 
 
-def align_quantized_axes(params_node: dict, axes_node: dict) -> dict:
-    """Axes dict aligned with a (possibly quantized) params dict.
+def sparse_value_axes(axes: tuple) -> tuple:
+    """Logical axes of a ``k_sp`` leaf given factor ``k``'s axes.
 
-    For every ``k_q``/``k_scale`` key whose axes entry is missing,
-    derives it from factor ``k``'s logical axes: ``k_q`` inherits them
-    verbatim, ``k_scale`` gets :func:`scale_axes`.  This is the one
-    place the ``*_q``/``*_scale`` convention meets the axes trees —
+    The slot-major packing ``(..., 2, C/4, S)`` inserts an unsharded
+    keep-slot axis before the (grouped) input axis; the input and output
+    axes keep their logical names, so a sparse tree shards like its
+    dense twin (the grouped input dim is C/4 — still divisible for any
+    mesh that divided C, since C % 4 == 0).
+    """
+    if len(axes) < 2:
+        raise ValueError(f"factor axes must be 2D+: {axes}")
+    return (*axes[:-2], None, axes[-2], axes[-1])
+
+
+def sparse_index_axes(axes: tuple) -> tuple:
+    """Logical axes of a ``k_idx`` leaf ``(..., 2, C/4, 1)``: keep-slot
+    and the collapsed output dim unsharded, input axis as the value."""
+    if len(axes) < 2:
+        raise ValueError(f"factor axes must be 2D+: {axes}")
+    return (*axes[:-2], None, axes[-2], None)
+
+
+def align_quantized_axes(params_node: dict, axes_node: dict) -> dict:
+    """Axes dict aligned with a (possibly quantized/sparse) params dict.
+
+    For every ``k_q``/``k_scale`` (and sparse ``k_sp``/``k_idx``) key
+    whose axes entry is missing, derives it from factor ``k``'s logical
+    axes: ``k_q`` inherits them verbatim, ``k_scale`` gets
+    :func:`scale_axes`, ``k_sp``/``k_idx`` get
+    :func:`sparse_value_axes`/:func:`sparse_index_axes`.  This is the
+    one place the rewrite conventions meet the axes trees —
     ``parallel.sharding.make_param_shardings`` calls it per dict node,
-    so trees quantized *after* the axes were built still resolve.
+    so trees quantized or sparsified *after* the axes were built still
+    resolve.
     """
     out = {}
     for k in params_node:
@@ -141,6 +172,16 @@ def align_quantized_axes(params_node: dict, axes_node: dict) -> dict:
             base = k[: -len(SCALE_SUFFIX)]
             if base in axes_node:
                 out[k] = scale_axes(axes_node[base])
+                continue
+        elif k.endswith(SP_SUFFIX):
+            base = k[: -len(SP_SUFFIX)]
+            if base in axes_node:
+                out[k] = sparse_value_axes(axes_node[base])
+                continue
+        elif k.endswith(IDX_SUFFIX):
+            base = k[: -len(IDX_SUFFIX)]
+            if base in axes_node:
+                out[k] = sparse_index_axes(axes_node[base])
                 continue
         raise KeyError(
             f"cannot resolve logical axes for param key {k!r} "

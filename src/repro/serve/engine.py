@@ -87,6 +87,7 @@ class ServeEngine:
     def __init__(self, run: RunConfig, params: PyTree, *, slots: int = 4,
                  max_seq: int = 512, seed: int = 0,
                  quantize: str | None = None,
+                 sparsify: str | None = None,
                  kv_quantize: str | None = None,
                  admission: str | None = None,
                  prefill_chunk: int | None = None,
@@ -97,12 +98,18 @@ class ServeEngine:
                  kv_num_blocks: int | None = None,
                  stats_window: int = STATS_WINDOW):
         """``quantize`` ("int8" | "fp8") quantizes the decomposed factors
-        at load via :mod:`repro.quant`; ``kv_quantize`` ("int8") stores
-        the runtime KV pool quantized (:mod:`repro.quant.kv`) — the GQA
-        K/V pool on plain attention stacks, the latent cache on MLA
-        stacks (cache family ``gqa_int8`` / ``mla_latent_int8``).  Both
-        default to ``run.lrd``, as do ``prefill_chunk`` /
-        ``step_token_budget`` (0 = engine defaults).
+        at load via :mod:`repro.quant`; ``sparsify`` ("2:4") first
+        2:4-prunes the ``run.lrd.sparse_targets`` factors
+        (:mod:`repro.quant.sparse`), packing their kept values in the
+        quantized dtype when ``quantize`` is also set (compound
+        compression — the sparse pass subsumes quantization for the
+        factors it packs, ``quantize_tree`` then handles the rest);
+        ``kv_quantize`` ("int8") stores the runtime KV pool quantized
+        (:mod:`repro.quant.kv`) — the GQA K/V pool on plain attention
+        stacks, the latent cache on MLA stacks (cache family
+        ``gqa_int8`` / ``mla_latent_int8``).  All default to
+        ``run.lrd``, as do ``prefill_chunk`` / ``step_token_budget``
+        (0 = engine defaults).
 
         ``admission`` is "continuous" (token-budget chunked prefill;
         default where supported) or "blocking" (one whole prefill per
@@ -130,6 +137,20 @@ class ServeEngine:
         assert run.model.has_decode, "serving needs a decoder"
         if quantize is None:
             quantize = run.lrd.quantize
+        if sparsify is None:
+            sparsify = run.lrd.sparsify
+        if sparsify and sparsify != "none":
+            # Sparsify BEFORE quantize: the pass prunes + packs (in the
+            # quantized dtype when quantize is on), and quantize_tree
+            # then skips the already-packed nodes and quantizes the
+            # remaining plain factors (xc, non-divisible layers).
+            from repro.quant import sparsify_tree
+            params = sparsify_tree(
+                params, pattern=sparsify,
+                mode=(quantize if quantize and quantize != "none"
+                      else "none"),
+                targets=run.lrd.sparse_targets)
+        self.sparsify = sparsify
         if quantize and quantize != "none":
             from repro.quant import quantize_tree
             params = quantize_tree(params, mode=quantize,
