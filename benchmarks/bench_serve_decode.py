@@ -1,8 +1,8 @@
 """Serve-decode benchmarks: KV quantization + admission scheduling +
-paged KV pooling.
+paged KV pooling + fault-injected lifecycle chaos.
 
-Four sweeps share this module (select with
-``--sweep {all,kv,sched,mla,paged}``):
+Five sweeps share this module (select with
+``--sweep {all,kv,sched,mla,paged,faults}``):
 
 **kv** — f32 KV pool vs int8-quantized KV pool.
 
@@ -48,6 +48,19 @@ number is admission-bubble-dominated by construction.
 pool under a shared-prefix load, f32 and int8: bytes/step, radix
 hit-rate over the shareable prefix blocks, tokens/s, and slot==paged
 greedy agreement.
+
+**faults** — the hardening tier under chaos: a seeded
+:class:`repro.serve.faults.FaultInjector` (allocation failures, NaN
+logits, corrupted int8 scales, radix blind spots) plus mid-flight
+cancels, instant deadlines, and a KV byte budget tight enough to drive
+preemption and the load shedder.  Per layout the row records the
+terminal status mix (finished / cancelled / deadline_exceeded /
+dropped / failed), quarantine + preemption + admission-failure counts,
+shed-step and degradation engage/recover totals, and the p99
+inter-token latency of the surviving streams — the latency cost of
+running degraded.  The run itself doubles as a smoke check: every
+request must land a terminal status and the pool must drain to zero
+bytes.
 
 Every sweep appends to the ``BENCH_serve.json`` trajectory at the repo
 root (stamped with ``git_rev`` + ``hostname`` via
@@ -273,6 +286,7 @@ def _mixed_load(eng, *, slots: int, long_len: int, short_new: int) -> dict:
             "max_itl_ms": round(float(gaps.max()) * 1e3, 3),
             "ttft_mean_ms": round(sum(ttfts) / len(ttfts) * 1e3, 3),
             "tokens_per_s": round(eng.throughput()["tokens_per_s"], 2),
+            "slow_steps": eng.throughput()["slow_steps"],
             "outputs": outputs}
 
 
@@ -308,6 +322,7 @@ def _saturated_load(eng, *, slots: int, new_tokens: int = 48) -> dict:
             "ttft_mean_ms": round(sum(r.ttft for r in reqs)
                                   / len(reqs) * 1e3, 3),
             "tokens_per_s": round(th["tokens_per_s"], 2),
+            "slow_steps": th["slow_steps"],
             "outputs": [r.output for r in reqs]}
 
 
@@ -473,6 +488,118 @@ def run_paged(fast: bool = True, dry_run: bool = False) -> str:
     return out
 
 
+def _chaos_load(eng, n_requests: int) -> dict:
+    """Mixed load with the lifecycle events of the acceptance scenario:
+    ~10% of requests get an already-expired deadline, ~10% are cancelled
+    mid-flight, the rest ride out whatever the injector throws."""
+    import numpy as np
+
+    from repro.serve.engine import Request
+
+    reqs = [Request(uid=i, prompt=[(i * 3) % 50 + 1] * (4 + (i * 5) % 17),
+                    max_new_tokens=8, max_preemptions=4)
+            for i in range(n_requests)]
+    pending_cancel = set()
+    for i, r in enumerate(reqs):
+        if i % 10 == 3:
+            r.deadline_s = 0.0
+        elif i % 10 == 7:
+            pending_cancel.add(r.uid)
+        eng.add_request(r)
+    for _ in range(2000):
+        if not eng.scheduler.busy():
+            break
+        eng.step()
+        for uid in list(pending_cancel):
+            if reqs[uid].output or reqs[uid].done:
+                eng.cancel(uid)           # mid-flight (first token seen)
+                pending_cancel.discard(uid)
+    eng.run_until_done()
+    # the smoke contract the chaos suite enforces per step; the bench
+    # re-asserts the endpoint so a regression fails loudly here too
+    assert all(r.done and r.status for r in reqs)
+    assert eng.pool.used_bytes() == 0
+    eng.pool.check_integrity()
+    gaps = [np.diff(r.token_times) for r in reqs
+            if len(r.token_times) > 1]
+    gaps = np.concatenate(gaps) if gaps else np.zeros(1)
+    th = eng.throughput()
+    return {"status_counts": th["status_counts"],
+            "preemptions": th["preemptions"],
+            "admit_failures": th["admit_failures"],
+            "quarantined": th["quarantined"],
+            "deadline_expired": th["deadline_expired"],
+            "shed_steps": th.get("shed_steps", 0),
+            "degradation_engages": th.get("degradation_engages", 0),
+            "degradation_recoveries": th.get("degradation_recoveries", 0),
+            "slow_steps": th["slow_steps"],
+            "p99_itl_ms": round(float(np.percentile(gaps, 99)) * 1e3, 3),
+            "tokens_per_s": round(th["tokens_per_s"], 2),
+            "fault_report": eng.faults.report()}
+
+
+def run_faults(fast: bool = True, dry_run: bool = False) -> str:
+    from repro.configs import registry
+    from repro.configs.base import ParallelConfig, RunConfig
+    from repro.models.api import get_model
+    from repro.serve.engine import ServeEngine
+    from repro.serve.faults import FaultInjector
+    from repro.serve.pool import KVPoolManager
+
+    sweeps = [(2, 64, 10), (4, 128, 16)]
+    if dry_run:
+        sweeps = sweeps[:1]
+    csv = Csv(["layout", "slots", "s_max", "n_req", "finished",
+               "cancelled", "deadline", "dropped", "failed", "preempt",
+               "quarantine", "shed_steps", "engages", "p99_itl_ms",
+               "tok_s"])
+    records = []
+    cfg = dataclasses.replace(registry.get("llama3.2-1b").smoke,
+                              dtype="float32")
+    run_cfg = RunConfig(model=cfg, parallel=ParallelConfig())
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    for slots, s_max, n_req in sweeps:
+        # a budget around half the pool keeps preemption + admission
+        # pressure live for most of the run -> the shedder has real
+        # work; derived from the plan accounting, not hand-tuned bytes
+        budget = KVPoolManager(m, slots, s_max,
+                               kv_quantize="int8").bytes_per_token \
+            * (slots * s_max // 2)
+        for layout in ("slot", "paged"):
+            inj = FaultInjector(
+                seed=11,
+                rates={"pool_alloc": 0.03, "radix_match": 0.3,
+                       "nan_logits": 0.02, "block_scale": 0.1},
+                params={"nan_logits": {"seg": "decode", "slot": 0}},
+                max_fires={"pool_alloc": 4, "nan_logits": 2,
+                           "block_scale": 2})
+            eng = ServeEngine(run_cfg, params, slots=slots,
+                              max_seq=s_max, kv_quantize="int8",
+                              kv_layout=layout, kv_byte_budget=budget,
+                              faults=inj)
+            r = _chaos_load(eng, n_req)
+            sc = r["status_counts"]
+            csv.row(layout, slots, s_max, n_req,
+                    sc.get("finished", 0), sc.get("cancelled", 0),
+                    sc.get("deadline_exceeded", 0), sc.get("dropped", 0),
+                    sc.get("failed", 0), r["preemptions"],
+                    r["quarantined"], r["shed_steps"],
+                    r["degradation_engages"], r["p99_itl_ms"],
+                    r["tokens_per_s"])
+            records.append({"layout": layout, "slots": slots,
+                            "s_max": s_max, "n_requests": n_req, **r})
+    out = csv.dump("serve hardening under chaos: seeded fault injection "
+                   "+ cancels + deadlines + KV pressure; every request "
+                   "must land an explicit terminal status and the pool "
+                   "must drain to zero (asserted) — p99 ITL is the "
+                   "surviving streams' latency cost of degraded mode")
+    _append_trajectory({"bench": "serve_faults", "dry_run": dry_run,
+                        "unix_time": int(time.time()), "rows": records})
+    out += f"\n# trajectory appended to {TRAJECTORY.name}"
+    return out
+
+
 def _append_trajectory(record: dict) -> None:
     from benchmarks.common import run_stamp
     traj = []
@@ -492,7 +619,7 @@ if __name__ == "__main__":
                     help="one tiny sweep point; CPU smoke for CI")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--sweep", choices=["all", "kv", "sched", "mla",
-                                        "paged"],
+                                        "paged", "faults"],
                     default="all")
     args = ap.parse_args()
     if args.sweep in ("all", "kv"):
@@ -503,3 +630,5 @@ if __name__ == "__main__":
         print(run_sched(fast=not args.full, dry_run=args.dry_run))
     if args.sweep in ("all", "paged"):
         print(run_paged(fast=not args.full, dry_run=args.dry_run))
+    if args.sweep in ("all", "faults"):
+        print(run_faults(fast=not args.full, dry_run=args.dry_run))

@@ -19,7 +19,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table3,rank,branch,lm,kernels,"
                          "quant,branched_quant,serve_decode,serve_mla,"
-                         "serve_sched,serve_paged,frontier")
+                         "serve_sched,serve_paged,serve_faults,frontier")
     ap.add_argument("--list", action="store_true",
                     help="print registered benchmark names and exit")
     args = ap.parse_args()
@@ -43,6 +43,7 @@ def main() -> None:
         "serve_mla": bench_serve_decode.run_mla,
         "serve_sched": bench_serve_decode.run_sched,
         "serve_paged": bench_serve_decode.run_paged,
+        "serve_faults": bench_serve_decode.run_faults,
         "frontier": bench_frontier.run,
     }
     if args.list:

@@ -5,6 +5,13 @@
 ``--kv-layout paged`` serves from the paged KV pool (fixed-size blocks
 behind per-slot block tables + a radix prefix cache): the two requests
 below that share a prompt prefix store that prefix's KV blocks once.
+
+``--deadline-s`` attaches a wall-clock deadline to every request —
+requests that cannot finish in time end with status
+``deadline_exceeded`` instead of blocking the batch.  ``--inject``
+turns on the seeded chaos injector (allocation failures + NaN logits)
+to show the lifecycle guards in action: every request still lands an
+explicit terminal status and the pool drains to zero.
 """
 import argparse
 import dataclasses
@@ -24,6 +31,13 @@ def main():
                     default="slot",
                     help="KV pool memory layout (paged = block tables + "
                          "copy-on-write prefix sharing)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock deadline; expired "
+                         "requests end with status=deadline_exceeded")
+    ap.add_argument("--inject", action="store_true",
+                    help="enable the seeded fault injector (allocation "
+                         "failures + NaN logits) to demo the lifecycle "
+                         "guards and the numerical watchdog")
     args = ap.parse_args()
 
     cfg = registry.get("llama3.2-1b").smoke
@@ -37,21 +51,33 @@ def main():
     print(f"serving a {report.summary()['param_ratio']:.0%}-size model")
 
     run = RunConfig(model=cfg, lrd=lrd, parallel=ParallelConfig())
+    faults = None
+    if args.inject:
+        from repro.serve.faults import FaultInjector
+        faults = FaultInjector(
+            seed=7,
+            rates={"pool_alloc": 0.1, "nan_logits": 0.05},
+            params={"nan_logits": {"seg": "decode", "slot": 0}},
+            max_fires={"pool_alloc": 3, "nan_logits": 1})
     eng = ServeEngine(run, params, slots=4, max_seq=128,
-                      kv_layout=args.kv_layout)
+                      kv_layout=args.kv_layout, faults=faults)
 
     shared = list(range(1, 20))   # > one KV block: paged requests share it
     prompts = [shared + [30], shared + [31, 32], [6, 7, 8, 9], [10],
                [11, 12], [13, 14, 15]]
     reqs = [Request(uid=i, prompt=p, max_new_tokens=16,
-                    temperature=0.0 if i % 2 == 0 else 0.8)
+                    temperature=0.0 if i % 2 == 0 else 0.8,
+                    deadline_s=args.deadline_s)
             for i, p in enumerate(prompts)]
     for r in reqs:
         eng.add_request(r)
     eng.run_until_done()
     for r in reqs:
-        print(f"req {r.uid}: prompt={r.prompt} -> {r.output}")
+        print(f"req {r.uid}: status={r.status} prompt={r.prompt} "
+              f"-> {r.output}")
     print("throughput:", eng.throughput())
+    if args.inject:
+        print("fault report:", eng.faults.report())
     if args.kv_layout == "paged":
         print("prefix cache:", eng.pool.prefix_stats())
 

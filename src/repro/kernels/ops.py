@@ -29,6 +29,21 @@ from repro.kernels import ref
 # v5e practical per-core VMEM working-set budget (conservative).
 VMEM_BUDGET = 64 * 1024 * 1024
 
+#: serve-tier fault injection hook (``kernel_gate`` point): when set,
+#: :func:`kernel_fits` consults it and a fire forces the jnp reference
+#: fallback — exercised at trace/plan time, so the chaos suite proves
+#: a kernel rejection degrades throughput, never correctness (the
+#: references are bit-exact oracles).  ``None`` when inert.
+_FAULT_INJECTOR = None
+
+
+def set_fault_injector(inj) -> None:
+    """Install (or with ``None`` clear) the serve tier's
+    :class:`repro.serve.faults.FaultInjector` for the ``kernel_gate``
+    injection point."""
+    global _FAULT_INJECTOR
+    _FAULT_INJECTOR = inj
+
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
@@ -58,6 +73,8 @@ def kernel_fits(kernel: str, m: int, *, c: int, s: int, r: int = 0,
     the launch.  The S-block is the full ``bn`` — the wrappers pad S up
     to a ``bn`` multiple, so the launched block is never narrower."""
     del s  # padded up to a bn multiple at launch
+    if _FAULT_INJECTOR is not None and _FAULT_INJECTOR.fire("kernel_gate"):
+        return False               # injected rejection -> jnp fallback
     if kernel == "lowrank":
         return lk.vmem_bytes(_bm_eff(bm or lk.DEFAULT_BM, m), c, r,
                              bn or lk.DEFAULT_BN) <= VMEM_BUDGET

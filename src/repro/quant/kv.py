@@ -60,6 +60,26 @@ PyTree = Any
 #: the decode kernel's dequant-free scale folding needs the int8 grid).
 KV_MODES = ("int8",)
 
+#: overflow ceiling for the running-max scales.  A single NaN/Inf
+#: activation must corrupt only its own cache row — NOT the
+#: per-(slot, head, channel) scale, which the requant pass multiplies
+#: into the slot's entire int8 history (``ratio = old/new`` goes to ~0
+#: under an overflowed scale, silently zeroing every past token, and a
+#: NaN propagates through ``maximum`` forever).
+KV_SCALE_MAX = 1e30
+
+
+def _finite_scale(candidate: jax.Array) -> jax.Array:
+    """Overflow-guard a running-max scale candidate: a non-finite
+    absmax contributes **nothing** (the running max keeps its old
+    value, so the slot's int8 history survives bit-exact — the
+    poisoned row itself is sanitized to 0 by :func:`quantize_kv`, and
+    the numerical watchdog quarantines the stream off its own NaN
+    logits the same step); finite candidates are capped at
+    :data:`KV_SCALE_MAX`."""
+    return jnp.minimum(jnp.where(jnp.isfinite(candidate), candidate, 0.0),
+                       KV_SCALE_MAX)
+
 
 def _check_mode(mode: str) -> None:
     if mode not in KV_MODES:
@@ -102,17 +122,22 @@ def is_quantized_kv(cache: Any) -> bool:
 # ---------------------------------------------------------------------------
 
 def quantize_kv(x: jax.Array, scale: jax.Array) -> jax.Array:
-    """Quantize ``x`` with a given (broadcastable) scale -> int8."""
+    """Quantize ``x`` with a given (broadcastable) scale -> int8.
+
+    Non-finite inputs land as 0 (``int8`` cast of NaN is undefined;
+    a poisoned activation must corrupt only its own row,
+    deterministically)."""
     safe = jnp.where(scale > 0, scale, 1.0)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / safe),
-                 -INT8_QMAX, INT8_QMAX)
+    q = jnp.round(x.astype(jnp.float32) / safe)
+    q = jnp.where(jnp.isfinite(q), jnp.clip(q, -INT8_QMAX, INT8_QMAX), 0.0)
     return q.astype(jnp.int8)
 
 
 def kv_scales(x: jax.Array, axis: int = 1) -> jax.Array:
-    """Per-(slot, head, channel) scales: absmax over the seq ``axis``."""
+    """Per-(slot, head, channel) scales: absmax over the seq ``axis``,
+    clamped to :data:`KV_SCALE_MAX` (overflow guard)."""
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis)
-    return amax / INT8_QMAX
+    return _finite_scale(amax / INT8_QMAX)
 
 
 def quantize_kv_prefill(x: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -147,7 +172,8 @@ def kv_write_chunk(cache_q: jax.Array, scale: jax.Array, new: jax.Array,
     by 1 LSB from the sequential path (one rounding instead of several).
     """
     newf = new.astype(jnp.float32)
-    scale_new = jnp.maximum(scale, jnp.max(jnp.abs(newf), axis=1) / INT8_QMAX)
+    scale_new = jnp.maximum(
+        scale, _finite_scale(jnp.max(jnp.abs(newf), axis=1) / INT8_QMAX))
 
     def _requant(c):
         safe = jnp.where(scale_new > 0, scale_new, 1.0)
@@ -188,10 +214,13 @@ def quantize_kv_tree(cache: PyTree, prompt_len: jax.Array | None = None
             mask = (jnp.arange(s) < prompt_len).reshape(
                 (s,) + (1,) * (-seq_axis - 1))
             xf = jnp.where(mask, xf, 0.0)
-        scale = jnp.max(jnp.abs(xf), axis=seq_axis) / INT8_QMAX
+        scale = _finite_scale(jnp.max(jnp.abs(xf), axis=seq_axis)
+                              / INT8_QMAX)
         sc = jnp.expand_dims(scale, seq_axis)
         safe = jnp.where(sc > 0, sc, 1.0)
-        q = jnp.clip(jnp.round(xf / safe), -INT8_QMAX, INT8_QMAX)
+        q = jnp.round(xf / safe)
+        q = jnp.where(jnp.isfinite(q),
+                      jnp.clip(q, -INT8_QMAX, INT8_QMAX), 0.0)
         return q.astype(jnp.int8), scale
 
     def pair(t, names, seq_axis):
@@ -232,7 +261,7 @@ def kv_write_token(cache_q: jax.Array, scale: jax.Array, new: jax.Array,
     one token row, not a full pool read-modify-write per step.
     """
     newf = new.astype(jnp.float32)
-    scale_new = jnp.maximum(scale, jnp.abs(newf) / INT8_QMAX)
+    scale_new = jnp.maximum(scale, _finite_scale(jnp.abs(newf) / INT8_QMAX))
 
     def _requant(c):
         safe = jnp.where(scale_new > 0, scale_new, 1.0)

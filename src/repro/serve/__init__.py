@@ -1,4 +1,9 @@
 from repro.serve.engine import ServeEngine, Request  # noqa: F401
-from repro.serve.pool import KVPoolManager  # noqa: F401
+from repro.serve.faults import (FaultInjector, INJECTION_POINTS,  # noqa: F401
+                                NULL_INJECTOR)
+from repro.serve.paging import PoolExhausted  # noqa: F401
+from repro.serve.pool import IntegrityError, KVPoolManager  # noqa: F401
 from repro.serve.runner import ModelRunner  # noqa: F401
-from repro.serve.scheduler import PrefillStream, Scheduler  # noqa: F401
+from repro.serve.scheduler import (DegradationPolicy,  # noqa: F401
+                                   LoadShedder, PrefillStream, Scheduler,
+                                   STATUSES)

@@ -33,9 +33,33 @@ full-precision batch=1 cache and land in the pool in one scatter
 match whole-prefill exactly for BOTH cache dtypes.
 
 Sampling: greedy or temperature; stop on EOS or max tokens.  One device
-call samples all slots per step (and all prefill completions per step).
-Per-step stats (a bounded ring buffer) record decode, prefill, and
-admission seconds; every request carries TTFT timestamps.
+call samples all slots per step (and all prefill completions per step)
+AND runs the numerical watchdog (:mod:`repro.serve.guard`): a stream
+whose logits go non-finite is quarantined — terminated ``failed``, its
+slot/blocks reclaimed without publishing to the radix — while its
+co-batched neighbors' token streams stay bit-identical.  Per-step stats
+(a bounded ring buffer) record decode, prefill, and admission seconds;
+every request carries TTFT timestamps.
+
+Hardening (the serve twin of :mod:`repro.train.fault_tolerance`):
+
+* lifecycle — per-request ``deadline_s`` / ``max_queue_s`` expiry,
+  :meth:`ServeEngine.cancel` from every state, a preemption-retry
+  budget (``max_preemptions`` evictions, then ``dropped``), and a
+  terminal :data:`repro.serve.scheduler.STATUSES` status on every
+  request that leaves the engine;
+* degradation — a :class:`repro.serve.scheduler.LoadShedder` watches
+  preemption + admission-failure pressure over the stats window and,
+  past its watermark (with hysteresis), shrinks the step token budget
+  and pauses admission until pressure clears;
+* watchdogs — a no-progress guard in :meth:`run_until_done` (stalled
+  engines mark survivors ``failed`` instead of silently returning), a
+  per-step :class:`repro.train.fault_tolerance.StragglerDetector`, and
+  (under ``debug=True``) the pool's ``check_integrity()`` after every
+  step;
+* chaos — a :class:`repro.serve.faults.FaultInjector` threads named
+  injection points through the pool, runner, and kernel gate
+  (``tests/test_serve_faults.py`` drives them all).
 """
 from __future__ import annotations
 
@@ -50,13 +74,18 @@ import numpy as np
 from repro.configs.base import RunConfig
 from repro.models.api import get_model
 from repro.serve import paging
+from repro.serve.faults import NULL_INJECTOR, FaultInjector
+from repro.serve.paging import PoolExhausted
 from repro.serve.pool import KVPoolManager, PagedKVPoolManager
 from repro.serve.runner import ModelRunner
-from repro.serve.scheduler import (PREFILL_BUCKET_MIN, PrefillStream,
-                                   Request, Scheduler)
+from repro.serve.scheduler import (PREFILL_BUCKET_MIN, DegradationPolicy,
+                                   LoadShedder, PrefillStream, Request,
+                                   Scheduler)
+from repro.train.fault_tolerance import StragglerDetector
 from repro.train.steps import block_opts
 
-__all__ = ["ServeEngine", "Request", "PREFILL_BUCKET_MIN"]
+__all__ = ["ServeEngine", "Request", "FaultInjector",
+           "PREFILL_BUCKET_MIN"]
 
 PyTree = Any
 
@@ -67,6 +96,11 @@ DEFAULT_PREFILL_CHUNK = 64
 #: steps of stats kept (ring buffer — long-running engines must not
 #: grow host memory without bound)
 STATS_WINDOW = 4096
+
+#: consecutive zero-progress steps (no tokens, no prefill, no
+#: admissions, no completions) before :meth:`ServeEngine.run_until_done`
+#: declares the engine stalled and fails the survivors
+DEFAULT_STALL_STEPS = 64
 
 
 class ServeEngine:
@@ -96,7 +130,11 @@ class ServeEngine:
                  kv_layout: str | None = None,
                  kv_block_size: int | None = None,
                  kv_num_blocks: int | None = None,
-                 stats_window: int = STATS_WINDOW):
+                 stats_window: int = STATS_WINDOW,
+                 debug: bool = False,
+                 faults: FaultInjector | None = None,
+                 degradation: DegradationPolicy | bool = True,
+                 stall_steps: int = DEFAULT_STALL_STEPS):
         """``quantize`` ("int8" | "fp8") quantizes the decomposed factors
         at load via :mod:`repro.quant`; ``sparsify`` ("2:4") first
         2:4-prunes the ``run.lrd.sparse_targets`` factors
@@ -131,6 +169,15 @@ class ServeEngine:
         ``run.lrd.kv_block_size`` or 16) must divide ``max_seq``, and
         ``kv_num_blocks`` sizes the physical pool (default
         ``slots * max_seq / block_size`` — the slot pool's capacity).
+
+        ``debug=True`` runs the pool's ``check_integrity()`` after
+        every step (invariant oracle — slow, test/diagnosis only).
+        ``faults`` threads a :class:`repro.serve.faults.FaultInjector`
+        through the pool, runner, and kernel gate (inert by default).
+        ``degradation`` is a :class:`repro.serve.scheduler.
+        DegradationPolicy` (True = defaults, False/None = off) for the
+        pressure-watching load shedder.  ``stall_steps`` is the
+        no-progress watchdog horizon in :meth:`run_until_done`.
         """
         self.run = run
         self.model = get_model(run.model)
@@ -212,13 +259,31 @@ class ServeEngine:
             self.pool = KVPoolManager(self.model, slots, max_seq,
                                       kv_quantize=self.kv_quantize,
                                       byte_budget=kv_byte_budget)
+        self.debug = debug
+        self.faults = faults if faults is not None else NULL_INJECTOR
+        self.pool.faults = self.faults
+        if self.faults.configured("kernel_gate"):
+            # module-global hook: kernel_fits is consulted at trace /
+            # plan time, far from any serve object
+            from repro.kernels import ops as kops
+            kops.set_fault_injector(self.faults)
         self.runner = ModelRunner(self.model, params, self.opts,
                                   max_seq=max_seq,
                                   kv_quantize=self.kv_quantize,
                                   paged=getattr(self.pool, "geometry",
-                                                None))
+                                                None),
+                                  faults=self.faults)
         self.scheduler = Scheduler(slots, prefill_chunk=self.prefill_chunk,
                                    step_token_budget=self.step_token_budget)
+        if degradation is True:
+            degradation = DegradationPolicy()
+        self.shedder = (LoadShedder(degradation, self.step_token_budget)
+                        if degradation else None)
+        self.stragglers = StragglerDetector()
+        self.stall_steps = max(1, stall_steps)
+        self.quarantined = 0
+        self.deadline_expired = 0
+        self._step_idx = 0
         # Decode streams the entire KV pool (masked, not skipped) every
         # step — the runtime twin of ``weight_bytes`` in the roofline,
         # and where kv_quantize="int8" pays.  Both numbers derive from
@@ -325,9 +390,12 @@ class ServeEngine:
         return False
 
     def _sample_rows(self, rows: list[jax.Array],
-                     temps_list: list[float]) -> np.ndarray:
+                     temps_list: list[float]
+                     ) -> tuple[np.ndarray, np.ndarray]:
         """Sample k <= slots logits rows in ONE device call, padded to
-        the decode path's single compiled (slots, V) shape."""
+        the decode path's single compiled (slots, V) shape.  Returns
+        ``(tokens, bad)`` — ``bad`` is the fused watchdog's per-row
+        non-finite flag (padding rows are zeros, never flagged)."""
         k = len(rows)
         lg = jnp.stack(rows)
         if k < self.slots:
@@ -335,7 +403,17 @@ class ServeEngine:
         temps = np.zeros((self.slots,), np.float32)
         temps[:k] = temps_list
         self.key, sub = jax.random.split(self.key)
-        return self.runner.sample(sub, lg, jnp.asarray(temps))[:k]
+        toks, bad = self.runner.sample(sub, lg, jnp.asarray(temps))
+        return toks[:k], bad[:k]
+
+    def _quarantine(self, slot: int) -> None:
+        """Numerical-watchdog casualty: terminate the stream in
+        ``slot`` as ``failed`` and reclaim its slot/blocks WITHOUT
+        publishing to the radix (a poisoned cache must never seed
+        future prompts)."""
+        self.scheduler.quarantine(slot)
+        self.pool.release(slot, publish=False)
+        self.quarantined += 1
 
     # -- blocking admission (pre-scheduler path; recurrent/MoE/VLM) ---------
 
@@ -369,13 +447,18 @@ class ServeEngine:
             self.scheduler.activate(ps)
             pf_toks += n
             rows.append(logits[0, -1, :])
-        toks = self._sample_rows(rows, [max(ps.req.temperature, 0.0)
-                                        for ps in started])
+        toks, bad = self._sample_rows(rows, [max(ps.req.temperature, 0.0)
+                                             for ps in started])
         now = time.perf_counter()
-        for ps, tok in zip(started, toks):
+        first = 0
+        for ps, tok, flagged in zip(started, toks, bad):
+            if flagged:
+                self._quarantine(ps.slot)
+                continue
             self._append_token(ps.req, int(tok), now)
+            first += 1
             self._maybe_finish(ps.slot)
-        return len(started), pf_toks
+        return first, pf_toks
 
     # -- continuous admission: chunked prefill under the token budget -------
 
@@ -430,14 +513,81 @@ class ServeEngine:
                              from_full_precision=True)
             self.scheduler.activate(ps)
             ps.cache = None
-        toks = self._sample_rows([ps.last_logits for ps in completed],
-                                 [max(ps.req.temperature, 0.0)
-                                  for ps in completed])
+        toks, bad = self._sample_rows([ps.last_logits for ps in completed],
+                                      [max(ps.req.temperature, 0.0)
+                                       for ps in completed])
         now = time.perf_counter()
-        for ps, tok in zip(completed, toks):
+        first = 0
+        for ps, tok, flagged in zip(completed, toks, bad):
+            if flagged:
+                self._quarantine(ps.slot)
+                continue
             self._append_token(ps.req, int(tok), now)
+            first += 1
             self._maybe_finish(ps.slot)
-        return len(completed)
+        return first
+
+    # -- lifecycle: cancel / deadlines --------------------------------------
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel request ``uid`` wherever it is — waiting (including
+        preempted-and-requeued), chunked-prefilling, or decode-active —
+        releasing its slot, blocks, and COW refcounts.  The request
+        terminates with status ``cancelled``; returns False when
+        ``uid`` is unknown or already terminal."""
+        sched, pool = self.scheduler, self.pool
+        for req in sched.waiting:
+            if req.uid == uid:
+                sched.waiting.remove(req)
+                sched.terminal(req, "cancelled")
+                return True
+        for ps in sched.prefilling:
+            if ps.req.uid == uid:
+                sched.prefilling.remove(ps)
+                sched.terminal(ps.req, "cancelled")
+                # a mid-prefill slot holds allocated (paged: possibly
+                # radix-shared) blocks but no landed KV — release drops
+                # exactly the refcounts admission took
+                pool.release(ps.slot)
+                return True
+        for slot, req in enumerate(sched.active):
+            if req is not None and req.uid == uid:
+                sched.active[slot] = None
+                sched.terminal(req, "cancelled")
+                pool.release(slot)
+                return True
+        return False
+
+    def _expire_deadlines(self) -> int:
+        """Terminate every request whose ``deadline_s`` (anywhere) or
+        ``max_queue_s`` (waiting only) has elapsed; returns the count."""
+        sched, pool = self.scheduler, self.pool
+        now = time.perf_counter()
+
+        def over(req, budget):
+            return (budget is not None and req.submit_time is not None
+                    and now - req.submit_time > budget)
+
+        n = 0
+        for req in list(sched.waiting):
+            if over(req, req.deadline_s) or over(req, req.max_queue_s):
+                sched.waiting.remove(req)
+                sched.terminal(req, "deadline_exceeded")
+                n += 1
+        for ps in list(sched.prefilling):
+            if over(ps.req, ps.req.deadline_s):
+                sched.prefilling.remove(ps)
+                sched.terminal(ps.req, "deadline_exceeded")
+                pool.release(ps.slot)
+                n += 1
+        for slot, req in enumerate(sched.active):
+            if req is not None and over(req, req.deadline_s):
+                sched.active[slot] = None
+                sched.terminal(req, "deadline_exceeded")
+                pool.release(slot)
+                n += 1
+        self.deadline_expired += n
+        return n
 
     # -- main loop ----------------------------------------------------------
 
@@ -454,70 +604,164 @@ class ServeEngine:
         for i in live:
             temps[i] = max(self.active[i].temperature, 0.0)
         self.key, sub = jax.random.split(self.key)
-        toks = self.runner.sample(sub, lg, jnp.asarray(temps))
+        toks, bad = self.runner.sample(sub, lg, jnp.asarray(temps))
         now = time.perf_counter()
         produced = 0
         for i in live:
+            if bad[i]:
+                # non-finite logits: quarantine before the token is
+                # appended or any KV growth is accounted — neighbors'
+                # streams are untouched (per-row sampling)
+                self._quarantine(i)
+                continue
             self._append_token(self.active[i], int(toks[i]), now)
             # the KV this step wrote at the slot's position belongs to
             # the *input* token — the paged pool's prefix registry
             # tracks it so released blocks stay radix-matchable
-            pool.grow(i, token=int(tokens[i, 0]))
+            try:
+                pool.grow(i, token=int(tokens[i, 0]))
+            except PoolExhausted:
+                # no block for the next write: preempt this stream (it
+                # resumes by re-prefilling prompt + output, including
+                # the token just sampled); `grow` is atomic, so state
+                # is exactly pre-call
+                self.scheduler.preempt(i)
+                pool.release(i)
+                produced += 1
+                continue
             produced += 1
             self._maybe_finish(i)
         return produced
 
     def step(self) -> int:
-        """One scheduler step: preempt under KV pressure, admit, decode
+        """One scheduler step: expire deadlines, preempt under KV
+        pressure, admit (unless the load shedder pauses it), decode
         every live stream, then spend leftover budget on prefill
         chunks.  Returns tokens produced (decode + first tokens)."""
         sched, pool = self.scheduler, self.pool
-        for slot in pool.pressure_victims():
+        self._step_idx += 1
+        self.stragglers.start()
+        self._expire_deadlines()
+        victims = pool.pressure_victims()
+        for slot in victims:
             sched.preempt(slot)
             pool.release(slot)
+        admit_fail0 = sched.admit_failures
+        shed = False
+        if self.shedder is not None:
+            # degraded mode: run with the shrunk budget; pause
+            # admission only while work is already in flight (an idle
+            # engine must always admit — shedding can never deadlock
+            # the queue)
+            sched.step_token_budget = self.shedder.budget
+            shed = self.shedder.engaged and (
+                bool(sched.prefilling)
+                or any(r is not None for r in sched.active))
         if self.admission == "blocking":
             t0 = time.perf_counter()
-            first, pf_toks = self._admit_blocking()
+            first, pf_toks = (0, 0) if shed else self._admit_blocking()
             admit_s = time.perf_counter() - t0
             live = sched.live_slots()
-            produced, decode_s = 0, 0.0
+            produced, decode_s, prefill_s = 0, 0.0, 0.0
             if live:
                 t0 = time.perf_counter()
                 produced = self._decode_live(live)
                 decode_s = time.perf_counter() - t0
-            if live or first:
-                self.stats.append({"live": len(live), "tokens": produced,
-                                   "seconds": decode_s,
-                                   "prefill_tokens": pf_toks,
-                                   "prefill_seconds": 0.0,
-                                   "first_tokens": first,
-                                   "admit_seconds": admit_s})
-            return produced + first
-        sched.admit(pool)
-        live = sched.live_slots()
-        t0 = time.perf_counter()
-        produced = self._decode_live(live) if live else 0
-        decode_s = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        pf_toks, first = self._prefill_chunks(len(live))
-        prefill_s = time.perf_counter() - t0
-        if live or pf_toks or first:
+            record = bool(live or first)
+        else:
+            if not shed:
+                sched.admit(pool)
+            live = sched.live_slots()
+            t0 = time.perf_counter()
+            produced = self._decode_live(live) if live else 0
+            decode_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            pf_toks, first = self._prefill_chunks(len(live))
+            prefill_s = time.perf_counter() - t0
+            admit_s = 0.0
+            record = bool(live or pf_toks or first)
+        event = self.stragglers.stop(self._step_idx)
+        if self.shedder is not None:
+            self.shedder.observe(bool(victims)
+                                 or sched.admit_failures > admit_fail0)
+        if record:
             self.stats.append({"live": len(live), "tokens": produced,
                                "seconds": decode_s,
                                "prefill_tokens": pf_toks,
                                "prefill_seconds": prefill_s,
                                "first_tokens": first,
-                               "admit_seconds": 0.0})
+                               "admit_seconds": admit_s,
+                               "preempted": len(victims),
+                               "admit_failures":
+                                   sched.admit_failures - admit_fail0,
+                               "shed": int(shed),
+                               "straggler": int(event is not None)})
+        if self.debug:
+            pool.check_integrity()
         return produced + first
+
+    def _fail_survivors(self) -> int:
+        """No-progress watchdog firing: terminate everything still in
+        flight or queued as ``failed`` and reclaim its pool state, so
+        a stalled engine surfaces explicit statuses instead of
+        silently losing requests."""
+        sched, pool = self.scheduler, self.pool
+        n = 0
+        while sched.waiting:
+            sched.terminal(sched.waiting.popleft(), "failed")
+            n += 1
+        for ps in list(sched.prefilling):
+            sched.prefilling.remove(ps)
+            sched.terminal(ps.req, "failed")
+            pool.release(ps.slot, publish=False)
+            n += 1
+        for slot, req in enumerate(sched.active):
+            if req is not None:
+                sched.active[slot] = None
+                sched.terminal(req, "failed")
+                pool.release(slot, publish=False)
+                n += 1
+        return n
 
     def run_until_done(self, max_steps: int = 10_000) -> list[Request]:
         """Drive the engine until queue + slots drain; returns the
-        requests that completed during this call (in completion order)."""
+        requests that completed (any terminal status) during this call,
+        in completion order.
+
+        Two watchdogs close the silent-loss holes of the naive loop:
+        ``stall_steps`` consecutive steps with zero progress (no
+        tokens, no prefill, no admissions, no terminal transitions)
+        mark every survivor ``failed`` and return — a scheduler
+        deadlock surfaces as explicit statuses; and exhausting
+        ``max_steps`` with work still in flight raises instead of
+        returning as if drained."""
+        sched = self.scheduler
         start = len(self.finished)
+        stalled = 0
         for _ in range(max_steps):
-            if not self.scheduler.busy():
+            if not sched.busy():
                 break
-            self.step()
+            fin0 = len(self.finished)
+            prev = self.stats[-1] if self.stats else None
+            produced = self.step()
+            entry = (self.stats[-1]
+                     if self.stats and self.stats[-1] is not prev
+                     else None)
+            progressed = (produced > 0
+                          or len(self.finished) > fin0
+                          or bool(entry and entry["prefill_tokens"]))
+            stalled = 0 if progressed else stalled + 1
+            if stalled >= self.stall_steps:
+                self._fail_survivors()
+                break
+        else:
+            if sched.busy():
+                raise RuntimeError(
+                    f"run_until_done: {max_steps} steps exhausted with "
+                    f"{len(sched.waiting)} waiting, "
+                    f"{len(sched.prefilling)} prefilling, "
+                    f"{len(sched.live_slots())} active requests still "
+                    "in flight")
         return self.finished[start:]
 
     def throughput(self) -> dict:
@@ -526,8 +770,19 @@ class ServeEngine:
         spent admitting/prefilling, not just decode steps — and TTFT is
         reported from per-request timestamps."""
         stats = list(self.stats)
+        status_counts: dict[str, int] = {}
+        for r in self.finished:
+            key = r.status or "finished"
+            status_counts[key] = status_counts.get(key, 0) + 1
         if not stats:
-            return {"tokens_per_s": 0.0, "steps": 0}
+            # an engine that never recorded a productive step can still
+            # have terminal requests (e.g. every admission fault-failed
+            # and the stall watchdog swept the queue)
+            return {"tokens_per_s": 0.0, "steps": 0,
+                    "status_counts": status_counts,
+                    "admit_failures": self.scheduler.admit_failures,
+                    "quarantined": self.quarantined,
+                    "deadline_expired": self.deadline_expired}
         dec = sum(s["tokens"] for s in stats)
         first = sum(s.get("first_tokens", 0) for s in stats)
         dec_s = sum(s["seconds"] for s in stats)
@@ -541,7 +796,19 @@ class ServeEngine:
                "prefill_seconds": pf_s + ad_s,
                "prefill_tokens": sum(s.get("prefill_tokens", 0)
                                      for s in stats),
-               "preemptions": self.scheduler.preemptions}
+               "preemptions": self.scheduler.preemptions,
+               # hardening counters
+               "admit_failures": self.scheduler.admit_failures,
+               "quarantined": self.quarantined,
+               "deadline_expired": self.deadline_expired,
+               "status_counts": status_counts,
+               "slow_steps": len(self.stragglers.events),
+               "step_ewma_s": self.stragglers.ewma}
+        if self.shedder is not None:
+            out["shed_steps"] = sum(s.get("shed", 0) for s in stats)
+            out["degradation_engaged"] = self.shedder.engaged
+            out["degradation_engages"] = self.shedder.engage_count
+            out["degradation_recoveries"] = self.shedder.recover_count
         ttfts = [r.ttft for r in self.finished if r.ttft is not None]
         if ttfts:
             out["ttft_mean_s"] = sum(ttfts) / len(ttfts)

@@ -1,0 +1,149 @@
+"""Deterministic fault injection for the serve tier.
+
+The serve-side twin of :mod:`repro.train.fault_tolerance`'s
+fault-injection-driven testing discipline: a seeded
+:class:`FaultInjector` with **named injection points** threaded through
+the pool managers (allocation, radix matching, scale corruption), the
+:class:`repro.serve.runner.ModelRunner` step (NaN logits, slow steps),
+and kernel dispatch (:func:`repro.kernels.ops.kernel_fits` rejection).
+Everything is *off by default* — an engine built without an injector
+carries :data:`NULL_INJECTOR`, whose :meth:`~FaultInjector.fire` is a
+constant ``False`` — and completely deterministic when on: each point
+draws from its own ``random.Random`` stream keyed by ``(seed, point)``,
+so one point's firing pattern never depends on how often another point
+was consulted.
+
+The chaos suite (``tests/test_serve_faults.py``) drives every point
+against both pool layouts and both cache dtypes and asserts the engine
+always converges to a consistent terminal state: every request carries
+an explicit :class:`~repro.serve.scheduler.Request` status,
+``check_integrity()`` passes, and ``used_bytes() == 0`` after drain.
+
+Injection points
+----------------
+
+``pool_alloc``
+    Slot/block allocation raises
+    :class:`repro.serve.paging.PoolExhausted` (the exception the real
+    paged pool raises when the free list AND the cold LRU are dry).
+    Fired in ``allocate`` on both managers and in the paged ``grow``
+    when a decode write crosses into an unallocated block.
+``radix_match``
+    The admission radix lookup returns no hits — prefix reuse silently
+    disabled for that admission (the stream must re-prefill, and the
+    blocks ``can_admit`` assumed shared must be allocated fresh, which
+    can in turn exhaust the pool).
+``nan_logits``
+    A runner step's logits are poisoned with NaN after the jitted call
+    (one slot row on decode — ``params={"nan_logits": {"slot": i}}`` —
+    the whole segment on prefill paths).  Drives the
+    :mod:`repro.serve.guard` quarantine path.
+``kernel_gate``
+    :func:`repro.kernels.ops.kernel_fits` rejects, forcing the jnp
+    reference fallback at trace time (module-global hook — see
+    :func:`repro.kernels.ops.set_fault_injector`).
+``block_scale``
+    One freshly inserted int8 scale row (slot pool: the stream's slot;
+    paged pool: the stream's first physical block) is corrupted to
+    ``+inf`` — dequantized KV goes non-finite and the stream's next
+    logits trip the watchdog.  A no-op on f32 pools.
+``slow_step``
+    The runner step sleeps ``params={"slow_step": {"seconds": s}}``
+    (default 0.05) — drives the serve
+    :class:`~repro.train.fault_tolerance.StragglerDetector`.
+"""
+from __future__ import annotations
+
+import random
+from typing import Any, Iterable, Mapping
+
+__all__ = ["FaultInjector", "NULL_INJECTOR", "INJECTION_POINTS"]
+
+#: every named injection point (typo guard: specs naming anything else
+#: raise at construction)
+INJECTION_POINTS = (
+    "pool_alloc",
+    "radix_match",
+    "nan_logits",
+    "kernel_gate",
+    "block_scale",
+    "slow_step",
+)
+
+
+class FaultInjector:
+    """Seeded, per-point-deterministic fault source.
+
+    ``rates`` maps point -> probability per consultation; ``schedule``
+    maps point -> 1-based consultation indices that fire exactly (tests
+    pin "poison decode call #3" this way); ``max_fires`` caps total
+    fires per point (e.g. poison exactly one step under a rate);
+    ``params`` carries per-point knobs read via :meth:`param`.
+    """
+
+    def __init__(self, seed: int = 0,
+                 rates: Mapping[str, float] | None = None,
+                 schedule: Mapping[str, Iterable[int]] | None = None,
+                 params: Mapping[str, Mapping[str, Any]] | None = None,
+                 max_fires: Mapping[str, int] | None = None):
+        self.seed = seed
+        self.rates = dict(rates or {})
+        self.schedule = {k: frozenset(int(i) for i in v)
+                         for k, v in (schedule or {}).items()}
+        self.params = {k: dict(v) for k, v in (params or {}).items()}
+        self.max_fires = dict(max_fires or {})
+        for point in (set(self.rates) | set(self.schedule)
+                      | set(self.params) | set(self.max_fires)):
+            if point not in INJECTION_POINTS:
+                raise ValueError(
+                    f"unknown injection point {point!r} "
+                    f"(want one of {INJECTION_POINTS})")
+        self.calls: dict[str, int] = {p: 0 for p in INJECTION_POINTS}
+        self.fired: dict[str, int] = {p: 0 for p in INJECTION_POINTS}
+        # one independent stream per point: firing decisions depend
+        # only on (seed, point, consultation index), never on how often
+        # other points were consulted
+        self._rng = {p: random.Random(f"{seed}:{p}")
+                     for p in INJECTION_POINTS}
+
+    def configured(self, point: str) -> bool:
+        """Can this point ever fire?  (Cheap pre-check so hot paths
+        skip the bookkeeping entirely for unconfigured points.)"""
+        return point in self.rates or point in self.schedule
+
+    @property
+    def active(self) -> bool:
+        return bool(self.rates or self.schedule)
+
+    def fire(self, point: str) -> bool:
+        """One consultation of ``point``: returns True when the fault
+        should be injected (and counts it)."""
+        if point not in INJECTION_POINTS:
+            raise ValueError(f"unknown injection point {point!r}")
+        if not self.configured(point):
+            return False
+        self.calls[point] += 1
+        cap = self.max_fires.get(point)
+        if cap is not None and self.fired[point] >= cap:
+            return False
+        hit = self.calls[point] in self.schedule.get(point, ())
+        rate = self.rates.get(point, 0.0)
+        if not hit and rate > 0.0:
+            hit = self._rng[point].random() < rate
+        if hit:
+            self.fired[point] += 1
+        return hit
+
+    def param(self, point: str, key: str, default: Any = None) -> Any:
+        return self.params.get(point, {}).get(key, default)
+
+    def report(self) -> dict:
+        """Consultations and fires per configured point."""
+        pts = [p for p in INJECTION_POINTS if self.configured(p)]
+        return {p: {"calls": self.calls[p], "fired": self.fired[p]}
+                for p in pts}
+
+
+#: shared inert injector: never configured, never fires — the default
+#: every serve component carries so hot paths stay branch-cheap
+NULL_INJECTOR = FaultInjector()

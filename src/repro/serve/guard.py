@@ -1,0 +1,56 @@
+"""Numerical watchdog: per-slot non-finite logit detection, fused into
+the batched sampling call.
+
+A poisoned stream (int8 scale overflow, corrupted block, a model bug)
+must degrade **one** request, not the engine: NaN/Inf logits in one
+slot row would otherwise flow through the shared
+``jax.random.categorical`` call and, worse, keep writing garbage into
+the shared KV pool every step.  :func:`sample_and_flag` is the
+one-device-call answer — the same batched greedy/temperature sampler
+the runner always ran, plus a per-row ``all(isfinite)`` reduction fused
+into the same jitted computation.  The flags ride back on the single
+host transfer the engine already pays for the sampled tokens, so the
+happy path gains **no extra host syncs** and no second kernel launch.
+
+Guarantees the chaos suite pins down:
+
+* a flagged row's token is sampled from zeroed logits (deterministic,
+  finite — never lets a NaN pick an out-of-range token id); the engine
+  quarantines the stream before the token is ever appended;
+* *clean* rows are bit-identical to the unguarded sampler: their logits
+  pass through untouched, per-row argmax is independent across rows,
+  and ``jax.random.categorical``'s gumbel noise depends only on
+  ``(key, shape)`` — so quarantining slot ``i`` never perturbs slot
+  ``j``'s greedy (or seeded-sampling) stream.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["nonfinite_rows", "sample_and_flag"]
+
+
+def nonfinite_rows(logits: jax.Array) -> jax.Array:
+    """``(rows, V) -> (rows,)`` bool: True where ANY logit in the row is
+    NaN/Inf.  One fused reduction; jit-safe."""
+    return ~jnp.all(jnp.isfinite(logits), axis=-1)
+
+
+def sample_and_flag(key: jax.Array, logits: jax.Array,
+                    temps: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Batched sampling with a fused watchdog.
+
+    ``logits (rows, V)``, ``temps (rows,)`` -> ``(tokens (rows,) int,
+    bad (rows,) bool)``.  Greedy rows (``temps == 0``) take the per-row
+    argmax; temperature rows draw categorically — exactly the runner's
+    historical ``_sample_all`` on clean rows.  Bad rows sample from
+    zeroed logits (token 0 under greedy) and are flagged for the engine
+    to quarantine.
+    """
+    bad = nonfinite_rows(logits)
+    clean = jnp.where(bad[:, None], 0.0, logits)
+    greedy = jnp.argmax(clean, axis=-1)
+    safe = jnp.where(temps > 0, temps, 1.0)
+    sampled = jax.random.categorical(key, clean / safe[:, None], axis=-1)
+    return jnp.where(temps > 0, sampled, greedy), bad

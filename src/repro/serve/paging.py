@@ -46,6 +46,14 @@ from collections import OrderedDict, deque
 DEFAULT_BLOCK_SIZE = 16
 
 
+class PoolExhausted(RuntimeError):
+    """No KV capacity for an allocation: the free list is dry and (for
+    the paged pool) every cold block is an interior prefix of a live
+    stream.  The serve tier treats this as *pressure*, not a crash —
+    admission retries later, a mid-decode grow preempts the stream —
+    so it gets its own type rather than a bare ``RuntimeError``."""
+
+
 class _RadixNode:
     __slots__ = ("parent", "edge", "children", "block")
 
@@ -159,7 +167,7 @@ class BlockPool:
                 self.radix.forget(bid)
                 self.stats.evictions += 1
                 return bid
-        raise RuntimeError(
+        raise PoolExhausted(
             "paged KV pool exhausted: no free blocks and every cold "
             "block is an interior prefix of a live stream")
 

@@ -39,8 +39,40 @@ import numpy as np
 from repro.layers import cache as cache_mod
 from repro.quant import kv as kvq
 from repro.serve import paging
+from repro.serve.faults import NULL_INJECTOR
+from repro.serve.paging import PoolExhausted
 
 PyTree = Any
+
+
+class IntegrityError(AssertionError):
+    """A pool invariant does not hold (refcounts vs block tables, free
+    list disjointness, byte accounting).  Raised by
+    ``check_integrity()`` — the oracle every lifecycle/chaos test runs
+    after each mutation, and the engine runs per step under
+    ``debug=True``."""
+
+
+def _corrupt_scale_leaf(cache: PyTree, index: int) -> PyTree:
+    """Fault-injection helper (``block_scale``): set one stream's /
+    block's row of the FIRST ``*_scale`` leaf to ``+inf`` — the
+    signature of a corrupted quantized block.  Dequantized KV goes
+    non-finite, the next step's logits go NaN, and the numerical
+    watchdog must quarantine exactly that stream.  ``index`` is a slot
+    (slot pool: scales ``(..., B, KH, D)`` / ``(..., B, r)``) or a
+    physical block id (paged pool — same tail ranks)."""
+    state = {"done": False}
+
+    def leaf(path, x):
+        key = str(getattr(path[-1], "key", path[-1]))
+        if state["done"] or not key.endswith("_scale"):
+            return x
+        state["done"] = True
+        ax = x.ndim - 3 if key in ("k_scale", "v_scale") else x.ndim - 2
+        ix = (slice(None),) * ax + (index,)
+        return x.at[ix].set(jnp.inf)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
 
 
 class KVPoolManager:
@@ -66,6 +98,9 @@ class KVPoolManager:
         self.lengths = np.zeros((slots,), np.int64)     # logical KV tokens
         self.tickets = np.full((slots,), -1, np.int64)  # admission age; -1 free
         self._next_ticket = 0
+        #: fault source (inert by default; the engine threads its
+        #: injector in)
+        self.faults = NULL_INJECTOR
 
         #: one CachePlan per cached attention layer — the declarative
         #: source of ALL byte accounting (empty for recurrent models).
@@ -105,6 +140,8 @@ class KVPoolManager:
         pooled (always 0 for the slot layout)."""
         del tokens
         assert self.tickets[slot] < 0, slot
+        if self.faults.fire("pool_alloc"):
+            raise PoolExhausted("injected: pool_alloc (slot pool)")
         self.tickets[slot] = self._next_ticket
         self._next_ticket += 1
         self.lengths[slot] = length
@@ -120,10 +157,51 @@ class KVPoolManager:
         self.positions[slot] += n
         self.lengths[slot] += n
 
-    def release(self, slot: int) -> None:
+    def release(self, slot: int, publish: bool = True) -> None:
+        """Free ``slot``.  ``publish`` exists for surface parity with
+        the paged pool (which registers released blocks in its radix);
+        the slot layout shares nothing, so it is a no-op here."""
+        del publish
         self.tickets[slot] = -1
         self.lengths[slot] = 0
         self.positions[slot] = 0
+
+    # -- invariants ---------------------------------------------------------
+
+    def check_integrity(self) -> bool:
+        """Cross-validate the slot pool's invariants; raises
+        :class:`IntegrityError` on the first violation, returns True
+        when everything holds.  The oracle behind the engine's
+        ``debug=`` flag and the lifecycle/chaos tests."""
+        errs: list[str] = []
+        occ = self.occupied_slots()
+        for s in range(self.slots):
+            if self.tickets[s] < 0:
+                if self.lengths[s] or self.positions[s]:
+                    errs.append(
+                        f"free slot {s} holds state "
+                        f"(len={self.lengths[s]}, pos={self.positions[s]})")
+            else:
+                if not 0 <= self.positions[s] <= self.max_seq:
+                    errs.append(
+                        f"slot {s} position {self.positions[s]} out of "
+                        f"[0, {self.max_seq}]")
+                if not 0 <= self.lengths[s] <= self.max_seq:
+                    errs.append(
+                        f"slot {s} length {self.lengths[s]} out of "
+                        f"[0, {self.max_seq}]")
+        tickets = [int(self.tickets[s]) for s in occ]
+        if len(set(tickets)) != len(tickets):
+            errs.append(f"duplicate admission tickets: {tickets}")
+        recomputed = int(sum(int(self.lengths[s]) for s in occ)
+                         * self.bytes_per_token)
+        if recomputed != self.used_bytes():
+            errs.append(
+                f"used_bytes {self.used_bytes()} != occupied-slot "
+                f"recomputation {recomputed}")
+        if errs:
+            raise IntegrityError("; ".join(errs))
+        return True
 
     # -- byte budget --------------------------------------------------------
 
@@ -210,6 +288,8 @@ class KVPoolManager:
                         jnp.asarray(length, jnp.int32))
         self.positions[slot] = length
         self.lengths[slot] = length
+        if self.kv_quantize and self.faults.fire("block_scale"):
+            self.cache = _corrupt_scale_leaf(self.cache, slot)
 
 
 class PagedKVPoolManager:
@@ -290,6 +370,7 @@ class PagedKVPoolManager:
         self.tickets = np.full((slots,), -1, np.int64)  # admission age
         self._next_ticket = 0
 
+        self.faults = NULL_INJECTOR
         self.blocks = paging.BlockPool(num_blocks, block_size)
         self.tables: list[list[int]] = [[] for _ in range(slots)]
         self.tokens: list[list[int]] = [[] for _ in range(slots)]
@@ -330,15 +411,34 @@ class PagedKVPoolManager:
         prompt — the final token must re-prefill for its logits) and
         allocate fresh blocks covering positions ``[0, length]`` (the
         +1 is the first decode write).  Returns the matched token
-        count — the engine skips prefilling that prefix."""
+        count — the engine skips prefilling that prefix.
+
+        Exception-safe: if the fresh-block loop exhausts the pool
+        (``can_admit`` is optimistic — a concurrent admission can win
+        the race for the last cold block), every block retained or
+        allocated so far is released before the
+        :class:`~repro.serve.paging.PoolExhausted` propagates — no
+        refcount leaks, no half-reserved slot."""
         assert self.tickets[slot] < 0, slot
+        if self.faults.fire("pool_alloc"):
+            raise PoolExhausted("injected: pool_alloc (paged admission)")
         toks = [int(t) for t in tokens] if tokens is not None else []
-        matched = self.blocks.match_retain(toks, max_tokens=length - 1) \
-            if toks else []
+        if toks and self.faults.fire("radix_match"):
+            toks_match = []        # injected: prefix reuse blind spot
+        else:
+            toks_match = toks
+        matched = self.blocks.match_retain(toks_match,
+                                           max_tokens=length - 1) \
+            if toks_match else []
         table = list(matched)
         need = min(length // self.block_size + 1, self.blocks_per_slot)
-        while len(table) < need:
-            table.append(self.blocks.alloc())
+        try:
+            while len(table) < need:
+                table.append(self.blocks.alloc())
+        except PoolExhausted:
+            for bid in table:      # matched retains AND fresh allocs
+                self.blocks.release(bid)
+            raise
         self.tickets[slot] = self._next_ticket
         self._next_ticket += 1
         self.lengths[slot] = length
@@ -357,26 +457,41 @@ class PagedKVPoolManager:
         """Account ``n`` decoded tokens for ``slot`` (``token`` is the
         id whose KV the decode step just wrote — it extends the slot's
         token list so release can publish generated blocks).  Allocates
-        the next block when the write position crosses into it."""
+        the next block when the write position crosses into it.
+
+        Atomic: fresh blocks are secured *before* any accounting
+        mutates, so a :class:`~repro.serve.paging.PoolExhausted` (real
+        or injected) leaves the slot exactly as it was — the engine
+        preempts the stream and it resumes cleanly later."""
+        need = min((int(self.positions[slot]) + n) // self.block_size + 1,
+                   self.blocks_per_slot)
+        fresh: list[int] = []
+        try:
+            if (len(self.tables[slot]) < need
+                    and self.faults.fire("pool_alloc")):
+                raise PoolExhausted("injected: pool_alloc (decode grow)")
+            while len(self.tables[slot]) + len(fresh) < need:
+                fresh.append(self.blocks.alloc())
+        except PoolExhausted:
+            for bid in fresh:
+                self.blocks.release(bid)
+            raise
         if token is not None:
             self.tokens[slot].append(int(token))
         self.positions[slot] += n
         self.lengths[slot] += n
-        need = min(int(self.positions[slot]) // self.block_size + 1,
-                   self.blocks_per_slot)
-        grew = False
-        while len(self.tables[slot]) < need:
-            self.tables[slot].append(self.blocks.alloc())
-            grew = True
-        if grew:
+        if fresh:
+            self.tables[slot].extend(fresh)
             self._push_table(slot)
 
-    def release(self, slot: int) -> None:
+    def release(self, slot: int, publish: bool = True) -> None:
         """Free ``slot``: publish its full token blocks to the radix
         (prompt AND generated — a preempted request readmits onto its
         own blocks), drop every block reference, and point the device
-        table row back at the dummy block."""
-        if self.positions[slot] > 0:      # KV actually landed
+        table row back at the dummy block.  ``publish=False`` skips the
+        radix registration — quarantined streams must never donate a
+        (possibly poisoned) cache to future prompts."""
+        if publish and self.positions[slot] > 0:  # KV actually landed
             n_full = int(self.positions[slot]) // self.block_size
             n_full = min(n_full, len(self.tables[slot]))
             if n_full:
@@ -392,6 +507,77 @@ class PagedKVPoolManager:
         self.lengths[slot] = 0
         self.positions[slot] = 0
         self._push_table(slot)
+
+    # -- invariants ---------------------------------------------------------
+
+    def check_integrity(self) -> bool:
+        """Cross-validate every paged-pool invariant; raises
+        :class:`IntegrityError` on violation, returns True when all
+        hold.
+
+        * refcounts: ``blocks.ref[b]`` equals the number of block-table
+          entries referencing ``b`` (every table entry holds exactly
+          one reference — matched-retained or freshly allocated);
+        * state partition: free, cold, and referenced block sets are
+          disjoint and cover the pool; free blocks are unreferenced and
+          not radix-registered; cold blocks are unreferenced AND
+          registered;
+        * byte accounting: ``used_bytes()`` equals the recomputed
+          referenced-block count times ``bytes_per_block``;
+        * slot state: free slots hold no table/tokens/length; occupied
+          slots' shared-prefix count and token lists are in bounds.
+        """
+        errs: list[str] = []
+        table_refs = [0] * self.num_blocks
+        for s in range(self.slots):
+            if self.tickets[s] < 0:
+                if (self.tables[s] or self.tokens[s] or self.lengths[s]
+                        or self.positions[s] or self._shared[s]):
+                    errs.append(f"free slot {s} holds state")
+                continue
+            if self._shared[s] > len(self.tables[s]):
+                errs.append(
+                    f"slot {s} shared count {self._shared[s]} exceeds "
+                    f"table length {len(self.tables[s])}")
+            if len(self.tokens[s]) > self.max_seq:
+                errs.append(f"slot {s} token list overflows max_seq")
+            for bid in self.tables[s]:
+                if not 0 <= bid < self.num_blocks:
+                    errs.append(f"slot {s} references bad block {bid}")
+                else:
+                    table_refs[bid] += 1
+        if table_refs != self.blocks.ref:
+            diff = [b for b in range(self.num_blocks)
+                    if table_refs[b] != self.blocks.ref[b]]
+            errs.append(
+                f"refcount mismatch on blocks {diff[:8]}: tables say "
+                f"{[table_refs[b] for b in diff[:8]]}, pool says "
+                f"{[self.blocks.ref[b] for b in diff[:8]]}")
+        free = set(self.blocks.free)
+        cold = set(self.blocks.cold)
+        referenced = {b for b in range(self.num_blocks)
+                      if self.blocks.ref[b] > 0}
+        if len(free) != len(self.blocks.free):
+            errs.append("duplicate entries on the free list")
+        if free & cold:
+            errs.append(f"free/cold overlap: {sorted(free & cold)[:8]}")
+        if (free | cold | referenced) != set(range(self.num_blocks)) \
+                or (free & referenced) or (cold & referenced):
+            errs.append("free/cold/referenced do not partition the pool")
+        for b in free:
+            if b in self.blocks.radix:
+                errs.append(f"free block {b} still radix-registered")
+        for b in cold:
+            if b not in self.blocks.radix:
+                errs.append(f"cold block {b} not radix-registered")
+        recomputed = len(referenced) * self.bytes_per_block
+        if recomputed != self.used_bytes():
+            errs.append(
+                f"used_bytes {self.used_bytes()} != referenced-block "
+                f"recomputation {recomputed}")
+        if errs:
+            raise IntegrityError("; ".join(errs))
+        return True
 
     # -- byte budget --------------------------------------------------------
 
@@ -631,6 +817,12 @@ class PagedKVPoolManager:
         self.positions[slot] = length
         self.lengths[slot] = length
         self._push_table(slot)
+        if self.kv_quantize and table and self.faults.fire("block_scale"):
+            # corrupt the first block this stream *owns* (not a
+            # radix-adopted share) — the watchdog must quarantine this
+            # stream, with minimal collateral on its prefix twins
+            own = min(self._shared[slot], len(table) - 1)
+            self.cache = _corrupt_scale_leaf(self.cache, table[own])
 
     # -- stats (bench / tests) ----------------------------------------------
 

@@ -29,11 +29,15 @@ K/V prefix and the pool quantizes once at slot insert.
 """
 from __future__ import annotations
 
+import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serve import guard
+from repro.serve.faults import NULL_INJECTOR
 
 PyTree = Any
 
@@ -42,12 +46,16 @@ SEG_KINDS = ("decode", "prefill_chunk", "prefill")
 
 class ModelRunner:
     def __init__(self, model, params: PyTree, opts, *, max_seq: int,
-                 kv_quantize: str | None = None, paged=None):
+                 kv_quantize: str | None = None, paged=None,
+                 faults=None):
         self.model = model
         self.params = params
         self.opts = opts
         self.max_seq = max_seq
         self.kv_quantize = kv_quantize
+        #: fault source for the `nan_logits` / `slow_step` points
+        #: (inert by default)
+        self.faults = faults if faults is not None else NULL_INJECTOR
         #: plan of the shared pool (slot or, given a PagedGeometry,
         #: block-table paged) and of blocking-admission staging
         self.pool_plan = model.cache_plan(kv_quantize, paged=paged)
@@ -69,20 +77,19 @@ class ModelRunner:
             return mdl.decode_step(params, tokens, positions, cache,
                                    cache_plan=self.pool_plan, opts=opts)
 
-        def _sample_all(key, logits, temps):
-            """One device call samples every slot: greedy argmax rows and
-            temperature rows resolve together; the host indexes the
-            result (no per-slot round-trips on the decode hot path)."""
-            greedy = jnp.argmax(logits, axis=-1)
-            safe = jnp.where(temps > 0, temps, 1.0)
-            sampled = jax.random.categorical(key, logits / safe[:, None],
-                                             axis=-1)
-            return jnp.where(temps > 0, sampled, greedy)
-
         self.jit_prefill = jax.jit(_prefill)
         self.jit_prefill_chunk = jax.jit(_prefill_chunk,
                                          donate_argnums=(2,))
         self.jit_decode = jax.jit(_decode)
+        def _sample_all(key, logits, temps):
+            """One device call samples every slot AND runs the
+            numerical watchdog (per-row non-finite flags fused into the
+            same computation — see :mod:`repro.serve.guard`); the host
+            indexes the result, no per-slot round-trips and no extra
+            sync for the flags.  A per-runner closure so each engine's
+            trace cache stays its own."""
+            return guard.sample_and_flag(key, logits, temps)
+
         self.jit_sample_all = jax.jit(_sample_all)
 
     def new_stream_cache(self, kv_quantize: str | None = None) -> PyTree:
@@ -102,18 +109,50 @@ class ModelRunner:
              batch: dict | None = None) -> tuple[jax.Array, PyTree]:
         """Run one compiled segment.  Returns ``(logits, new_cache)``."""
         if seg_kind == "decode":
-            return self.jit_decode(self.params, tokens, positions, cache)
-        if seg_kind == "prefill_chunk":
-            return self.jit_prefill_chunk(self.params, {"tokens": tokens},
-                                          cache, start_pos, prompt_len)
-        if seg_kind == "prefill":
-            return self.jit_prefill(self.params,
-                                    batch or {"tokens": tokens},
-                                    cache, last_pos)
-        raise ValueError(
-            f"unknown seg_kind {seg_kind!r} (want one of {SEG_KINDS})")
+            out = self.jit_decode(self.params, tokens, positions, cache)
+        elif seg_kind == "prefill_chunk":
+            out = self.jit_prefill_chunk(self.params, {"tokens": tokens},
+                                         cache, start_pos, prompt_len)
+        elif seg_kind == "prefill":
+            out = self.jit_prefill(self.params,
+                                   batch or {"tokens": tokens},
+                                   cache, last_pos)
+        else:
+            raise ValueError(
+                f"unknown seg_kind {seg_kind!r} (want one of {SEG_KINDS})")
+        if self.faults.active:
+            out = self._inject(out, seg_kind)
+        return out
+
+    def _inject(self, out: tuple[jax.Array, PyTree],
+                seg_kind: str) -> tuple[jax.Array, PyTree]:
+        """Post-dispatch fault hooks: ``slow_step`` stalls the step
+        wall-clock (straggler detection); ``nan_logits`` poisons the
+        logits the model just produced (one slot row on decode —
+        ``params={"nan_logits": {"slot": i}}`` — the whole segment on
+        prefill paths).  A ``seg`` param restricts which segment kinds
+        are even *consulted*, so schedule indices count only matching
+        calls ("poison decode call #3")."""
+        if self.faults.fire("slow_step"):
+            time.sleep(float(self.faults.param("slow_step", "seconds",
+                                               0.05)))
+        seg = self.faults.param("nan_logits", "seg", None)
+        if seg is not None and seg_kind != seg:
+            return out
+        if self.faults.fire("nan_logits"):
+            logits, cache = out
+            if seg_kind == "decode":
+                row = int(self.faults.param("nan_logits", "slot", 0))
+                logits = logits.at[row].set(jnp.nan)
+            else:
+                logits = jnp.full_like(logits, jnp.nan)
+            out = (logits, cache)
+        return out
 
     def sample(self, key: jax.Array, logits: jax.Array,
-               temps: jax.Array) -> np.ndarray:
-        """Batched greedy/temperature sampling; host-side token array."""
-        return np.asarray(self.jit_sample_all(key, logits, temps))
+               temps: jax.Array) -> tuple[np.ndarray, np.ndarray]:
+        """Batched greedy/temperature sampling with the fused watchdog;
+        host-side ``(tokens, bad)`` arrays — ``bad[i]`` flags slot
+        ``i``'s logits as non-finite (the engine quarantines it)."""
+        toks, bad = self.jit_sample_all(key, logits, temps)
+        return np.asarray(toks), np.asarray(bad)

@@ -36,11 +36,26 @@ import dataclasses
 from collections import deque
 from typing import Any
 
+from repro.serve.paging import PoolExhausted
+
 PyTree = Any
 
 #: admission pads prompts (and prefill chunks) up to at least this
 #: power-of-2 length bucket
 PREFILL_BUCKET_MIN = 8
+
+#: terminal request states.  Every request that leaves the engine
+#: carries exactly one of these in :attr:`Request.status`:
+#:
+#: * ``finished`` — ran to EOS / ``max_new_tokens``;
+#: * ``cancelled`` — :meth:`repro.serve.engine.ServeEngine.cancel`;
+#: * ``deadline_exceeded`` — ``deadline_s`` / ``max_queue_s`` expired;
+#: * ``failed`` — quarantined by the numerical watchdog, or swept by
+#:   the no-progress watchdog;
+#: * ``dropped`` — preemption-retry budget spent (``max_preemptions``
+#:   evictions) — terminated instead of thrashing the pool forever.
+STATUSES = ("finished", "cancelled", "deadline_exceeded", "failed",
+            "dropped")
 
 
 @dataclasses.dataclass
@@ -50,9 +65,20 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0
     eos_id: int | None = None
+    #: wall-clock SLO: seconds from submit to completion; expired
+    #: requests terminate ``deadline_exceeded`` wherever they are
+    #: (waiting, prefilling, or decoding)
+    deadline_s: float | None = None
+    #: max seconds a request may sit *unadmitted* in the waiting queue
+    max_queue_s: float | None = None
+    #: preemption-retry budget: one more eviction than this terminates
+    #: the request ``dropped``
+    max_preemptions: int = 8
     # filled by the engine:
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    #: one of :data:`STATUSES` once terminal, else ``None``
+    status: str | None = None
     # timing / lifecycle bookkeeping (engine-filled):
     submit_time: float | None = None
     first_token_time: float | None = None
@@ -95,11 +121,29 @@ class Scheduler:
         self.active: list[Request | None] = [None] * slots
         self.finished: list[Request] = []
         self.preemptions = 0
+        #: admissions refused for capacity (byte budget or a real
+        #: :class:`~repro.serve.paging.PoolExhausted`) — one of the two
+        #: pressure signals the load shedder watches
+        self.admit_failures = 0
 
     # -- lifecycle ----------------------------------------------------------
 
     def submit(self, req: Request) -> None:
         self.waiting.append(req)
+
+    def terminal(self, req: Request, status: str) -> Request:
+        """Move ``req`` to its terminal state: stamp ``status``, mark
+        done, record in ``finished``.  The single exit point every path
+        (finish, cancel, deadline, quarantine, drop) funnels through —
+        no request leaves the engine without an explicit status."""
+        if status not in STATUSES:
+            raise ValueError(
+                f"unknown terminal status {status!r} "
+                f"(want one of {STATUSES})")
+        req.status = status
+        req.done = True
+        self.finished.append(req)
+        return req
 
     def busy(self) -> bool:
         return bool(self.waiting or self.prefilling
@@ -110,7 +154,12 @@ class Scheduler:
 
     def admit(self, pool) -> list[PrefillStream]:
         """Move waiting requests into free slots while the byte budget
-        allows (FIFO — the head blocks rather than being skipped)."""
+        allows (FIFO — the head blocks rather than being skipped).
+        Capacity refusals — ``can_admit`` saying no, or ``allocate``
+        itself raising :class:`~repro.serve.paging.PoolExhausted` (the
+        radix-informed feasibility check is optimistic about shared
+        blocks) — count into ``admit_failures`` and leave the request
+        queued at the head; it retries next step."""
         started: list[PrefillStream] = []
         for slot in pool.free_slots():
             if not self.waiting:
@@ -120,13 +169,18 @@ class Scheduler:
             # plus everything it already generated
             toks = list(req.prompt) + list(req.output)
             if not pool.can_admit(len(toks), tokens=toks):
+                self.admit_failures += 1
                 break
-            self.waiting.popleft()
             # a paged pool prefix-matches the prompt against its radix
             # cache: `matched` leading tokens are already pooled, so the
             # stream starts with them written (the engine gathers their
             # KV into the staging cache before the first chunk)
-            matched = pool.allocate(slot, len(toks), tokens=toks)
+            try:
+                matched = pool.allocate(slot, len(toks), tokens=toks)
+            except PoolExhausted:
+                self.admit_failures += 1
+                break
+            self.waiting.popleft()
             ps = PrefillStream(req, slot, toks, written=matched)
             self.prefilling.append(ps)
             started.append(ps)
@@ -138,14 +192,30 @@ class Scheduler:
 
     def finish(self, slot: int) -> Request:
         req = self.active[slot]
-        req.done = True
-        self.finished.append(req)
+        self.terminal(req, "finished")
         self.active[slot] = None
         return req
 
+    def quarantine(self, slot: int) -> Request:
+        """Terminate the stream in ``slot`` (decode-live or
+        mid-prefill) as ``failed`` — the numerical watchdog flagged its
+        logits.  The caller reclaims the pool slot (with
+        ``publish=False``: a poisoned cache must never enter the shared
+        radix)."""
+        req = self.active[slot]
+        if req is not None:
+            self.active[slot] = None
+        else:
+            ps = next(p for p in self.prefilling if p.slot == slot)
+            self.prefilling.remove(ps)
+            req = ps.req
+        return self.terminal(req, "failed")
+
     def preempt(self, slot: int) -> Request:
-        """Evict the stream in ``slot`` (decode-live or mid-prefill) and
-        requeue it at the queue head with its generated prefix."""
+        """Evict the stream in ``slot`` (decode-live or mid-prefill).
+        Within its retry budget it requeues at the queue head with its
+        generated prefix; past the budget it terminates ``dropped``
+        (bounded work per request — no preemption thrashing)."""
         req = self.active[slot]
         if req is not None:
             self.active[slot] = None
@@ -155,7 +225,10 @@ class Scheduler:
             req = ps.req
         req.preemptions += 1
         self.preemptions += 1
-        self.waiting.appendleft(req)
+        if req.preemptions > req.max_preemptions:
+            self.terminal(req, "dropped")
+        else:
+            self.waiting.appendleft(req)
         return req
 
     # -- per-step planning --------------------------------------------------
@@ -183,3 +256,76 @@ class Scheduler:
             plan.append((ps, c))
             quota -= c
         return plan
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DegradationPolicy:
+    """Watermarks for the :class:`LoadShedder` hysteresis.
+
+    Pressure events (a preemption or an admission failure in a step)
+    are counted over a rolling ``window`` of steps.  At or above
+    ``engage * window`` events the shedder engages; it only disengages
+    once the count falls to ``disengage * window`` or below AND at
+    least ``min_engaged_steps`` have passed — the dead band plus the
+    minimum dwell prevents flapping at the watermark.
+    """
+    window: int = 16
+    engage: float = 0.5
+    disengage: float = 0.0625          # <= 1 event left in the window
+    #: engaged ``step_token_budget`` multiplier (less prefill per step
+    #: -> fewer concurrent residents -> pool pressure drains)
+    budget_factor: float = 0.5
+    min_engaged_steps: int = 8
+
+
+class LoadShedder:
+    """Pressure-watching hysteresis switch over the step loop.
+
+    One :meth:`observe` call per engine step with that step's pressure
+    bit.  While engaged, the engine (a) runs with ``budget`` — a shrunk
+    ``step_token_budget`` — and (b) pauses admission whenever work is
+    already in flight (never when the engine is idle: an empty engine
+    must always be allowed to start, so shedding can never deadlock the
+    queue).  Recovery is automatic when pressure clears.
+    """
+
+    def __init__(self, policy: DegradationPolicy, base_budget: int):
+        self.policy = policy
+        self.base_budget = base_budget
+        self.events: deque[int] = deque(maxlen=policy.window)
+        self.engaged = False
+        self.engaged_steps = 0
+        self.engage_count = 0
+        self.recover_count = 0
+
+    @property
+    def pressure_events(self) -> int:
+        return sum(self.events)
+
+    def observe(self, pressure: bool) -> bool:
+        """Record one step's pressure bit; returns the (possibly
+        toggled) engaged state."""
+        self.events.append(1 if pressure else 0)
+        p = self.policy
+        if self.engaged:
+            self.engaged_steps += 1
+            if (self.engaged_steps >= p.min_engaged_steps
+                    and self.pressure_events <= p.disengage * p.window):
+                self.engaged = False
+                self.recover_count += 1
+        elif self.pressure_events >= p.engage * p.window:
+            self.engaged = True
+            self.engaged_steps = 0
+            self.engage_count += 1
+        return self.engaged
+
+    @property
+    def budget(self) -> int:
+        """The step token budget to run with right now."""
+        if self.engaged:
+            return max(1, int(self.base_budget * self.policy.budget_factor))
+        return self.base_budget
