@@ -19,7 +19,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table3,rank,branch,lm,kernels,"
                          "quant,branched_quant,serve_decode,serve_mla,"
-                         "serve_sched,serve_paged,serve_faults,frontier")
+                         "serve_sched,serve_paged,serve_faults,"
+                         "serve_prefill,frontier")
     ap.add_argument("--list", action="store_true",
                     help="print registered benchmark names and exit")
     args = ap.parse_args()
@@ -44,6 +45,7 @@ def main() -> None:
         "serve_sched": bench_serve_decode.run_sched,
         "serve_paged": bench_serve_decode.run_paged,
         "serve_faults": bench_serve_decode.run_faults,
+        "serve_prefill": bench_serve_decode.run_prefill,
         "frontier": bench_frontier.run,
     }
     if args.list:

@@ -19,6 +19,19 @@ class HardwareSpec:
     mxu_dim: int                # systolic array tile (lanes)
     sublanes: int               # VREG sublane granularity
     vmem_bytes: float           # per-core VMEM
+    int8_mxu_mult: float = 2.0  # int8 x int8 issue rate vs bf16/f32
+
+    def peak_flops(self, operand_bytes: int = 2) -> float:
+        """MXU FLOP/s at the *widest* operand width feeding the dot.
+
+        int8 x int8 (both operands 1 byte) issues at ``int8_mxu_mult``
+        times the bf16 rate; anything wider — including int8 weights
+        dequantized in VMEM against full-width activations — runs at
+        the base rate.
+        """
+        if operand_bytes <= 1:
+            return self.peak_flops_bf16 * self.int8_mxu_mult
+        return self.peak_flops_bf16
 
 
 # Per the assignment prompt: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.

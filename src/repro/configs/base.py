@@ -249,6 +249,12 @@ class LRDConfig:
     # scales on MLA stacks (cache family gqa_int8 / mla_latent_int8 of
     # repro/layers/cache), read by the fused decode-attention kernels.
     kv_quantize: str = "none"         # "none" | "int8"
+    # Dynamic activation quantization for the prefill matmul path
+    # (kernels/*_qa): per-token absmax int8 activation rows so the
+    # fully-int8 factor plans run int8 x int8 on the MXU.  Engages on
+    # prefill / chunked-prefill segments only — decode's M = batch dots
+    # stay at full activation width.  Requires quantize="int8".
+    act_quantize: str = "none"        # "none" | "int8"
     # Continuous-batching serve stack (repro/serve): tokens of prompt
     # processed per chunked-prefill segment, and the per-step token
     # budget the scheduler fills decode-first, then with prefill chunk

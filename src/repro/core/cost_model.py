@@ -73,6 +73,7 @@ def branched_layer_time(m: int, c: int, s: int, r1: int, r2: int,
 
 
 def plan_layer_time(plan, m: int, *, act_bytes: int = 2, kv_bytes: int = 0,
+                    act_quantize: bool = False,
                     spec: HardwareSpec = DEFAULT) -> float:
     """Modelled seconds for one :class:`repro.layers.plan.LinearPlan` at
     ``m`` tokens (rows / output pixels) — the plan-driven, quant-aware
@@ -80,12 +81,18 @@ def plan_layer_time(plan, m: int, *, act_bytes: int = 2, kv_bytes: int = 0,
 
     Compute walks the plan's matmul chain on MXU-padded dims, scaled by
     each factor's ``chain_density()`` (2:4 factors run at half rate on
-    sparsity-capable MXUs); memory streams the activations at
-    ``act_bytes`` plus the plan's ``weight_bytes`` — which is where
-    int8/fp8 factors pay off: a quantized plan moves half the weight
-    bytes of its bf16 twin, so the memory-bound decode term drops while
-    compute is unchanged, and a 2:4-packed plan halves the int8 value
-    bytes again.
+    sparsity-capable MXUs) and costed at a *dtype-aware* MXU rate
+    (``spec.peak_flops``): a dot whose weight operand is a plain-int8
+    factor AND whose activation side is quantized (``act_quantize`` —
+    the prefill qa kernels) issues int8 x int8 at ~2x the bf16 rate;
+    int8 weights dequantized in VMEM against full-width activations run
+    at the base rate (the MXU sees wide operands either way).  Memory
+    streams the activations at ``act_bytes`` (halved-ish under
+    ``act_quantize``: int8 values + one f32 scale per row) plus the
+    plan's ``weight_bytes`` — which is where int8/fp8 factors pay off:
+    a quantized plan moves half the weight bytes of its bf16 twin, so
+    the memory-bound decode term drops, and a 2:4-packed plan halves
+    the int8 value bytes again.
 
     ``kv_bytes`` adds a runtime stream to the same memory term: the KV
     pool bytes this layer reads per step (decode attention streams the
@@ -95,17 +102,42 @@ def plan_layer_time(plan, m: int, *, act_bytes: int = 2, kv_bytes: int = 0,
     costed by the same source of truth the serve pool uses.  At
     serve-time batch sizes the decode roofline is memory-bound on
     exactly these two streams, so the model predicts the KV-quant win
-    the serve benchmark then measures.
+    the serve benchmark then measures; at prefill batch sizes it is
+    compute-bound and predicts the int8 x int8 throughput win.
     """
     mp = mxu_padded(m, spec)
+    qa = plan_qa_eligible(plan, act_quantize)
+    rate = spec.peak_flops(1 if qa else act_bytes)
     flops = sum(2.0 * mult * mp * mxu_padded(k, spec) * mxu_padded(n, spec)
                 * density
                 for (mult, k, n), density in zip(plan.matmul_chain(),
                                                  plan.chain_density()))
-    compute = flops / spec.peak_flops_bf16
-    memory = (act_bytes * m * (plan.d_in + plan.d_out)
+    compute = flops / rate
+    memory = (plan_act_stream_bytes(plan, act_bytes=act_bytes,
+                                    act_quantize=act_quantize) * m
               + plan.weight_bytes + kv_bytes) / spec.hbm_bandwidth
     return max(compute, memory)
+
+
+def plan_qa_eligible(plan, act_quantize: bool = True) -> bool:
+    """qa dispatch mirror (LinearPlan.kernel_for): every factor plain
+    int8 — then the whole chain runs int8 x int8 and the activation
+    stream narrows to int8 values + one f32 scale per token row."""
+    return act_quantize and all(
+        f.quantized and f.sparsity is None
+        and jnp.dtype(f.dtype).itemsize == 1 for f in plan.chain_factors())
+
+
+def plan_act_stream_bytes(plan, *, act_bytes: int = 2,
+                          act_quantize: bool = False) -> float:
+    """Per-token activation HBM bytes of one plan's linear — input plus
+    output rows at ``act_bytes``, narrowed to int8 values + one f32
+    row scale when the qa kernels take the layer.  Shared by
+    :func:`plan_layer_time` and the prefill benchmark's byte
+    accounting so the model and the report can't drift apart."""
+    if plan_qa_eligible(plan, act_quantize):
+        act_bytes = 1 + 4.0 / max(1, plan.d_in)
+    return act_bytes * (plan.d_in + plan.d_out)
 
 
 def plan_kv_bytes(cache_plan, slots: int, seq_len: int) -> int:

@@ -18,11 +18,13 @@ import jax.numpy as jnp
 
 from repro.kernels import branched_matmul as bk
 from repro.kernels import branched_matmul_q as bqk
+from repro.kernels import branched_matmul_qa as bak
 from repro.kernels import branched_matmul_sq as bsk
 from repro.kernels import decode_attention_paged as dap
 from repro.kernels import decode_attention_q as dak
 from repro.kernels import lowrank_matmul as lk
 from repro.kernels import lowrank_matmul_q as qk
+from repro.kernels import lowrank_matmul_qa as aqk
 from repro.kernels import lowrank_matmul_sq as sk
 from repro.kernels import ref
 
@@ -82,6 +84,10 @@ def kernel_fits(kernel: str, m: int, *, c: int, s: int, r: int = 0,
         return qk.vmem_bytes(_bm_eff(bm or qk.DEFAULT_BM, m), c, r,
                              bn or qk.DEFAULT_BN,
                              q_bytes=q_bytes) <= VMEM_BUDGET
+    if kernel == "lowrank_qa":
+        return aqk.vmem_bytes(_bm_eff(bm or aqk.DEFAULT_BM, m), c, r,
+                              bn or aqk.DEFAULT_BN,
+                              q_bytes=q_bytes) <= VMEM_BUDGET
     if kernel == "lowrank_sq":
         return sk.vmem_bytes(_bm_eff(bm or sk.DEFAULT_BM, m), c, r,
                              bn or sk.DEFAULT_BN,
@@ -92,6 +98,10 @@ def kernel_fits(kernel: str, m: int, *, c: int, s: int, r: int = 0,
     if kernel == "branched_q":
         return bqk.vmem_bytes(_bm_eff(bm or bqk.DEFAULT_BM, m), c, r1, r2,
                               bn or bqk.DEFAULT_BN,
+                              q_bytes=q_bytes) <= VMEM_BUDGET
+    if kernel == "branched_qa":
+        return bak.vmem_bytes(_bm_eff(bm or bak.DEFAULT_BM, m), c, r1, r2,
+                              bn or bak.DEFAULT_BN,
                               q_bytes=q_bytes) <= VMEM_BUDGET
     if kernel == "branched_sq":
         return bsk.vmem_bytes(_bm_eff(bm or bsk.DEFAULT_BM, m), c, r1, r2,
@@ -164,6 +174,38 @@ def lowrank_matmul_q(x: jax.Array, w0_q: jax.Array, w0_scale: jax.Array,
     y = qk.lowrank_matmul_q(x2, w0_q, w0_scale, w1p, w1sp,
                             bm=bm_eff, bn=min(bn, w1p.shape[1]),
                             interpret=not _on_tpu())
+    if pad_m:
+        y = y[:m]
+    if pad_s:
+        y = y[:, :s]
+    return y.reshape(*lead, s)
+
+
+def lowrank_matmul_qa(x: jax.Array, w0_q: jax.Array, w0_scale: jax.Array,
+                      w1_q: jax.Array, w1_scale: jax.Array, *,
+                      bm: int = aqk.DEFAULT_BM, bn: int = aqk.DEFAULT_BN,
+                      force_kernel: bool = False) -> jax.Array:
+    """y = dq(q(x) @ w0_q) -> requant -> dq(h_q @ w1_q) with the fused
+    activation-quantized kernel — both dots int8 x int8 on the MXU,
+    per-token act scales folded with the per-channel weight scales."""
+    lead = x.shape[:-1]
+    c = x.shape[-1]
+    r, s = w1_q.shape
+    x2 = x.reshape(-1, c)
+    m = x2.shape[0]
+    bm_eff = _bm_eff(bm, m)
+    q_bytes = jnp.dtype(w0_q.dtype).itemsize
+    if not (force_kernel or kernel_fits("lowrank_qa", m, c=c, r=r, s=s,
+                                        q_bytes=q_bytes, bm=bm,
+                                        bn=bn)):
+        return ref.lowrank_matmul_qa_ref(x2, w0_q, w0_scale, w1_q,
+                                         w1_scale).reshape(*lead, s)
+    x2, pad_m = _pad_to(x2, 0, bm_eff)     # zero rows -> zero act scales
+    w1p, pad_s = _pad_to(w1_q, 1, bn)
+    w1sp, _ = _pad_to(w1_scale, 1, bn)     # zero scales -> zero columns
+    y = aqk.lowrank_matmul_qa(x2, w0_q, w0_scale, w1p, w1sp,
+                              bm=bm_eff, bn=min(bn, w1p.shape[1]),
+                              interpret=not _on_tpu())
     if pad_m:
         y = y[:m]
     if pad_s:
@@ -260,6 +302,42 @@ def branched_matmul_q(x: jax.Array, u_q: jax.Array, u_scale: jax.Array,
     y = bqk.branched_matmul_q(x2, u_q, u_scale, xc_q, xc_scale, vp, vsp,
                               bm=bm_eff, bn=min(bn, vp.shape[2]),
                               interpret=not _on_tpu())
+    if pad_m:
+        y = y[:m]
+    if pad_s:
+        y = y[:, :s]
+    return y.reshape(*lead, s)
+
+
+def branched_matmul_qa(x: jax.Array, u_q: jax.Array, u_scale: jax.Array,
+                       xc_q: jax.Array, xc_scale: jax.Array,
+                       v_q: jax.Array, v_scale: jax.Array, *,
+                       bm: int = bak.DEFAULT_BM, bn: int = bak.DEFAULT_BN,
+                       force_kernel: bool = False) -> jax.Array:
+    """y = sum_n of the all-int8 branch chains with the fused
+    activation-quantized branched kernel — activations quantize once
+    per row block, every branch dot runs int8 x int8, branch sum in the
+    f32 scratch accumulator."""
+    lead = x.shape[:-1]
+    c = x.shape[-1]
+    n, _, r1 = u_q.shape
+    _, _, r2 = xc_q.shape
+    s = v_q.shape[-1]
+    x2 = x.reshape(-1, c)
+    m = x2.shape[0]
+    bm_eff = _bm_eff(bm, m)
+    q_bytes = jnp.dtype(u_q.dtype).itemsize
+    if not (force_kernel or kernel_fits("branched_qa", m, c=c, r1=r1,
+                                        r2=r2, s=s, q_bytes=q_bytes,
+                                        bm=bm, bn=bn)):
+        return ref.branched_matmul_qa_ref(x2, u_q, u_scale, xc_q, xc_scale,
+                                          v_q, v_scale).reshape(*lead, s)
+    x2, pad_m = _pad_to(x2, 0, bm_eff)     # zero rows -> zero act scales
+    vp, pad_s = _pad_to(v_q, 2, bn)
+    vsp, _ = _pad_to(v_scale, 2, bn)       # zero scales -> zero columns
+    y = bak.branched_matmul_qa(x2, u_q, u_scale, xc_q, xc_scale, vp, vsp,
+                               bm=bm_eff, bn=min(bn, vp.shape[2]),
+                               interpret=not _on_tpu())
     if pad_m:
         y = y[:m]
     if pad_s:

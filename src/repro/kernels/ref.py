@@ -28,6 +28,55 @@ def lowrank_matmul_q_ref(x: jax.Array, w0_q: jax.Array, w0_scale: jax.Array,
     return lowrank_matmul_ref(x, w0, w1, accum_dtype)
 
 
+def lowrank_matmul_qa_ref(x: jax.Array, w0_q: jax.Array,
+                          w0_scale: jax.Array, w1_q: jax.Array,
+                          w1_scale: jax.Array) -> jax.Array:
+    """Exact-math oracle for the activation-quantized fused kernel.
+
+    Replicates the kernel's arithmetic step by step — per-token absmax
+    quantization of the activation rows, int8 x int8 dots with int32
+    accumulation, scale folding after each dot, and the per-row int8
+    requantization of the rank intermediate — rather than dequantizing
+    and reusing the float chain, so kernel parity is tight (interpret
+    mode matches to float rounding, not to quantization error).
+    """
+    from repro.kernels.lowrank_matmul_qa import quantize_rows
+    xq, xs = quantize_rows(x)
+    h = (jnp.matmul(xq, w0_q, preferred_element_type=jnp.int32)
+         .astype(jnp.float32) * xs * w0_scale)
+    hq, hs = quantize_rows(h)
+    y = (jnp.matmul(hq, w1_q, preferred_element_type=jnp.int32)
+         .astype(jnp.float32) * hs * w1_scale)
+    return y.astype(x.dtype)
+
+
+def branched_matmul_qa_ref(x: jax.Array, u_q: jax.Array,
+                           u_scale: jax.Array, xc_q: jax.Array,
+                           xc_scale: jax.Array, v_q: jax.Array,
+                           v_scale: jax.Array) -> jax.Array:
+    """Exact-math oracle for the activation-quantized branched kernel.
+
+    Same discipline as :func:`lowrank_matmul_qa_ref`, per branch: the
+    activation rows quantize once, each branch's three int8 x int8 dots
+    fold their row x channel scale products, both rank intermediates
+    requantize per-row, and the f32 branch contributions sum at the end.
+    """
+    from repro.kernels.lowrank_matmul_qa import quantize_rows
+    xq, xs = quantize_rows(x)
+    n = u_q.shape[0]
+    y = jnp.zeros((x.shape[0], v_q.shape[-1]), jnp.float32)
+    for i in range(n):
+        h1 = (jnp.matmul(xq, u_q[i], preferred_element_type=jnp.int32)
+              .astype(jnp.float32) * xs * u_scale[i])
+        h1q, h1s = quantize_rows(h1)
+        h2 = (jnp.matmul(h1q, xc_q[i], preferred_element_type=jnp.int32)
+              .astype(jnp.float32) * h1s * xc_scale[i])
+        h2q, h2s = quantize_rows(h2)
+        y = y + (jnp.matmul(h2q, v_q[i], preferred_element_type=jnp.int32)
+                 .astype(jnp.float32) * h2s * v_scale[i])
+    return y.astype(x.dtype)
+
+
 def lowrank_matmul_sq_ref(x: jax.Array, w0_sp: jax.Array, w0_idx: jax.Array,
                           w0_scale: jax.Array, w1_sp: jax.Array,
                           w1_idx: jax.Array, w1_scale: jax.Array,

@@ -51,6 +51,7 @@ class AttnOpts(NamedTuple):
     freeze_factors: bool = False
     use_pallas: bool = False
     softcap: float = 0.0
+    act_quantize: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -194,7 +195,8 @@ def apply_attention(p: dict, x: jax.Array, *, num_heads: int,
     under jit).
     """
     b, sq, _ = x.shape
-    kw = dict(freeze_factors=opts.freeze_factors, use_pallas=opts.use_pallas)
+    kw = dict(freeze_factors=opts.freeze_factors, use_pallas=opts.use_pallas,
+              act_quantize=opts.act_quantize)
     q = apply_linear(p["q"], x, **kw).reshape(b, sq, num_heads, head_dim)
     k = apply_linear(p["k"], x, **kw).reshape(b, sq, num_kv_heads, head_dim)
     v = apply_linear(p["v"], x, **kw).reshape(b, sq, num_kv_heads, head_dim)
@@ -364,7 +366,8 @@ def apply_mla(p: dict, x: jax.Array, cfg, *, positions: jax.Array,
     b, sq, _ = x.shape
     h, nope, rope_d = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
     vd = cfg.v_head_dim
-    kw = dict(freeze_factors=opts.freeze_factors, use_pallas=opts.use_pallas)
+    kw = dict(freeze_factors=opts.freeze_factors, use_pallas=opts.use_pallas,
+              act_quantize=opts.act_quantize)
     q_nope, q_rope, ckv, k_rope = _mla_qkr(p, x, cfg, positions, kw)
     scale = 1.0 / math.sqrt(nope + rope_d)
 
@@ -451,7 +454,8 @@ def cross_attn_kv(p: dict, kv_feats: jax.Array, *, num_kv_heads: int,
     """Precompute cross-attention K/V from image features (cached at
     prefill — image tokens never change during decode)."""
     b, t, _ = kv_feats.shape
-    kw = dict(freeze_factors=opts.freeze_factors, use_pallas=opts.use_pallas)
+    kw = dict(freeze_factors=opts.freeze_factors, use_pallas=opts.use_pallas,
+              act_quantize=opts.act_quantize)
     k = apply_linear(p["k"], kv_feats, **kw).reshape(b, t, num_kv_heads,
                                                      head_dim)
     v = apply_linear(p["v"], kv_feats, **kw).reshape(b, t, num_kv_heads,
@@ -465,7 +469,8 @@ def apply_cross_attention(p: dict, x: jax.Array,
                           kv: dict | None = None,
                           opts: AttnOpts = AttnOpts()) -> jax.Array:
     b, sq, _ = x.shape
-    kw = dict(freeze_factors=opts.freeze_factors, use_pallas=opts.use_pallas)
+    kw = dict(freeze_factors=opts.freeze_factors, use_pallas=opts.use_pallas,
+              act_quantize=opts.act_quantize)
     if kv is None:
         kv = cross_attn_kv(p, kv_feats, num_kv_heads=num_kv_heads,
                            head_dim=head_dim, opts=opts)

@@ -21,8 +21,10 @@ def init_mlp(pb: ParamBuilder, name: str, d_model: int, d_ff: int,
 
 def apply_mlp(p: dict, x: jax.Array, act: str = "swiglu", *,
               freeze_factors: bool = False,
-              use_pallas: bool = False) -> jax.Array:
-    kw = dict(freeze_factors=freeze_factors, use_pallas=use_pallas)
+              use_pallas: bool = False,
+              act_quantize: bool = False) -> jax.Array:
+    kw = dict(freeze_factors=freeze_factors, use_pallas=use_pallas,
+              act_quantize=act_quantize)
     up = apply_linear(p["up"], x, **kw)
     if act == "swiglu":
         gate = apply_linear(p["gate"], x, **kw)

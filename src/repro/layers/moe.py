@@ -34,6 +34,7 @@ from repro.layers.param import (
 class MoEOpts(NamedTuple):
     freeze_factors: bool = False
     use_pallas: bool = False
+    act_quantize: bool = False
 
 
 def init_moe(pb: ParamBuilder, name: str, d_model: int, d_ff: int,
@@ -220,7 +221,8 @@ def apply_moe(p: dict, x: jax.Array, *, top_k: int, capacity_factor: float,
         sh = p["shared"]
         from repro.layers.param import apply_linear
         kw = dict(freeze_factors=opts.freeze_factors,
-                  use_pallas=opts.use_pallas)
+                  use_pallas=opts.use_pallas,
+                  act_quantize=opts.act_quantize)
         up_s = apply_linear(sh["up"], xt, **kw)
         if act == "swiglu":
             g_s = apply_linear(sh["gate"], xt, **kw)

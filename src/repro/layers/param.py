@@ -111,6 +111,7 @@ def linear_kind(p: dict) -> str:
 def apply_linear(p: dict, x: jax.Array, *,
                  freeze_factors: bool = False,
                  use_pallas: bool = False,
+                 act_quantize: bool = False,
                  accum_dtype=jnp.float32) -> jax.Array:
     """Apply a (possibly decomposed) linear op to ``x`` (..., d_in).
 
@@ -118,11 +119,13 @@ def apply_linear(p: dict, x: jax.Array, *,
     (built once per subtree geometry) owns the kind classification,
     quantized-pair handling, the §2.2 freeze policy (``w0`` for SVD
     pairs; ``u``/``v`` for branched receive no gradient) and the fused
-    kernel / reference decision.
+    kernel / reference decision.  ``act_quantize`` opts into the
+    activation-quantized int8 x int8 kernels on fully-int8 plans.
     """
     from repro.layers.plan import build_plan
     return build_plan(p).execute(p, x, freeze_factors=freeze_factors,
                                  use_pallas=use_pallas,
+                                 act_quantize=act_quantize,
                                  accum_dtype=accum_dtype)
 
 

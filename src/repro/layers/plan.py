@@ -287,11 +287,16 @@ class LinearPlan:
         kh, kw, _, r2 = s["core"][-4:]
         return [(n, c, r1), (n, kh * kw * r1, r2), (n, r2, s["v"][-1])]
 
+    def chain_factors(self) -> tuple[FactorSpec, ...]:
+        """Per-matmul :class:`FactorSpec`, aligned with
+        :meth:`matmul_chain` — the weight operand of each dot."""
+        return tuple(self.factor(name)
+                     for name in _KIND_FACTORS[self.kind])
+
     def chain_density(self) -> tuple[float, ...]:
         """Per-matmul kept fraction, aligned with :meth:`matmul_chain`
         (2:4 factors feed sparsity-capable MXUs at half the FLOPs)."""
-        return tuple(self.factor(name).density
-                     for name in _KIND_FACTORS[self.kind])
+        return tuple(f.density for f in self.chain_factors())
 
     @property
     def flops_per_token(self) -> float:
@@ -303,8 +308,8 @@ class LinearPlan:
 
     # -- kernel dispatch ----------------------------------------------------
 
-    def kernel_for(self, x_shape: tuple[int, ...],
-                   use_pallas: bool) -> str | None:
+    def kernel_for(self, x_shape: tuple[int, ...], use_pallas: bool,
+                   act_quantize: bool = False) -> str | None:
         """Which fused Pallas kernel (if any) executes this plan for an
         activation of ``x_shape``.
 
@@ -312,9 +317,15 @@ class LinearPlan:
         any ``(..., d_in)`` activation is eligible — including
         decode-shaped ``(B, 1, d)`` — the fit decision runs on
         ``M = prod(leading dims)``.  Returns one of ``"lowrank"``,
-        ``"lowrank_q"``, ``"lowrank_sq"``, ``"branched"``,
-        ``"branched_q"``, ``"branched_sq"`` or ``None`` (jnp reference
-        path).
+        ``"lowrank_q"``, ``"lowrank_qa"``, ``"lowrank_sq"``,
+        ``"branched"``, ``"branched_q"``, ``"branched_qa"``,
+        ``"branched_sq"`` or ``None`` (jnp reference path).
+
+        ``act_quantize`` asks for the activation-quantized int8 x int8
+        kernels; they engage only on fully-int8 non-sparse plans (fp8
+        weights and 2:4 layouts keep their own kernels) and fall back
+        to the weight-only dispatch when ineligible — the runner sets
+        it for prefill/chunk segments, never decode.
         """
         if not use_pallas or len(x_shape) < 2:
             return None
@@ -356,6 +367,18 @@ class LinearPlan:
             return None
         q_bytes = (jnp.dtype(self.factors[0].dtype).itemsize
                    if self.fully_quantized else 1)
+        if (act_quantize and self.fully_quantized
+                and all(jnp.dtype(f.dtype) == jnp.int8
+                        for f in self.factors)):
+            if self.kind == KIND_LOWRANK:
+                if kops.kernel_fits("lowrank_qa", m, c=chain[0][1],
+                                    r=chain[0][2], s=self.d_out,
+                                    q_bytes=q_bytes):
+                    return "lowrank_qa"
+            elif kops.kernel_fits("branched_qa", m, c=chain[0][1],
+                                  r1=chain[0][2], r2=chain[1][2],
+                                  s=self.d_out, q_bytes=q_bytes):
+                return "branched_qa"
         if self.kind == KIND_LOWRANK:
             name = "lowrank_q" if self.fully_quantized else "lowrank"
             fits = kops.kernel_fits(name, m, c=chain[0][1], r=chain[0][2],
@@ -371,6 +394,7 @@ class LinearPlan:
 
     def execute(self, p: dict, x: jax.Array, *,
                 freeze_factors: bool = False, use_pallas: bool = False,
+                act_quantize: bool = False,
                 accum_dtype=jnp.float32) -> jax.Array:
         """Apply this plan's linear op to ``x`` (..., d_in).
 
@@ -385,9 +409,13 @@ class LinearPlan:
             return _matmul(x, self.value(p, "w", x.dtype,
                                          freeze=freeze_factors),
                            accum_dtype)
-        kernel = self.kernel_for(x.shape, use_pallas)
+        kernel = self.kernel_for(x.shape, use_pallas, act_quantize)
         from repro.kernels import ops as kops
         if self.kind == KIND_LOWRANK:
+            if kernel == "lowrank_qa":
+                return kops.lowrank_matmul_qa(
+                    x, p["w0_q"], p["w0_scale"], p["w1_q"], p["w1_scale"],
+                    force_kernel=True)
             if kernel == "lowrank_sq":
                 return kops.lowrank_matmul_sq(
                     x, p["w0_sp"], p["w0_idx"], p["w0_scale"],
@@ -404,6 +432,10 @@ class LinearPlan:
             h = _matmul(x, w0, accum_dtype)
             return _matmul(h, w1, accum_dtype)
         # branched: y = sum_j ((x @ u_j) @ xc_j) @ v_j   (paper Eq. 17)
+        if kernel == "branched_qa":
+            return kops.branched_matmul_qa(
+                x, p["u_q"], p["u_scale"], p["xc_q"], p["xc_scale"],
+                p["v_q"], p["v_scale"], force_kernel=True)
         if kernel == "branched_sq":
             return kops.branched_matmul_sq(
                 x, p["u_sp"], p["u_idx"], p["u_scale"],

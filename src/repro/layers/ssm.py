@@ -31,6 +31,7 @@ from repro.layers.norm import init_rms_norm, gated_rms_norm
 class SSMOpts(NamedTuple):
     freeze_factors: bool = False
     use_pallas: bool = False
+    act_quantize: bool = False
 
 
 class SSMDims(NamedTuple):
@@ -169,7 +170,8 @@ def apply_ssm(p: dict, x: jax.Array, dims: SSMDims, *,
     decode can continue the sequence.
     """
     bsz, s, _ = x.shape
-    kw = dict(freeze_factors=opts.freeze_factors, use_pallas=opts.use_pallas)
+    kw = dict(freeze_factors=opts.freeze_factors, use_pallas=opts.use_pallas,
+              act_quantize=opts.act_quantize)
     di, n, nh = dims.d_inner, dims.d_state, dims.n_heads
     zx = apply_linear(p["in_proj"], x, **kw)              # (B,S,2di)
     z, xc = jnp.split(zx, [di], axis=-1)
@@ -226,7 +228,8 @@ def apply_ssm_decode(p: dict, x: jax.Array, dims: SSMDims, state: dict, *,
     """One decode step. x (B,1,d); state {"ssm","conv_x","conv_bc"};
     O(1) in sequence length."""
     bsz = x.shape[0]
-    kw = dict(freeze_factors=opts.freeze_factors, use_pallas=opts.use_pallas)
+    kw = dict(freeze_factors=opts.freeze_factors, use_pallas=opts.use_pallas,
+              act_quantize=opts.act_quantize)
     di, n, nh = dims.d_inner, dims.d_state, dims.n_heads
     zx = apply_linear(p["in_proj"], x, **kw)
     z, xc = jnp.split(zx, [di], axis=-1)

@@ -24,19 +24,24 @@ from repro.layers.param import ParamBuilder, shard_act, BATCH, SEQ, EMBED
 class BlockOpts(NamedTuple):
     freeze_factors: bool = False
     use_pallas: bool = False
+    act_quantize: bool = False
 
     def attn(self, softcap: float = 0.0) -> attn.AttnOpts:
-        return attn.AttnOpts(self.freeze_factors, self.use_pallas, softcap)
+        return attn.AttnOpts(self.freeze_factors, self.use_pallas, softcap,
+                             self.act_quantize)
 
     def moe(self) -> MoEOpts:
-        return MoEOpts(self.freeze_factors, self.use_pallas)
+        return MoEOpts(self.freeze_factors, self.use_pallas,
+                       self.act_quantize)
 
     def ssm(self) -> ssm_mod.SSMOpts:
-        return ssm_mod.SSMOpts(self.freeze_factors, self.use_pallas)
+        return ssm_mod.SSMOpts(self.freeze_factors, self.use_pallas,
+                               self.act_quantize)
 
     def kw(self) -> dict:
         return dict(freeze_factors=self.freeze_factors,
-                    use_pallas=self.use_pallas)
+                    use_pallas=self.use_pallas,
+                    act_quantize=self.act_quantize)
 
 
 def _norm_fns(cfg):

@@ -123,6 +123,7 @@ class ServeEngine:
                  quantize: str | None = None,
                  sparsify: str | None = None,
                  kv_quantize: str | None = None,
+                 act_quantize: str | None = None,
                  admission: str | None = None,
                  prefill_chunk: int | None = None,
                  step_token_budget: int | None = None,
@@ -145,9 +146,13 @@ class ServeEngine:
         ``kv_quantize`` ("int8") stores the runtime KV pool quantized
         (:mod:`repro.quant.kv`) — the GQA K/V pool on plain attention
         stacks, the latent cache on MLA stacks (cache family
-        ``gqa_int8`` / ``mla_latent_int8``).  All default to
-        ``run.lrd``, as do ``prefill_chunk`` / ``step_token_budget``
-        (0 = engine defaults).
+        ``gqa_int8`` / ``mla_latent_int8``); ``act_quantize`` ("int8",
+        requires ``quantize="int8"``) additionally quantizes prefill
+        *activations* per-token on the fly so the fully-int8 plans run
+        int8 x int8 on the MXU (prefill/chunk segments only — decode
+        stays at full activation width).  All default to ``run.lrd``,
+        as do ``prefill_chunk`` / ``step_token_budget`` (0 = engine
+        defaults).
 
         ``admission`` is "continuous" (token-budget chunked prefill;
         default where supported) or "blocking" (one whole prefill per
@@ -206,6 +211,16 @@ class ServeEngine:
         if kv_quantize is None:
             kv_quantize = run.lrd.kv_quantize
         self.kv_quantize = None if kv_quantize == "none" else kv_quantize
+        if act_quantize is None:
+            act_quantize = getattr(run.lrd, "act_quantize", "none")
+        self.act_quantize = None if act_quantize == "none" else act_quantize
+        if self.act_quantize and self.act_quantize != "int8":
+            raise ValueError(
+                f"act_quantize {act_quantize!r} (want 'int8' or 'none')")
+        if self.act_quantize and quantize != "int8":
+            raise ValueError(
+                "act_quantize='int8' needs quantize='int8' — the qa "
+                "kernels run int8 x int8 against fully-int8 factor plans")
         self.params = params
         # Execution plans, built once at load (not per call): every
         # linear subtree's kind / quantized-pair / kernel decision is
@@ -270,6 +285,7 @@ class ServeEngine:
         self.runner = ModelRunner(self.model, params, self.opts,
                                   max_seq=max_seq,
                                   kv_quantize=self.kv_quantize,
+                                  act_quantize=self.act_quantize,
                                   paged=getattr(self.pool, "geometry",
                                                 None),
                                   faults=self.faults)

@@ -46,13 +46,14 @@ SEG_KINDS = ("decode", "prefill_chunk", "prefill")
 
 class ModelRunner:
     def __init__(self, model, params: PyTree, opts, *, max_seq: int,
-                 kv_quantize: str | None = None, paged=None,
-                 faults=None):
+                 kv_quantize: str | None = None, act_quantize: str | None = None,
+                 paged=None, faults=None):
         self.model = model
         self.params = params
         self.opts = opts
         self.max_seq = max_seq
         self.kv_quantize = kv_quantize
+        self.act_quantize = act_quantize
         #: fault source for the `nan_logits` / `slow_step` points
         #: (inert by default)
         self.faults = faults if faults is not None else NULL_INJECTOR
@@ -62,16 +63,25 @@ class ModelRunner:
         #: plan of a full-precision chunked-prefill staging cache
         self.stream_plan = model.cache_plan(None)
         mdl = model
+        # Activation quantization is a prefill-segment decision: the
+        # prefill/chunk closures run the M-large MXU-bound dots int8 x
+        # int8, decode keeps full-width activations (M = batch rows are
+        # too skinny for the throughput term and too noisy for per-row
+        # scales).  Decode always closes over the caller's opts.
+        prefill_opts = (opts._replace(act_quantize=True)
+                        if act_quantize == "int8" else opts)
+        self.prefill_opts = prefill_opts
 
         def _prefill(params, batch, cache1, last_pos):
             return mdl.prefill(params, batch, cache1, last_pos=last_pos,
-                               cache_plan=self.pool_plan, opts=opts)
+                               cache_plan=self.pool_plan, opts=prefill_opts)
 
         def _prefill_chunk(params, batch, cache1, start_pos, prompt_len):
             return mdl.prefill_chunk(params, batch, cache1,
                                      start_pos=start_pos,
                                      prompt_len=prompt_len,
-                                     cache_plan=self.stream_plan, opts=opts)
+                                     cache_plan=self.stream_plan,
+                                     opts=prefill_opts)
 
         def _decode(params, tokens, positions, cache):
             return mdl.decode_step(params, tokens, positions, cache,

@@ -1,0 +1,366 @@
+"""Activation quantization (int8 x int8 prefill): kernels, dispatch, serving.
+
+Covers the qa tentpole's acceptance surface:
+
+* ``lowrank_matmul_qa`` / ``branched_matmul_qa`` match their exact-math
+  oracles in interpret mode (<= 1e-2) and the weight-only int8 path
+  within int8 tolerance;
+* bucket-padded rows carry zero act scales — padded and unpadded
+  launches are bit-identical on the real rows;
+* when ``kernel_fits`` rejects a geometry the wrapper falls back to the
+  oracle itself, so fallback output is exactly the reference;
+* ``LinearPlan.kernel_for(act_quantize=True)`` picks the qa kernels
+  only for fully int8 non-sparse plans and degrades to weight-only
+  dispatch everywhere else;
+* chunked-prefill greedy == whole-prefill greedy bit-exact with
+  ``act_quantize="int8"``, for both f32 and int8 KV pools, and batched
+  outputs equal isolated outputs (engine-level pad discipline).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.lowrank_matmul_qa import quantize_rows
+from repro.layers import plan as lplan
+from repro.layers.param import apply_linear
+from repro.quant import quantize_array, quantize_tree
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def _lowrank(rng, c=128, r=32, s=64):
+    ks = jax.random.split(rng, 2)
+    return {"w0": jax.random.normal(ks[0], (c, r)) * 0.1,
+            "w1": jax.random.normal(ks[1], (r, s)) * 0.1}
+
+
+def _branched(rng, n=4, c=128, r1=16, r2=16, s=64):
+    ks = jax.random.split(rng, 3)
+    return {"u": jax.random.normal(ks[0], (n, c, r1)) * 0.1,
+            "xc": jax.random.normal(ks[1], (n, r1, r2)) * 0.1,
+            "v": jax.random.normal(ks[2], (n, r2, s)) * 0.1}
+
+
+def _qfactors(rng, c, r, s):
+    ks = jax.random.split(rng, 2)
+    w0q, w0s = quantize_array(jax.random.normal(ks[0], (c, r)) * 0.05)
+    w1q, w1s = quantize_array(jax.random.normal(ks[1], (r, s)) * 0.05)
+    return w0q, w0s, w1q, w1s
+
+
+class TestQuantizeRows:
+    def test_roundtrip_bounded(self, rng):
+        x = jax.random.normal(rng, (16, 256))
+        q, s = quantize_rows(x)
+        assert q.dtype == jnp.int8 and s.shape == (16, 1)
+        rel = float(jnp.linalg.norm(q * s - x) / jnp.linalg.norm(x))
+        assert rel <= 1e-2, rel
+
+    def test_zero_rows_get_zero_scale(self, rng):
+        x = jnp.zeros((4, 64)).at[1].set(
+            jax.random.normal(rng, (64,)))
+        q, s = quantize_rows(x)
+        assert float(s[0, 0]) == 0.0 and float(s[2, 0]) == 0.0
+        np.testing.assert_array_equal(np.asarray(q[0]), 0)
+        assert float(s[1, 0]) > 0.0
+
+    def test_scales_are_row_local(self, rng):
+        """A huge row must not change its neighbours' quantization."""
+        x = jax.random.normal(rng, (4, 64))
+        loud = x.at[2].mul(1e4)
+        q, s = quantize_rows(x)
+        ql, sl = quantize_rows(loud)
+        for i in (0, 1, 3):
+            np.testing.assert_array_equal(np.asarray(q[i]),
+                                          np.asarray(ql[i]))
+            assert float(s[i, 0]) == float(sl[i, 0])
+
+
+class TestKernelQA:
+    """Interpret-mode parity for the fused act-quant kernels
+    (satellite: both _qa kernels in the kernel test matrix)."""
+
+    SHAPES = [
+        (256, 512, 128, 512),
+        (300, 512, 128, 640),     # unaligned M/S -> padding path
+        (8, 128, 16, 384),        # M smaller than a tile
+    ]
+
+    @pytest.mark.parametrize("m,c,r,s", SHAPES)
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_lowrank_matches_oracle(self, m, c, r, s, dtype, rng):
+        x = (jax.random.normal(rng, (m, c)) * 0.1).astype(dtype)
+        w0q, w0s, w1q, w1s = _qfactors(jax.random.fold_in(rng, 1), c, r, s)
+        got = ops.lowrank_matmul_qa(x, w0q, w0s, w1q, w1s,
+                                    force_kernel=True)
+        want = ref.lowrank_matmul_qa_ref(x, w0q, w0s, w1q, w1s)
+        assert got.dtype == want.dtype and got.shape == want.shape
+        # interpret mode may accumulate the int dots in f32; the real
+        # MXU is exact int32, so the bar is loose but small.
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=1e-2, rtol=1e-2)
+
+    @pytest.mark.parametrize("m,c,r1,r2,s,n", [
+        (256, 512, 64, 64, 512, 4),
+        (300, 512, 64, 64, 640, 4),
+        (8, 128, 16, 16, 384, 2),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_branched_matches_oracle(self, m, c, r1, r2, s, n, dtype, rng):
+        ks = jax.random.split(rng, 4)
+        x = (jax.random.normal(ks[0], (m, c)) * 0.1).astype(dtype)
+        uq, us = quantize_array(jax.random.normal(ks[1], (n, c, r1)) * 0.05)
+        xcq, xcs = quantize_array(
+            jax.random.normal(ks[2], (n, r1, r2)) * 0.05)
+        vq, vs = quantize_array(jax.random.normal(ks[3], (n, r2, s)) * 0.05)
+        got = ops.branched_matmul_qa(x, uq, us, xcq, xcs, vq, vs,
+                                     force_kernel=True)
+        want = ref.branched_matmul_qa_ref(x, uq, us, xcq, xcs, vq, vs)
+        assert got.dtype == want.dtype and got.shape == want.shape
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=1e-2, rtol=1e-2)
+
+    @pytest.mark.parametrize("m,c,r,s", SHAPES)
+    def test_within_int8_tolerance_of_weight_only_path(self, m, c, r, s,
+                                                       rng):
+        """Quantizing the activations on top of int8 weights stays
+        within the same rel-err family as weight-only int8."""
+        ks = jax.random.split(rng, 3)
+        x = jax.random.normal(ks[0], (m, c), jnp.float32) * 0.1
+        w0q, w0s, w1q, w1s = _qfactors(jax.random.fold_in(rng, 1), c, r, s)
+        got = ops.lowrank_matmul_qa(x, w0q, w0s, w1q, w1s,
+                                    force_kernel=True)
+        want = ref.lowrank_matmul_q_ref(x, w0q, w0s, w1q, w1s)
+        rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+        assert rel <= 5e-2, rel
+
+    def test_padded_rows_bit_identical(self, rng):
+        """Bucket padding discipline: appending zero rows (what the
+        serve buckets do) leaves the real rows bit-for-bit unchanged —
+        per-row scales make padding invisible."""
+        m, c, r, s = 100, 256, 64, 256
+        x = jax.random.normal(rng, (m, c), jnp.float32) * 0.1
+        w0q, w0s, w1q, w1s = _qfactors(jax.random.fold_in(rng, 1), c, r, s)
+        y = ops.lowrank_matmul_qa(x, w0q, w0s, w1q, w1s, force_kernel=True)
+        xp = jnp.concatenate([x, jnp.zeros((28, c), x.dtype)])
+        yp = ops.lowrank_matmul_qa(xp, w0q, w0s, w1q, w1s,
+                                   force_kernel=True)
+        np.testing.assert_array_equal(np.asarray(yp[:m]), np.asarray(y))
+        np.testing.assert_array_equal(np.asarray(yp[m:]), 0.0)
+
+    def test_padded_rows_bit_identical_branched(self, rng):
+        m, c, r1, r2, s, n = 100, 256, 32, 32, 256, 4
+        ks = jax.random.split(rng, 4)
+        x = jax.random.normal(ks[0], (m, c), jnp.float32) * 0.1
+        uq, us = quantize_array(jax.random.normal(ks[1], (n, c, r1)) * 0.05)
+        xcq, xcs = quantize_array(
+            jax.random.normal(ks[2], (n, r1, r2)) * 0.05)
+        vq, vs = quantize_array(jax.random.normal(ks[3], (n, r2, s)) * 0.05)
+        y = ops.branched_matmul_qa(x, uq, us, xcq, xcs, vq, vs,
+                                   force_kernel=True)
+        xp = jnp.concatenate([x, jnp.zeros((28, c), x.dtype)])
+        yp = ops.branched_matmul_qa(xp, uq, us, xcq, xcs, vq, vs,
+                                    force_kernel=True)
+        np.testing.assert_array_equal(np.asarray(yp[:m]), np.asarray(y))
+        np.testing.assert_array_equal(np.asarray(yp[m:]), 0.0)
+
+    def test_oversize_falls_back_to_oracle_exactly(self, rng):
+        """The fallback IS the oracle, so a rejected geometry returns
+        bit-identical results to the reference."""
+        x = jax.random.normal(rng, (16, 16384), jnp.float32) * 0.01
+        w0q, w0s = quantize_array(
+            jax.random.normal(rng, (16384, 4096)) * 0.01)
+        w1q, w1s = quantize_array(
+            jax.random.normal(rng, (4096, 8192)) * 0.01)
+        assert not ops.kernel_fits("lowrank_qa", 16, c=16384, r=4096,
+                                   s=8192)
+        got = ops.lowrank_matmul_qa(x, w0q, w0s, w1q, w1s)   # no force
+        want = ref.lowrank_matmul_qa_ref(x, w0q, w0s, w1q, w1s)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_leading_dims_flattened(self, rng):
+        """(B, T, c) activations run through the same kernel."""
+        b, t, c, r, s = 2, 48, 128, 32, 256
+        x = jax.random.normal(rng, (b, t, c), jnp.float32) * 0.1
+        w0q, w0s, w1q, w1s = _qfactors(jax.random.fold_in(rng, 1), c, r, s)
+        got = ops.lowrank_matmul_qa(x, w0q, w0s, w1q, w1s,
+                                    force_kernel=True)
+        flat = ops.lowrank_matmul_qa(x.reshape(-1, c), w0q, w0s, w1q, w1s,
+                                     force_kernel=True)
+        assert got.shape == (b, t, s)
+        np.testing.assert_array_equal(np.asarray(got.reshape(-1, s)),
+                                      np.asarray(flat))
+
+
+class TestPlanDispatch:
+    def test_qa_kernel_names(self, rng):
+        assert lplan.build_plan(quantize_tree(_lowrank(rng))) \
+            .kernel_for((256, 128), True, act_quantize=True) == "lowrank_qa"
+        assert lplan.build_plan(quantize_tree(_branched(rng))) \
+            .kernel_for((256, 128), True, act_quantize=True) == "branched_qa"
+
+    def test_off_by_default(self, rng):
+        plan = lplan.build_plan(quantize_tree(_lowrank(rng)))
+        assert plan.kernel_for((256, 128), True) == "lowrank_q"
+
+    def test_requires_use_pallas(self, rng):
+        plan = lplan.build_plan(quantize_tree(_lowrank(rng)))
+        assert plan.kernel_for((256, 128), False, act_quantize=True) is None
+
+    def test_unquantized_plan_ignores_flag(self, rng):
+        plan = lplan.build_plan(_lowrank(rng))
+        assert plan.kernel_for((256, 128), True,
+                               act_quantize=True) == "lowrank"
+
+    def test_fp8_weights_fall_back_to_weight_only(self, rng):
+        plan = lplan.build_plan(quantize_tree(_lowrank(rng), "fp8"))
+        assert plan.kernel_for((256, 128), True,
+                               act_quantize=True) == "lowrank_q"
+
+    def test_partial_quant_falls_back(self, rng):
+        plan = lplan.build_plan(quantize_tree(_lowrank(rng),
+                                              targets=("w0",)))
+        assert plan.kernel_for((256, 128), True, act_quantize=True) is None
+
+    @pytest.mark.parametrize("tree_fn", [_lowrank, _branched])
+    def test_apply_linear_parity(self, tree_fn, rng):
+        """End-to-end through the plan seam: act-quant execution stays
+        within int8 tolerance of the weight-only quantized path."""
+        pq = quantize_tree(tree_fn(rng))
+        x = jax.random.normal(jax.random.fold_in(rng, 7),
+                              (4, 40, 128)) * 0.1
+        y_wq = apply_linear(pq, x, use_pallas=True)
+        y_qa = apply_linear(pq, x, use_pallas=True, act_quantize=True)
+        assert y_qa.shape == y_wq.shape and y_qa.dtype == y_wq.dtype
+        rel = float(jnp.linalg.norm(y_qa - y_wq) / jnp.linalg.norm(y_wq))
+        assert rel <= 5e-2, rel
+
+    def test_apply_linear_flag_inert_without_quant(self, rng):
+        p = _lowrank(rng)
+        x = jax.random.normal(jax.random.fold_in(rng, 7), (8, 128)) * 0.1
+        np.testing.assert_array_equal(
+            np.asarray(apply_linear(p, x, use_pallas=True,
+                                    act_quantize=True)),
+            np.asarray(apply_linear(p, x, use_pallas=True)))
+
+
+# ---------------------------------------------------------------------------
+# Engine level: chunked == whole and batched == isolated under act-quant
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    from repro.configs import registry
+    from repro.configs.base import LRDConfig, ParallelConfig, RunConfig
+    from repro.core.surgery import decompose_model
+    from repro.models.api import get_model
+
+    # f32 model dtype: the equality tests compare full token streams.
+    cfg = dataclasses.replace(registry.get("llama3.2-1b").smoke,
+                              dtype="float32")
+    lrd = LRDConfig(enabled=True, rank_mode="ratio", min_dim=32,
+                    use_pallas=True)
+    run = RunConfig(model=cfg, lrd=lrd, parallel=ParallelConfig())
+    m = get_model(cfg)
+    params, axes = m.init(jax.random.PRNGKey(0))
+    p2, _, _ = decompose_model(params, axes, lrd)
+    return run, m, p2
+
+
+def _serve(eng, prompts, n=6):
+    from repro.serve.engine import Request
+    reqs = [Request(uid=i, prompt=list(p), max_new_tokens=n)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.add_request(r)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    return [r.output for r in reqs]
+
+
+LONG = tuple((i * 7 + 3) % 50 + 1 for i in range(21))
+
+
+class TestServeActQuant:
+    def _engine(self, run, params, **kw):
+        from repro.serve.engine import ServeEngine
+        kw.setdefault("slots", 2)
+        kw.setdefault("max_seq", 64)
+        kw.setdefault("quantize", "int8")
+        kw.setdefault("act_quantize", "int8")
+        return ServeEngine(run, params, **kw)
+
+    @pytest.mark.parametrize("kvq_mode", [None, "int8"])
+    def test_chunked_equals_whole_exact(self, serve_setup, kvq_mode):
+        """Acceptance: chunked greedy bit-exact vs whole-prefill with
+        act-quant enabled — chunk boundaries sit on row boundaries, so
+        per-token scales see identical rows either way."""
+        run, m, params = serve_setup
+        out_b = _serve(self._engine(run, params, admission="blocking",
+                                    kv_quantize=kvq_mode),
+                       [LONG, (4, 5, 6)])
+        eng_c = self._engine(run, params, admission="continuous",
+                             prefill_chunk=8, kv_quantize=kvq_mode)
+        out_c = _serve(eng_c, [LONG, (4, 5, 6)])
+        assert out_b == out_c
+        assert max(s["prefill_tokens"] for s in eng_c.stats) <= 8 + 3
+
+    def test_chunk_size_invariant(self, serve_setup):
+        """Different chunk sizes must agree token-for-token."""
+        run, m, params = serve_setup
+        out3 = _serve(self._engine(run, params, admission="continuous",
+                                   prefill_chunk=3), [LONG])
+        out8 = _serve(self._engine(run, params, admission="continuous",
+                                   prefill_chunk=8), [LONG])
+        assert out3 == out8
+
+    def test_batched_equals_isolated(self, serve_setup):
+        """Bucket padding at the engine level: a request's tokens are
+        identical whether it shares a step with others or runs alone."""
+        run, m, params = serve_setup
+        prompts = [[3, 1, 4], [1, 5, 9, 2], [6, 5]]
+        solo = [
+            _serve(self._engine(run, params, slots=1), [p], n=5)[0]
+            for p in prompts]
+        batched = _serve(self._engine(run, params, slots=3), prompts, n=5)
+        assert solo == batched
+
+    def test_tokens_close_to_full_width_activations(self, serve_setup):
+        """Act-quant perturbs logits at int8 scale; greedy streams stay
+        mostly aligned with the weight-only int8 engine even on a
+        random-init smoke model with near-uniform logits."""
+        run, m, params = serve_setup
+        out_f = _serve(self._engine(run, params, act_quantize=None),
+                       [LONG, (4, 5, 6), (9, 8, 7, 6)], n=8)
+        out_q = _serve(self._engine(run, params),
+                       [LONG, (4, 5, 6), (9, 8, 7, 6)], n=8)
+        flat_f = [t for o in out_f for t in o]
+        flat_q = [t for o in out_q for t in o]
+        match = sum(a == b for a, b in zip(flat_f, flat_q))
+        assert match >= int(0.7 * len(flat_f)), (match, len(flat_f))
+
+    def test_requires_weight_quant(self, serve_setup):
+        from repro.serve.engine import ServeEngine
+        run, m, params = serve_setup
+        with pytest.raises(ValueError):
+            ServeEngine(run, params, slots=1, max_seq=64,
+                        act_quantize="int8")
+
+    def test_config_knob_enables(self, serve_setup):
+        run, m, params = serve_setup
+        run_q = run.replace(lrd=dataclasses.replace(
+            run.lrd, quantize="int8", act_quantize="int8"))
+        from repro.serve.engine import ServeEngine
+        eng = ServeEngine(run_q, params, slots=1, max_seq=64)
+        assert eng.act_quantize == "int8"
+        assert eng.runner.prefill_opts.act_quantize
+        assert not eng.runner.opts.act_quantize    # decode stays f32

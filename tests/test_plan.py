@@ -197,3 +197,40 @@ class TestAccounting:
         t_bf16 = plan_layer_time(lplan.build_plan(p), 1)
         t_int8 = plan_layer_time(lplan.build_plan(quantize_tree(p)), 1)
         assert t_int8 < t_bf16        # decode (m=1) is weight-stream-bound
+
+    def test_plan_layer_time_act_quant_mxu_rate(self, rng):
+        """Satellite cross-check: at compute-bound prefill m, an int8
+        plan with ``act_quantize`` runs at the int8 x int8 MXU rate —
+        half the modelled time — while weight-only int8 (dequantized in
+        VMEM, wide MXU operands) and bf16 plans are unchanged."""
+        from repro.analysis.hw_specs import DEFAULT
+        from repro.core.cost_model import plan_layer_time
+        p = _lowrank(rng, c=2048, r=256, s=2048)
+        qplan = lplan.build_plan(quantize_tree(p))
+        m = 1 << 15                   # deep into the compute-bound regime
+        t_wq = plan_layer_time(qplan, m)
+        t_qa = plan_layer_time(qplan, m, act_quantize=True)
+        assert t_qa == pytest.approx(t_wq / DEFAULT.int8_mxu_mult)
+        # bf16 plan: flag is inert (dispatch mirror rejects it)
+        fplan = lplan.build_plan(p)
+        assert plan_layer_time(fplan, m, act_quantize=True) \
+            == plan_layer_time(fplan, m)
+
+    def test_plan_layer_time_act_quant_narrows_stream(self, rng):
+        """Memory-bound side: under qa the activation stream is int8
+        values + one f32 scale per row, so the modelled time drops when
+        m is small enough to be stream-bound on activations."""
+        from repro.core.cost_model import plan_layer_time
+        p = _lowrank(rng, c=4096, r=64, s=4096)
+        qplan = lplan.build_plan(quantize_tree(p))
+        m = 4096                      # act stream rivals weight stream
+        t_wq = plan_layer_time(qplan, m, act_bytes=4)
+        t_qa = plan_layer_time(qplan, m, act_bytes=4, act_quantize=True)
+        assert t_qa < t_wq
+
+    def test_peak_flops_dtype_aware(self):
+        from repro.analysis.hw_specs import DEFAULT
+        assert DEFAULT.peak_flops(1) \
+            == DEFAULT.peak_flops_bf16 * DEFAULT.int8_mxu_mult
+        assert DEFAULT.peak_flops(2) == DEFAULT.peak_flops_bf16
+        assert DEFAULT.peak_flops(4) == DEFAULT.peak_flops_bf16

@@ -292,6 +292,70 @@ class TestApplyLinearDispatch:
         assert linear_flops(pq, 7) == linear_flops(p, 7)
 
 
+class TestConvCoreQuant:
+    """Satellite: the Tucker-conv spatial ``core`` factor rides the same
+    per-channel int8 path as the matmul factors, and ``apply_conv``
+    dequantizes it on the fly through the plan seam."""
+
+    @staticmethod
+    def _tucker(rng, c=16, r=8, s=16, k=3):
+        ks = jax.random.split(rng, 3)
+        return {"tucker_u": jax.random.normal(ks[0], (c, r)) * 0.1,
+                "core": jax.random.normal(ks[1], (k, k, r, r)) * 0.1,
+                "tucker_v": jax.random.normal(ks[2], (r, s)) * 0.1}
+
+    @staticmethod
+    def _branched_tucker(rng, n=2, c=16, r1=4, r2=4, s=16, k=3):
+        ks = jax.random.split(rng, 3)
+        return {"u": jax.random.normal(ks[0], (n, c, r1)) * 0.1,
+                "core": jax.random.normal(ks[1], (n, k, k, r1, r2)) * 0.1,
+                "v": jax.random.normal(ks[2], (n, r2, s)) * 0.1}
+
+    def test_core_factor_is_quantized(self, rng):
+        pq = quantize_tree(self._tucker(rng))
+        assert set(pq) == {"tucker_u_q", "tucker_u_scale", "core_q",
+                           "core_scale", "tucker_v_q", "tucker_v_scale"}
+        assert pq["core_q"].dtype == jnp.int8
+        assert pq["core_scale"].dtype == jnp.float32
+        rel = relative_error(self._tucker(rng)["core"], "int8")
+        assert rel <= INT8_BOUND
+
+    def test_tucker_conv_parity(self, rng):
+        from repro.layers.conv import apply_conv
+        p = self._tucker(rng)
+        x = jax.random.normal(jax.random.fold_in(rng, 5), (2, 8, 8, 16))
+        y = apply_conv(p, x)
+        yq = apply_conv(quantize_tree(p), x)
+        assert yq.shape == y.shape and yq.dtype == y.dtype
+        rel = float(jnp.linalg.norm(yq - y) / jnp.linalg.norm(y))
+        assert rel <= 5e-2, rel
+
+    def test_branched_tucker_conv_parity(self, rng):
+        from repro.layers.conv import apply_conv, conv_out_channels
+        p = self._branched_tucker(rng)
+        pq = quantize_tree(p)
+        assert pq["core_q"].dtype == jnp.int8
+        assert conv_out_channels(pq) == 16
+        x = jax.random.normal(jax.random.fold_in(rng, 6), (2, 8, 8, 16))
+        y = apply_conv(p, x)
+        yq = apply_conv(pq, x)
+        rel = float(jnp.linalg.norm(yq - y) / jnp.linalg.norm(y))
+        assert rel <= 5e-2, rel
+
+    def test_strided_and_frozen_paths(self, rng):
+        """Quantized cores survive stride-2 dispatch and the freeze
+        policy (quantized factors carry no gradient anyway)."""
+        from repro.layers.conv import apply_conv
+        p = self._tucker(rng)
+        pq = quantize_tree(p)
+        x = jax.random.normal(jax.random.fold_in(rng, 7), (1, 8, 8, 16))
+        y = apply_conv(p, x, stride=2)
+        yq = apply_conv(pq, x, stride=2, freeze_factors=True)
+        assert yq.shape == y.shape
+        rel = float(jnp.linalg.norm(yq - y) / jnp.linalg.norm(y))
+        assert rel <= 5e-2, rel
+
+
 @pytest.fixture(scope="module")
 def serve_setup():
     from repro.configs import registry
