@@ -1,9 +1,9 @@
 """Serve-decode benchmarks: KV quantization + admission scheduling +
 paged KV pooling + fault-injected lifecycle chaos + int8-activation
-prefill.
+prefill + the multi-replica router.
 
-Six sweeps share this module (select with
-``--sweep {all,kv,sched,mla,paged,faults,prefill}``):
+Seven sweeps share this module (select with
+``--sweep {all,kv,sched,mla,paged,faults,prefill,router}``):
 
 **kv** — f32 KV pool vs int8-quantized KV pool.
 
@@ -75,13 +75,30 @@ rank).  Measured CPU prefill tokens/s of both engines (interpret-mode
 kernels; the rate column is the TPU story) and the greedy
 ``token_match`` of the int8-act stream against the f32-act engine.
 
+**router** — the multi-replica serve tier
+(:class:`repro.serve.router.ServeRouter`) under mixed-priority load at
+saturation.  Three runs per sweep point at identical offered load:
+SLO-aware 2-replica (least-KV-pressure routing, per-class queues,
+batch held while the interactive tail lacks headroom; the SLO target
+is calibrated to 1.3x the measured interactive-only p99 ITL),
+priority-blind 2-replica (round-robin FIFO — the baseline), and
+SLO-aware 1-replica (the scaling denominator).  Rows report per-class
+p50/p99 ITL + p99 TTFT, batch and total tokens/s on the modeled
+data-parallel wall clock (max per-replica step seconds per round),
+per-replica KV pressure / shed steps / SLO breaches, and the greedy
+``token_match`` across all three modes (routing must never change
+tokens).  Acceptance: SLO-aware interactive p99 ITL >= 2x better than
+blind, batch throughput within 20%, 2 replicas >= 1.7x the saturated
+tokens/s of 1.
+
 Every sweep appends to the ``BENCH_serve.json`` trajectory at the repo
 root (stamped with ``git_rev`` + ``hostname`` via
 :func:`benchmarks.common.run_stamp`) so successive PRs can track the
 serve numbers.
 
     PYTHONPATH=src python -m benchmarks.bench_serve_decode \
-        [--dry-run] [--sweep {all,kv,sched,mla,paged,faults,prefill}]
+        [--dry-run] \
+        [--sweep {all,kv,sched,mla,paged,faults,prefill,router}]
 """
 from __future__ import annotations
 
@@ -93,7 +110,7 @@ from pathlib import Path
 
 import jax
 
-from benchmarks.common import Csv
+from benchmarks.common import Csv, percentiles
 from repro.analysis.hw_specs import TPU_V5E
 
 TRAJECTORY = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
@@ -294,8 +311,9 @@ def _mixed_load(eng, *, slots: int, long_len: int, short_new: int) -> dict:
         ttfts.extend(r.ttft for r in shorts + [longr])
         outputs.extend(r.output for r in shorts + [longr])
     gaps = np.concatenate(gaps)
-    return {"p50_itl_ms": round(float(np.percentile(gaps, 50)) * 1e3, 3),
-            "p99_itl_ms": round(float(np.percentile(gaps, 99)) * 1e3, 3),
+    p50, p99 = percentiles(gaps, (50, 99))
+    return {"p50_itl_ms": round(p50 * 1e3, 3),
+            "p99_itl_ms": round(p99 * 1e3, 3),
             "max_itl_ms": round(float(gaps.max()) * 1e3, 3),
             "ttft_mean_ms": round(sum(ttfts) / len(ttfts) * 1e3, 3),
             "tokens_per_s": round(eng.throughput()["tokens_per_s"], 2),
@@ -329,8 +347,9 @@ def _saturated_load(eng, *, slots: int, new_tokens: int = 48) -> dict:
     gaps = np.concatenate([np.diff(r.token_times) for r in reqs
                            if len(r.token_times) > 1])
     th = eng.throughput()
-    return {"p50_itl_ms": round(float(np.percentile(gaps, 50)) * 1e3, 3),
-            "p99_itl_ms": round(float(np.percentile(gaps, 99)) * 1e3, 3),
+    p50, p99 = percentiles(gaps, (50, 99))
+    return {"p50_itl_ms": round(p50 * 1e3, 3),
+            "p99_itl_ms": round(p99 * 1e3, 3),
             "max_itl_ms": round(float(gaps.max()) * 1e3, 3),
             "ttft_mean_ms": round(sum(r.ttft for r in reqs)
                                   / len(reqs) * 1e3, 3),
@@ -546,7 +565,7 @@ def _chaos_load(eng, n_requests: int) -> dict:
             "degradation_engages": th.get("degradation_engages", 0),
             "degradation_recoveries": th.get("degradation_recoveries", 0),
             "slow_steps": th["slow_steps"],
-            "p99_itl_ms": round(float(np.percentile(gaps, 99)) * 1e3, 3),
+            "p99_itl_ms": round(percentiles(gaps, (99,))[0] * 1e3, 3),
             "tokens_per_s": round(th["tokens_per_s"], 2),
             "fault_report": eng.faults.report()}
 
@@ -728,6 +747,249 @@ def run_prefill(fast: bool = True, dry_run: bool = False) -> str:
     return out
 
 
+def _router_setup():
+    from repro.configs import registry
+    from repro.configs.base import ParallelConfig, RunConfig
+    from repro.models.api import get_model
+
+    cfg = dataclasses.replace(registry.get("llama3.2-1b").smoke,
+                              dtype="float32")
+    run_cfg = RunConfig(model=cfg, parallel=ParallelConfig())
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    return run_cfg, params
+
+
+def _build_router(run_cfg, params, *, replicas: int, priority_aware: bool,
+                  slots: int, s_max: int, chunk: int):
+    from repro.serve.router import ServeRouter
+
+    return ServeRouter(run_cfg, params, replicas=replicas,
+                       priority_aware=priority_aware,
+                       slots=slots, max_seq=s_max, prefill_chunk=chunk,
+                       step_token_budget=slots + chunk)
+
+
+def _warm_router(router, *, slots: int, batch_len: int) -> None:
+    """Compile every segment both classes will hit (decode, small-chunk
+    interactive prefill, long-chunk batch prefill, insert, sample) so
+    the measured rows time scheduling, not jit."""
+    from repro.serve.engine import Request
+
+    n = slots * len(router.replicas)
+    reqs = [Request(uid=90000 + i, prompt=[2] * 4, max_new_tokens=3)
+            for i in range(n)]
+    reqs += [Request(uid=91000 + i, prompt=[3] * batch_len,
+                     max_new_tokens=2, priority="batch")
+             for i in range(len(router.replicas))]
+    for r in reqs:
+        router.add_request(r)
+    router.run_until_done()
+    router.reset_stats()
+
+
+def _saturated_baseline(router, *, slots: int, int_new: int) -> float:
+    """Interactive-only saturated decode on the (warm) router — every
+    slot of every replica busy, no admission churn.  Returns tokens/s
+    on the modeled data-parallel wall: the replica-scaling
+    numerator/denominator."""
+    from repro.serve.engine import Request
+
+    n = slots * len(router.replicas)
+    reqs = [Request(uid=95000 + i, prompt=[(i % 7) + 1] * 4,
+                    max_new_tokens=int_new) for i in range(n)]
+    for r in reqs:
+        router.add_request(r)
+    router.run_until_done()
+    tok_s = router.total_tokens / max(router.round_seconds, 1e-9)
+    router.reset_stats()
+    return tok_s
+
+
+def _calibrate_slo(router, load: dict) -> float:
+    """The SLO target is what this router can actually deliver with no
+    batch at all: run the measured load's interactive half alone and
+    take 1.3x its p99 service ITL — so interactive admission churn
+    (chunk prefills of queued interactive prompts) never reads as a
+    breach, while co-scheduled batch prefill does."""
+    _router_load(router, **{**load, "n_batch": 0})
+    slo_ms = router.class_stats("interactive")["itl_p99_ms"] * 1.3
+    router.reset_stats()
+    return slo_ms
+
+
+def _router_load(router, *, n_int: int, int_new: int, n_batch: int,
+                 batch_len: int, batch_new: int) -> list:
+    """Mixed-priority mixed-length load at saturation in one
+    deterministic interleave (a batch long after every third
+    interactive short), arrivals paced by one router round per
+    submission — open-loop-ish load, not a single burst that
+    multi-segment-prefills the whole queue in one step.  Identical
+    offered load for every mode."""
+    from repro.serve.engine import Request
+
+    specs = []
+    ii = bi = 0
+    while ii < n_int or bi < n_batch:
+        for _ in range(3):
+            if ii < n_int:
+                specs.append(("interactive", ii))
+                ii += 1
+        if bi < n_batch:
+            specs.append(("batch", bi))
+            bi += 1
+    reqs = []
+    for uid, (pri, k) in enumerate(specs):
+        if pri == "interactive":
+            prompt = [(k * 7 + j) % 50 + 1 for j in range(4 + k % 3)]
+            reqs.append(Request(uid=uid, prompt=prompt,
+                                max_new_tokens=int_new))
+        else:
+            prompt = [(k * 11 + j * 3) % 50 + 1
+                      for j in range(batch_len - 8 * (k % 2))]
+            reqs.append(Request(uid=uid, prompt=prompt,
+                                max_new_tokens=batch_new,
+                                priority="batch"))
+    for r in reqs:
+        router.add_request(r)
+        router.step()
+    router.run_until_done()
+    assert all(r.done for r in reqs)
+    return reqs
+
+
+def _router_metrics(router, reqs) -> dict:
+    """Per-class tails from the fleet's service-time sample rings
+    (:meth:`ServeRouter.class_stats` — own-replica step seconds, so a
+    replica is never charged for its co-tenants on a time-shared test
+    device); tokens/s from the modeled data-parallel wall."""
+    wall = max(router.round_seconds, 1e-9)
+    out = {"rounds": router.rounds,
+           "tokens_per_s": round(router.total_tokens / wall, 2)}
+    for pri in ("interactive", "batch"):
+        rs = [r for r in reqs if r.priority == pri]
+        cs = router.class_stats(pri)
+        out[pri] = {"p50_itl_ms": round(cs["itl_p50_ms"], 3),
+                    "p99_itl_ms": round(cs["itl_p99_ms"], 3),
+                    "ttft_p50_ms": round(cs["ttft_p50_ms"], 3),
+                    "ttft_p99_ms": round(cs["ttft_p99_ms"], 3),
+                    "tokens": sum(len(r.output) for r in rs),
+                    "tok_s": round(sum(len(r.output) for r in rs)
+                                   / wall, 2)}
+    tp = router.throughput()
+    out["kv_peak_bytes"] = [d["kv_peak_bytes"] for d in tp["per_replica"]]
+    out["kv_pressure"] = [
+        round(d["kv_peak_bytes"] / max(d["kv_capacity_bytes"], 1), 4)
+        for d in tp["per_replica"]]
+    out["shed_steps"] = [d.get("shed_steps", 0)
+                         for d in tp["per_replica"]]
+    out["slo_breaches"] = [d["slo_breaches"] for d in tp["per_replica"]]
+    out["routed"] = [d["routed"] for d in tp["per_replica"]]
+    out["rejected"] = tp["rejected"]
+    return out
+
+
+def run_router(fast: bool = True, dry_run: bool = False) -> str:
+    """Multi-replica router: SLO-aware priority routing vs priority-
+    blind round-robin FIFO at equal offered load, plus 2-replica vs
+    1-replica saturated scaling (modeled data-parallel wall: max
+    per-replica step seconds per round — replicas run concurrently on
+    their own devices in deployment)."""
+    # (slots, s_max, chunk, n_int, int_new, n_batch, batch_len, batch_new)
+    sweeps = [(4, 1024, 256, 12, 24, 6, 768, 8),
+              (4, 2048, 256, 16, 32, 8, 1280, 8)]
+    if dry_run:
+        sweeps = [(2, 128, 16, 4, 8, 2, 64, 4)]
+    elif fast:
+        sweeps = sweeps[:1]
+    run_cfg, params = _router_setup()
+    csv = Csv(["mode", "replicas", "slots", "s_max", "int_p50_ms",
+               "int_p99_ms", "int_ttft_p99_ms", "batch_tok_s", "tok_s",
+               "shed_steps", "slo_breaches", "match"])
+    records = []
+    for slots, s_max, chunk, n_int, int_new, n_batch, batch_len, \
+            batch_new in sweeps:
+        load = dict(n_int=n_int, int_new=int_new, n_batch=n_batch,
+                    batch_len=batch_len, batch_new=batch_new)
+        runs = {}
+        aware2 = _build_router(run_cfg, params, replicas=2,
+                               priority_aware=True, slots=slots,
+                               s_max=s_max, chunk=chunk)
+        _warm_router(aware2, slots=slots, batch_len=batch_len)
+        aware1 = _build_router(run_cfg, params, replicas=1,
+                               priority_aware=True, slots=slots,
+                               s_max=s_max, chunk=chunk)
+        _warm_router(aware1, slots=slots, batch_len=batch_len)
+        # scaling baselines back to back — both warm, same process
+        # state, so the ratio reflects replica count and not drift
+        sat2_tok_s = _saturated_baseline(aware2, slots=slots,
+                                         int_new=int_new)
+        sat1_tok_s = _saturated_baseline(aware1, slots=slots,
+                                         int_new=int_new)
+        slo_ms = _calibrate_slo(aware2, load)
+        aware2.set_slo(slo_ms)
+        runs["slo_aware_2rep"] = (aware2, _router_load(aware2, **load))
+        blind2 = _build_router(run_cfg, params, replicas=2,
+                               priority_aware=False, slots=slots,
+                               s_max=s_max, chunk=chunk)
+        _warm_router(blind2, slots=slots, batch_len=batch_len)
+        runs["blind_2rep"] = (blind2, _router_load(blind2, **load))
+        aware1.set_slo(slo_ms)
+        runs["slo_aware_1rep"] = (aware1, _router_load(aware1, **load))
+        # greedy outputs must be identical across modes and replica
+        # counts — routing never changes sampling
+        base = {r.uid: r.output for r in runs["slo_aware_2rep"][1]}
+        for mode, (_, reqs) in runs.items():
+            match = _token_match([base[r.uid] for r in reqs],
+                                 [r.output for r in reqs])
+            m = _router_metrics(*runs[mode])
+            csv.row(mode, len(runs[mode][0].replicas), slots, s_max,
+                    m["interactive"]["p50_itl_ms"],
+                    m["interactive"]["p99_itl_ms"],
+                    m["interactive"]["ttft_p99_ms"],
+                    m["batch"]["tok_s"], m["tokens_per_s"],
+                    sum(m["shed_steps"]), sum(m["slo_breaches"]),
+                    round(match, 4))
+            sat = {"slo_aware_2rep": sat2_tok_s,
+                   "slo_aware_1rep": sat1_tok_s}.get(mode)
+            records.append({"mode": mode,
+                            "replicas": len(runs[mode][0].replicas),
+                            "slots": slots, "s_max": s_max,
+                            "prefill_chunk": chunk,
+                            "slo_itl_ms": round(slo_ms, 3),
+                            "saturated_tok_s":
+                                round(sat, 2) if sat else None,
+                            "token_match": round(match, 4), **m})
+    out = csv.dump("multi-replica router: SLO-aware priority routing vs "
+                   "priority-blind round-robin at equal offered load "
+                   "(interactive p99 ITL is the protected metric), plus "
+                   "1- vs 2-replica saturated scaling on the modeled "
+                   "data-parallel wall clock")
+    by = {r["mode"]: r for r in records if r["slots"] == sweeps[0][0]
+          and r["s_max"] == sweeps[0][1]}
+    if len(by) == 3:
+        p99_ratio = (by["blind_2rep"]["interactive"]["p99_itl_ms"]
+                     / max(by["slo_aware_2rep"]["interactive"]
+                           ["p99_itl_ms"], 1e-9))
+        batch_ratio = (by["slo_aware_2rep"]["batch"]["tok_s"]
+                       / max(by["blind_2rep"]["batch"]["tok_s"], 1e-9))
+        scale = (by["slo_aware_2rep"]["saturated_tok_s"]
+                 / max(by["slo_aware_1rep"]["saturated_tok_s"], 1e-9))
+        out += (f"\n# interactive p99 ITL: blind "
+                f"{by['blind_2rep']['interactive']['p99_itl_ms']:.1f}ms "
+                f"vs SLO-aware "
+                f"{by['slo_aware_2rep']['interactive']['p99_itl_ms']:.1f}"
+                f"ms ({p99_ratio:.2f}x better)")
+        out += (f"\n# batch throughput SLO-aware vs blind: "
+                f"{batch_ratio:.2f}x")
+        out += (f"\n# 2-replica vs 1-replica saturated tokens/s: "
+                f"{scale:.2f}x")
+    _append_trajectory({"bench": "serve_router", "dry_run": dry_run,
+                        "unix_time": int(time.time()), "rows": records})
+    out += f"\n# trajectory appended to {TRAJECTORY.name}"
+    return out
+
+
 def _append_trajectory(record: dict) -> None:
     from benchmarks.common import run_stamp
     traj = []
@@ -747,7 +1009,8 @@ if __name__ == "__main__":
                     help="one tiny sweep point; CPU smoke for CI")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--sweep", choices=["all", "kv", "sched", "mla",
-                                        "paged", "faults", "prefill"],
+                                        "paged", "faults", "prefill",
+                                        "router"],
                     default="all")
     args = ap.parse_args()
     if args.sweep in ("all", "kv"):
@@ -762,3 +1025,5 @@ if __name__ == "__main__":
         print(run_faults(fast=not args.full, dry_run=args.dry_run))
     if args.sweep in ("all", "prefill"):
         print(run_prefill(fast=not args.full, dry_run=args.dry_run))
+    if args.sweep in ("all", "router"):
+        print(run_router(fast=not args.full, dry_run=args.dry_run))

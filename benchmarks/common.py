@@ -1,4 +1,10 @@
-"""Shared benchmark utilities: timing, model stats, CSV emission."""
+"""Shared benchmark utilities: timing, model stats, CSV emission.
+
+``percentiles`` is re-exported from :mod:`repro.serve.metrics` — the
+one p50/p99 implementation shared by the serve engine's per-class
+stats, the router's SLO tracker, and every bench sweep that reports
+tail latency.
+"""
 from __future__ import annotations
 
 import functools
@@ -9,6 +15,8 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.serve.metrics import percentiles  # noqa: F401 — re-export
 
 
 @functools.lru_cache(maxsize=1)

@@ -20,7 +20,7 @@ def main() -> None:
                     help="comma list: table1,table3,rank,branch,lm,kernels,"
                          "quant,branched_quant,serve_decode,serve_mla,"
                          "serve_sched,serve_paged,serve_faults,"
-                         "serve_prefill,frontier")
+                         "serve_prefill,serve_router,frontier")
     ap.add_argument("--list", action="store_true",
                     help="print registered benchmark names and exit")
     args = ap.parse_args()
@@ -46,6 +46,7 @@ def main() -> None:
         "serve_paged": bench_serve_decode.run_paged,
         "serve_faults": bench_serve_decode.run_faults,
         "serve_prefill": bench_serve_decode.run_prefill,
+        "serve_router": bench_serve_decode.run_router,
         "frontier": bench_frontier.run,
     }
     if args.list:

@@ -1,10 +1,18 @@
 """Serve an LRD-compressed LM with continuous batching.
 
     PYTHONPATH=src python examples/serve_lm.py [--kv-layout {slot,paged}]
+        [--replicas N] [--priority {interactive,batch}]
 
 ``--kv-layout paged`` serves from the paged KV pool (fixed-size blocks
 behind per-slot block tables + a radix prefix cache): the two requests
 below that share a prompt prefix store that prefix's KV blocks once.
+
+``--replicas N`` (N > 1) serves through the multi-replica
+:class:`repro.serve.router.ServeRouter` instead of a single engine:
+least-KV-pressure routing, per-priority-class queues, and SLO-aware
+batch admission.  ``--priority batch`` tags every demo request as
+batch-class (default alternates interactive/batch so the per-class
+stats have both populations).
 
 ``--deadline-s`` attaches a wall-clock deadline to every request —
 requests that cannot finish in time end with status
@@ -38,6 +46,14 @@ def main():
                     help="enable the seeded fault injector (allocation "
                          "failures + NaN logits) to demo the lifecycle "
                          "guards and the numerical watchdog")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="N > 1 serves through the data-parallel "
+                         "ServeRouter (least-KV-pressure routing, "
+                         "priority classes, SLO-aware admission)")
+    ap.add_argument("--priority", choices=["interactive", "batch"],
+                    default=None,
+                    help="priority class for every demo request "
+                         "(default: alternate between the two classes)")
     args = ap.parse_args()
 
     cfg = registry.get("llama3.2-1b").smoke
@@ -59,27 +75,48 @@ def main():
             rates={"pool_alloc": 0.1, "nan_logits": 0.05},
             params={"nan_logits": {"seg": "decode", "slot": 0}},
             max_fires={"pool_alloc": 3, "nan_logits": 1})
-    eng = ServeEngine(run, params, slots=4, max_seq=128,
-                      kv_layout=args.kv_layout, faults=faults)
+    if args.replicas > 1:
+        from repro.serve.router import ServeRouter
+        eng = ServeRouter(run, params, replicas=args.replicas, slots=4,
+                          max_seq=128, kv_layout=args.kv_layout,
+                          faults=faults)
+    else:
+        eng = ServeEngine(run, params, slots=4, max_seq=128,
+                          kv_layout=args.kv_layout, faults=faults)
 
     shared = list(range(1, 20))   # > one KV block: paged requests share it
     prompts = [shared + [30], shared + [31, 32], [6, 7, 8, 9], [10],
                [11, 12], [13, 14, 15]]
+    classes = ["interactive", "batch"]
     reqs = [Request(uid=i, prompt=p, max_new_tokens=16,
                     temperature=0.0 if i % 2 == 0 else 0.8,
-                    deadline_s=args.deadline_s)
+                    deadline_s=args.deadline_s,
+                    priority=args.priority or classes[i % 2])
             for i, p in enumerate(prompts)]
     for r in reqs:
         eng.add_request(r)
     eng.run_until_done()
     for r in reqs:
-        print(f"req {r.uid}: status={r.status} prompt={r.prompt} "
-              f"-> {r.output}")
+        print(f"req {r.uid}: status={r.status} class={r.priority} "
+              f"prompt={r.prompt} -> {r.output}")
     print("throughput:", eng.throughput())
+    if args.replicas > 1:
+        for pri in classes:
+            print(f"class {pri}:", eng.class_stats(pri))
     if args.inject:
-        print("fault report:", eng.faults.report())
+        if args.replicas > 1:
+            for rep in eng.replicas:
+                print(f"fault report (replica {rep.index}):",
+                      rep.engine.faults.report())
+        else:
+            print("fault report:", eng.faults.report())
     if args.kv_layout == "paged":
-        print("prefix cache:", eng.pool.prefix_stats())
+        if args.replicas > 1:
+            for rep in eng.replicas:
+                print(f"prefix cache (replica {rep.index}):",
+                      rep.engine.pool.prefix_stats())
+        else:
+            print("prefix cache:", eng.pool.prefix_stats())
 
 
 if __name__ == "__main__":

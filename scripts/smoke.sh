@@ -15,4 +15,5 @@ python -m benchmarks.bench_serve_decode --sweep sched --dry-run
 python -m benchmarks.bench_serve_decode --sweep paged --dry-run
 python -m benchmarks.bench_serve_decode --sweep faults --dry-run
 python -m benchmarks.bench_serve_decode --sweep prefill --dry-run
+python -m benchmarks.bench_serve_decode --sweep router --dry-run
 python -m benchmarks.bench_frontier --dry-run

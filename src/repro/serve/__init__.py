@@ -1,9 +1,15 @@
 from repro.serve.engine import ServeEngine, Request  # noqa: F401
 from repro.serve.faults import (FaultInjector, INJECTION_POINTS,  # noqa: F401
                                 NULL_INJECTOR)
+from repro.serve.guard import (ReplicaGuard,  # noqa: F401
+                               ReplicaGuardPolicy)
+from repro.serve.metrics import latency_summary, percentiles  # noqa: F401
 from repro.serve.paging import PoolExhausted  # noqa: F401
 from repro.serve.pool import IntegrityError, KVPoolManager  # noqa: F401
+from repro.serve.router import (Replica, ServeRouter,  # noqa: F401
+                                SLOPolicy, SLOTracker)
 from repro.serve.runner import ModelRunner  # noqa: F401
-from repro.serve.scheduler import (DegradationPolicy,  # noqa: F401
-                                   LoadShedder, PrefillStream, Scheduler,
+from repro.serve.scheduler import (ClassedQueue,  # noqa: F401
+                                   DegradationPolicy, LoadShedder,
+                                   PrefillStream, PRIORITIES, Scheduler,
                                    STATUSES)

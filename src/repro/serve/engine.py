@@ -63,6 +63,7 @@ Hardening (the serve twin of :mod:`repro.train.fault_tolerance`):
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from collections import deque
 from typing import Any
@@ -75,12 +76,13 @@ from repro.configs.base import RunConfig
 from repro.models.api import get_model
 from repro.serve import paging
 from repro.serve.faults import NULL_INJECTOR, FaultInjector
+from repro.serve.metrics import latency_summary
 from repro.serve.paging import PoolExhausted
 from repro.serve.pool import KVPoolManager, PagedKVPoolManager
 from repro.serve.runner import ModelRunner
-from repro.serve.scheduler import (PREFILL_BUCKET_MIN, DegradationPolicy,
-                                   LoadShedder, PrefillStream, Request,
-                                   Scheduler)
+from repro.serve.scheduler import (PREFILL_BUCKET_MIN, PRIORITIES,
+                                   DegradationPolicy, LoadShedder,
+                                   PrefillStream, Request, Scheduler)
 from repro.train.fault_tolerance import StragglerDetector
 from repro.train.steps import block_opts
 
@@ -135,7 +137,10 @@ class ServeEngine:
                  debug: bool = False,
                  faults: FaultInjector | None = None,
                  degradation: DegradationPolicy | bool = True,
-                 stall_steps: int = DEFAULT_STALL_STEPS):
+                 stall_steps: int = DEFAULT_STALL_STEPS,
+                 device: Any = None,
+                 priority_aware: bool = True,
+                 batch_share: float = 1.0):
         """``quantize`` ("int8" | "fp8") quantizes the decomposed factors
         at load via :mod:`repro.quant`; ``sparsify`` ("2:4") first
         2:4-prunes the ``run.lrd.sparse_targets`` factors
@@ -183,6 +188,15 @@ class ServeEngine:
         DegradationPolicy` (True = defaults, False/None = off) for the
         pressure-watching load shedder.  ``stall_steps`` is the
         no-progress watchdog horizon in :meth:`run_until_done`.
+
+        ``device`` pins this engine to one :class:`jax.Device`: params
+        and the KV pool are committed there and every step dispatches
+        there — how :class:`repro.serve.router.ServeRouter` places N
+        replicas data-parallel across a host's devices.  ``None`` (the
+        default) keeps JAX's implicit placement.  ``priority_aware`` /
+        ``batch_share`` configure the scheduler's priority classes
+        (interactive-first queueing and the in-flight batch prefill
+        throttle — see :class:`repro.serve.scheduler.Scheduler`).
         """
         self.run = run
         self.model = get_model(run.model)
@@ -221,6 +235,12 @@ class ServeEngine:
             raise ValueError(
                 "act_quantize='int8' needs quantize='int8' — the qa "
                 "kernels run int8 x int8 against fully-int8 factor plans")
+        self.device = device
+        if device is not None:
+            # commit the (possibly quantized) params: computations that
+            # touch them dispatch on this replica's device regardless of
+            # the process-global default
+            params = jax.device_put(params, device)
         self.params = params
         # Execution plans, built once at load (not per call): every
         # linear subtree's kind / quantized-pair / kernel decision is
@@ -257,23 +277,28 @@ class ServeEngine:
         self.kv_layout = kv_layout
         # pool before runner: the paged runner's pool plan needs the
         # pool's PagedGeometry (block count / size / tables)
-        if kv_layout == "paged":
-            if self.admission != "continuous":
-                raise ValueError(
-                    "kv_layout='paged' needs continuous admission (the "
-                    "radix prefix gather stages into the chunked "
-                    "prefill path)")
-            self.pool = PagedKVPoolManager(
-                self.model, slots, max_seq,
-                kv_quantize=self.kv_quantize,
-                byte_budget=kv_byte_budget,
-                block_size=(kv_block_size or run.lrd.kv_block_size
-                            or paging.DEFAULT_BLOCK_SIZE),
-                num_blocks=kv_num_blocks)
-        else:
-            self.pool = KVPoolManager(self.model, slots, max_seq,
-                                      kv_quantize=self.kv_quantize,
-                                      byte_budget=kv_byte_budget)
+        with self._on_device():
+            if kv_layout == "paged":
+                if self.admission != "continuous":
+                    raise ValueError(
+                        "kv_layout='paged' needs continuous admission "
+                        "(the radix prefix gather stages into the "
+                        "chunked prefill path)")
+                self.pool = PagedKVPoolManager(
+                    self.model, slots, max_seq,
+                    kv_quantize=self.kv_quantize,
+                    byte_budget=kv_byte_budget,
+                    block_size=(kv_block_size or run.lrd.kv_block_size
+                                or paging.DEFAULT_BLOCK_SIZE),
+                    num_blocks=kv_num_blocks)
+            else:
+                self.pool = KVPoolManager(self.model, slots, max_seq,
+                                          kv_quantize=self.kv_quantize,
+                                          byte_budget=kv_byte_budget)
+        if device is not None:
+            # commit the pool cache too: later ops on it (insert, grow,
+            # release) stay pinned even outside the step context
+            self.pool.cache = jax.device_put(self.pool.cache, device)
         self.debug = debug
         self.faults = faults if faults is not None else NULL_INJECTOR
         self.pool.faults = self.faults
@@ -288,9 +313,12 @@ class ServeEngine:
                                   act_quantize=self.act_quantize,
                                   paged=getattr(self.pool, "geometry",
                                                 None),
-                                  faults=self.faults)
+                                  faults=self.faults,
+                                  device=device)
         self.scheduler = Scheduler(slots, prefill_chunk=self.prefill_chunk,
-                                   step_token_budget=self.step_token_budget)
+                                   step_token_budget=self.step_token_budget,
+                                   priority_aware=priority_aware,
+                                   batch_share=batch_share)
         if degradation is True:
             degradation = DegradationPolicy()
         self.shedder = (LoadShedder(degradation, self.step_token_budget)
@@ -311,9 +339,37 @@ class ServeEngine:
             self.plan_summary["kv_cache_family"] = self.pool.plans[0].family
         self.key = jax.random.PRNGKey(seed)
         self.stats: deque[dict] = deque(maxlen=stats_window)
+        # per-priority-class latency sample rings (seconds), bounded
+        # like the step stats; they feed the per-class p50/p99 in
+        # throughput() and the router's SLO tracker.  ITL samples are
+        # *service-time* gaps: this engine's cumulative step seconds
+        # between a stream's consecutive tokens — the token cadence a
+        # dedicated-device replica delivers.  Wall gaps would charge a
+        # replica for its co-tenants whenever several replicas
+        # time-share one test device; TTFT stays wall-clock (queue
+        # wait is real service latency).
+        self.class_itl: dict[str, deque] = {
+            p: deque(maxlen=stats_window) for p in PRIORITIES}
+        self.class_ttft: dict[str, deque] = {
+            p: deque(maxlen=stats_window) for p in PRIORITIES}
+        #: set (externally, by the router's SLO tracker) to trip the
+        #: load shedder one step early when the interactive ITL target
+        #: would regress; consumed and cleared by :meth:`step`
+        self.slo_pressure = False
+        #: cumulative service seconds (sum of step admit+decode+prefill
+        #: time) — the clock the class ITL rings sample against
+        self.service_s = 0.0
+        self._step_token_reqs: list = []
 
     def _supports_chunked(self) -> bool:
         return self.run.model.family in self._CHUNK_FAMILIES
+
+    def _on_device(self):
+        """Dispatch context: pin computation to this engine's device
+        (no-op when the engine is unplaced)."""
+        if self.device is None:
+            return contextlib.nullcontext()
+        return jax.default_device(self.device)
 
     # -- façade views (the pre-split engine surface) -------------------------
 
@@ -388,10 +444,16 @@ class ServeEngine:
                    self.max_seq)
 
     def _append_token(self, req: Request, tok: int, now: float) -> None:
+        # ITL is sampled at end of step against self.service_s (the
+        # step's duration is not known yet here)
+        self._step_token_reqs.append(req)
         req.output.append(tok)
         req.token_times.append(now)
         if req.first_token_time is None:
             req.first_token_time = now
+            if req.submit_time is not None:
+                self.class_ttft[req.priority].append(
+                    now - req.submit_time)
 
     def _maybe_finish(self, slot: int) -> bool:
         req = self.scheduler.active[slot]
@@ -654,8 +716,13 @@ class ServeEngine:
         pressure, admit (unless the load shedder pauses it), decode
         every live stream, then spend leftover budget on prefill
         chunks.  Returns tokens produced (decode + first tokens)."""
+        with self._on_device():
+            return self._step()
+
+    def _step(self) -> int:
         sched, pool = self.scheduler, self.pool
         self._step_idx += 1
+        self._step_token_reqs.clear()
         self.stragglers.start()
         self._expire_deadlines()
         victims = pool.pressure_victims()
@@ -699,7 +766,9 @@ class ServeEngine:
         event = self.stragglers.stop(self._step_idx)
         if self.shedder is not None:
             self.shedder.observe(bool(victims)
-                                 or sched.admit_failures > admit_fail0)
+                                 or sched.admit_failures > admit_fail0
+                                 or self.slo_pressure)
+        self.slo_pressure = False
         if record:
             self.stats.append({"live": len(live), "tokens": produced,
                                "seconds": decode_s,
@@ -712,6 +781,19 @@ class ServeEngine:
                                    sched.admit_failures - admit_fail0,
                                "shed": int(shed),
                                "straggler": int(event is not None)})
+        # service-time ITL: every non-first token produced this step
+        # samples the service seconds since the stream's previous token
+        # (usually exactly this step's duration; preemption gaps span
+        # the resume's prefill steps too)
+        self.service_s += admit_s + decode_s + prefill_s
+        key = id(self)
+        for req in self._step_token_reqs:
+            mark = req.service_mark
+            if mark is not None and mark[0] == key:
+                self.class_itl[req.priority].append(
+                    self.service_s - mark[1])
+            req.service_mark = (key, self.service_s)
+        self._step_token_reqs.clear()
         if self.debug:
             pool.check_integrity()
         return produced + first
@@ -780,38 +862,36 @@ class ServeEngine:
                     "in flight")
         return self.finished[start:]
 
+    def class_stats(self, priority: str) -> dict:
+        """Per-class p50/p99 inter-token latency + TTFT (milliseconds)
+        over the bounded sample rings, plus terminal request count."""
+        done = sum(1 for r in self.finished if r.priority == priority)
+        return latency_summary(self.class_itl[priority],
+                               self.class_ttft[priority], requests=done)
+
     def throughput(self) -> dict:
         """Aggregate serving stats over the (bounded) stats window.
         Unlike the pre-split engine, the denominator includes the time
         spent admitting/prefilling, not just decode steps — and TTFT is
-        reported from per-request timestamps."""
+        reported from per-request timestamps.
+
+        The key set is identical whether or not any productive step was
+        recorded (an idle engine reports zeros, not a narrower dict) —
+        the only conditional keys are the ``shed_*``/``degradation_*``
+        group, present iff the engine has a load shedder at all.
+        """
         stats = list(self.stats)
         status_counts: dict[str, int] = {}
         for r in self.finished:
             key = r.status or "finished"
             status_counts[key] = status_counts.get(key, 0) + 1
-        if not stats:
-            # an engine that never recorded a productive step can still
-            # have terminal requests (e.g. every admission fault-failed
-            # and the stall watchdog swept the queue)
-            return {"tokens_per_s": 0.0, "steps": 0,
-                    "status_counts": status_counts,
-                    "admit_failures": self.scheduler.admit_failures,
-                    "quarantined": self.quarantined,
-                    "deadline_expired": self.deadline_expired}
-        dec = sum(s["tokens"] for s in stats)
-        first = sum(s.get("first_tokens", 0) for s in stats)
-        dec_s = sum(s["seconds"] for s in stats)
-        pf_s = sum(s.get("prefill_seconds", 0.0) for s in stats)
-        ad_s = sum(s.get("admit_seconds", 0.0) for s in stats)
-        out = {"tokens_per_s": (dec + first) / max(dec_s + pf_s + ad_s,
-                                                   1e-9),
+        ttfts = [r.ttft for r in self.finished if r.ttft is not None]
+        out = {"tokens_per_s": 0.0,
                "steps": len(stats),
-               "mean_batch": dec / len(stats),
-               "decode_seconds": dec_s,
-               "prefill_seconds": pf_s + ad_s,
-               "prefill_tokens": sum(s.get("prefill_tokens", 0)
-                                     for s in stats),
+               "mean_batch": 0.0,
+               "decode_seconds": 0.0,
+               "prefill_seconds": 0.0,
+               "prefill_tokens": 0,
                "preemptions": self.scheduler.preemptions,
                # hardening counters
                "admit_failures": self.scheduler.admit_failures,
@@ -819,13 +899,25 @@ class ServeEngine:
                "deadline_expired": self.deadline_expired,
                "status_counts": status_counts,
                "slow_steps": len(self.stragglers.events),
-               "step_ewma_s": self.stragglers.ewma}
+               "step_ewma_s": self.stragglers.ewma,
+               "ttft_mean_s": (sum(ttfts) / len(ttfts)) if ttfts else 0.0,
+               "per_class": {p: self.class_stats(p) for p in PRIORITIES}}
         if self.shedder is not None:
             out["shed_steps"] = sum(s.get("shed", 0) for s in stats)
             out["degradation_engaged"] = self.shedder.engaged
             out["degradation_engages"] = self.shedder.engage_count
             out["degradation_recoveries"] = self.shedder.recover_count
-        ttfts = [r.ttft for r in self.finished if r.ttft is not None]
-        if ttfts:
-            out["ttft_mean_s"] = sum(ttfts) / len(ttfts)
+        if stats:
+            dec = sum(s["tokens"] for s in stats)
+            first = sum(s.get("first_tokens", 0) for s in stats)
+            dec_s = sum(s["seconds"] for s in stats)
+            pf_s = sum(s.get("prefill_seconds", 0.0) for s in stats)
+            ad_s = sum(s.get("admit_seconds", 0.0) for s in stats)
+            out["tokens_per_s"] = (dec + first) / max(dec_s + pf_s + ad_s,
+                                                      1e-9)
+            out["mean_batch"] = dec / len(stats)
+            out["decode_seconds"] = dec_s
+            out["prefill_seconds"] = pf_s + ad_s
+            out["prefill_tokens"] = sum(s.get("prefill_tokens", 0)
+                                        for s in stats)
         return out

@@ -134,6 +134,21 @@ class FaultInjector:
             self.fired[point] += 1
         return hit
 
+    def split(self, tag: str) -> "FaultInjector":
+        """Derive an independent injector with the same spec: streams
+        keyed ``(seed, tag, point)``, so one shared chaos spec drives a
+        whole replica fleet with per-replica-deterministic firing —
+        replica i's consultations never shift replica j's pattern, and
+        the parent's own streams stay untouched (the default
+        ``(seed, point)`` keying is unchanged)."""
+        child = FaultInjector(seed=self.seed, rates=self.rates,
+                              schedule=self.schedule, params=self.params,
+                              max_fires=self.max_fires)
+        child.tag = tag
+        child._rng = {p: random.Random(f"{self.seed}/{tag}:{p}")
+                      for p in INJECTION_POINTS}
+        return child
+
     def param(self, point: str, key: str, default: Any = None) -> Any:
         return self.params.get(point, {}).get(key, default)
 

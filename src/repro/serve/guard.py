@@ -25,10 +25,13 @@ Guarantees the chaos suite pins down:
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
-__all__ = ["nonfinite_rows", "sample_and_flag"]
+__all__ = ["nonfinite_rows", "sample_and_flag", "ReplicaGuard",
+           "ReplicaGuardPolicy"]
 
 
 def nonfinite_rows(logits: jax.Array) -> jax.Array:
@@ -54,3 +57,49 @@ def sample_and_flag(key: jax.Array, logits: jax.Array,
     safe = jnp.where(temps > 0, temps, 1.0)
     sampled = jax.random.categorical(key, clean / safe[:, None], axis=-1)
     return jnp.where(temps > 0, sampled, greedy), bad
+
+
+# ---------------------------------------------------------------------------
+# Replica-level health (the per-stream watchdog's fleet twin)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ReplicaGuardPolicy:
+    """When the router pulls a whole replica out of rotation.
+
+    The per-stream watchdog above quarantines *one* poisoned request; a
+    replica that keeps producing casualties (a corrupted pool, a bad
+    device) or whose ``step`` raises outright is a fleet problem — its
+    queued work should move to healthy replicas instead of feeding a
+    failing engine."""
+    #: per-stream quarantines before the replica itself is suspect
+    max_quarantined: int = 4
+    #: uncaught ``step()`` exceptions tolerated (0 = first one trips)
+    max_step_failures: int = 0
+
+
+class ReplicaGuard:
+    """Health verdict over one replica engine.  Trips once, stays
+    tripped (re-admitting a flapping replica mid-evacuation would
+    split-brain its queue); the router guarantees at least one replica
+    always stays routable regardless of verdicts."""
+
+    def __init__(self, policy: ReplicaGuardPolicy | None = None):
+        self.policy = policy or ReplicaGuardPolicy()
+        self.step_failures = 0
+        self.last_error: BaseException | None = None
+        self.tripped: str | None = None
+
+    def record_failure(self, exc: BaseException) -> None:
+        """Count one uncaught step exception."""
+        self.step_failures += 1
+        self.last_error = exc
+
+    def healthy(self, engine) -> bool:
+        if self.tripped is not None:
+            return False
+        if self.step_failures > self.policy.max_step_failures:
+            self.tripped = "step_failures"
+        elif engine.quarantined >= max(1, self.policy.max_quarantined):
+            self.tripped = "quarantined_streams"
+        return self.tripped is None

@@ -208,6 +208,24 @@ class KVPoolManager:
     def used_bytes(self) -> int:
         return int(self.lengths.sum() * self.bytes_per_token)
 
+    def capacity_bytes(self) -> int:
+        """Bytes this pool can hold: the byte budget when one is set,
+        else the physical pool (every slot full).  0 for plans with no
+        per-position bytes (recurrent state) — callers fall back to
+        slot-count occupancy."""
+        physical = self.slots * self.max_seq * self.bytes_per_token
+        if self.byte_budget is not None:
+            return min(self.byte_budget, physical) if physical else \
+                self.byte_budget
+        return physical
+
+    def prefix_affinity(self, tokens: list[int] | None) -> int:
+        """Leading prompt tokens whose KV this pool already holds.
+        Always 0 for the slot layout (no cross-request reuse) — the
+        router's routing signal, overridden by the paged pool."""
+        del tokens
+        return 0
+
     def can_admit(self, prompt_len: int,
                   tokens: list[int] | None = None) -> bool:
         """Admission gate: does a ``prompt_len``-token stream fit the
@@ -585,6 +603,26 @@ class PagedKVPoolManager:
         """Bytes of referenced (ref > 0) physical blocks — a shared
         prefix counts once, however many streams attach to it."""
         return int(self.blocks.used_blocks() * self.bytes_per_block)
+
+    def capacity_bytes(self) -> int:
+        """Bytes this pool can hold: the byte budget when one is set,
+        else the whole physical block pool."""
+        physical = self.num_blocks * self.bytes_per_block
+        if self.byte_budget is not None:
+            return min(self.byte_budget, physical) if physical else \
+                self.byte_budget
+        return physical
+
+    def prefix_affinity(self, tokens: list[int] | None) -> int:
+        """Leading prompt tokens whose KV this pool already holds —
+        the radix prefix peek (no refcounts taken), in tokens.  The
+        router routes shared-prompt traffic to the replica where its
+        blocks already are."""
+        if not tokens:
+            return 0
+        matched = self.blocks.match_peek([int(t) for t in tokens],
+                                         max_tokens=len(tokens) - 1)
+        return len(matched) * self.block_size
 
     def can_admit(self, prompt_len: int,
                   tokens: list[int] | None = None) -> bool:

@@ -1,0 +1,547 @@
+"""ServeRouter: a data-parallel serve tier over N replica engines.
+
+Each replica is a full :class:`repro.serve.engine.ServeEngine` stack
+(Scheduler + KVPoolManager/PagedKVPoolManager + ModelRunner) pinned to
+its own :class:`jax.Device` — params and KV pool committed there, every
+step dispatched there — so replicas never contend for one device's
+compute queue.  The router owns three service-level decisions the
+single engine cannot make:
+
+**Placement** (:meth:`ServeRouter.add_request`).  New requests route by
+*least KV pressure*: each replica's score is its pool's live
+``used_bytes`` plus the projected bytes of everything queued or
+mid-prefill, over ``capacity_bytes`` (stream-count occupancy when the
+plan has no per-position bytes).  Paged layouts add *radix prefix
+affinity* first: a prompt whose leading blocks already sit in some
+replica's radix cache routes there (ties broken by pressure), so
+shared-prompt traffic lands where its KV blocks already are instead of
+re-prefilling on a cold replica.  With ``priority_aware=False`` the
+router degrades to round-robin FIFO — the priority-blind baseline the
+bench compares against.
+
+**SLO-aware admission** (:class:`SLOTracker`).  Per replica, the router
+watches the live interactive p99 inter-token latency (the engine's
+bounded per-class sample ring) against ``slo_itl_ms``.  Batch requests
+are only admitted to a replica whose interactive tail has headroom
+(``p99 <= headroom * slo`` with enough samples, hysteresis via
+:meth:`SLOTracker.observe`); otherwise they queue in the router's held
+deque and drain when a replica's interactive load clears.  A replica
+whose tail breaches the target also gets ``engine.slo_pressure`` set,
+tripping the engine's :class:`~repro.serve.scheduler.LoadShedder` one
+step early — batch load degrades before interactive tails do.  Held
+requests still honor ``deadline_s`` / ``max_queue_s`` (terminal
+``deadline_exceeded`` from the held queue).
+
+**Failure containment** (:class:`repro.serve.guard.ReplicaGuard`).  A
+replica whose ``step`` raises, or that keeps producing numerical-
+watchdog casualties, is pulled from rotation: its in-flight streams are
+preempted (requeued with their generated prefix, bit-exact under
+greedy) and its waiting queue is re-routed to healthy replicas.  At
+least one replica always stays routable.  Fault injection composes
+per-replica via :meth:`repro.serve.faults.FaultInjector.split`: one
+chaos spec, independent deterministic streams per replica.
+
+Wall-clock accounting: :meth:`step` drives every replica once (one
+*round*) and records ``max`` per-replica step seconds as the round's
+wall time — replicas are data-parallel on their own devices, so the
+service-level clock is the slowest replica, not the sum.  On a
+single-device test host the replicas time-share the device but the
+modeled ``round_seconds`` still reflects the parallel deployment; the
+per-replica engine stats keep the measured per-device seconds.
+
+Determinism: routing only picks *which* engine serves a request.
+Greedy sampling is argmax over logits of the same params on the same
+prompt, and chunked == whole prefill is bit-exact — so per-request
+token streams are identical across replica counts and routing orders
+(``tests/test_serve_router.py`` pins this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Sequence
+
+from repro.serve.engine import ServeEngine
+from repro.serve.faults import FaultInjector
+from repro.serve.guard import ReplicaGuard, ReplicaGuardPolicy
+from repro.serve.metrics import latency_summary, percentiles
+from repro.serve.scheduler import PRIORITIES, Request
+
+__all__ = ["ServeRouter", "Replica", "SLOPolicy", "SLOTracker"]
+
+
+@dataclasses.dataclass
+class SLOPolicy:
+    """Knobs of the interactive-tail admission gate.
+
+    ``slo_itl_ms`` is the target p99 inter-token latency for
+    interactive streams.  Batch traffic is admitted to a replica only
+    while that replica's interactive tail has headroom: at least
+    ``min_samples`` gap samples and ``p99 <= headroom * slo_itl_ms``
+    (an idle replica — no interactive in flight — always admits).
+    ``headroom < 1`` is the dead band that keeps admission from
+    flapping right at the target.  The p99 is computed over the last
+    ``window`` samples, not the whole ring — a single jittery step must
+    not latch the verdict for the rest of the replica's life."""
+    slo_itl_ms: float
+    headroom: float = 0.6
+    min_samples: int = 8
+    window: int = 128
+
+
+class SLOTracker:
+    """Hysteresis switch over one replica's interactive p99 ITL.
+
+    :meth:`observe` engages at ``p99 >= slo`` and only disengages once
+    the tail recovers to ``headroom * slo`` — the same dead-band
+    discipline as the :class:`~repro.serve.scheduler.LoadShedder`.
+    While engaged the router holds ALL batch admissions to the replica
+    and sets its engine's ``slo_pressure`` (early load shedding).
+    """
+
+    def __init__(self, policy: SLOPolicy):
+        self.policy = policy
+        self.engaged = False
+        self.breaches = 0
+
+    def observe(self, p99_ms: float, n_samples: int) -> bool:
+        p = self.policy
+        if n_samples >= p.min_samples:
+            if not self.engaged and p99_ms >= p.slo_itl_ms:
+                self.engaged = True
+                self.breaches += 1
+            elif self.engaged and p99_ms <= p.headroom * p.slo_itl_ms:
+                self.engaged = False
+        return self.engaged
+
+    def idle_reset(self) -> None:
+        """Stand down: the replica has no interactive work pending, so
+        there is no tail to protect — and its sample ring has frozen,
+        meaning :meth:`observe` could never see a recovery.  Not a
+        breach-count event."""
+        self.engaged = False
+
+    def batch_ok(self, p99_ms: float, n_samples: int) -> bool:
+        """May a batch request land here without regressing the
+        interactive tail?  (Callers bypass this entirely when the
+        replica has no interactive work pending — in flight or
+        waiting.)"""
+        if self.engaged:
+            return False
+        if n_samples < self.policy.min_samples:
+            # interactive in flight but tail still unmeasured: hold —
+            # the no-interactive bypass bounds how long this lasts
+            return False
+        return p99_ms <= self.policy.headroom * self.policy.slo_itl_ms
+
+
+class Replica:
+    """One engine + its routing/health bookkeeping."""
+
+    def __init__(self, index: int, engine: ServeEngine,
+                 guard: ReplicaGuard, tracker: SLOTracker | None):
+        self.index = index
+        self.engine = engine
+        self.guard = guard
+        self.tracker = tracker
+        self.routed = {p: 0 for p in PRIORITIES}
+        self.peak_used_bytes = 0
+        self.evacuated = False
+
+    @property
+    def healthy(self) -> bool:
+        return self.guard.healthy(self.engine)
+
+
+class ServeRouter:
+    def __init__(self, run, params, *, replicas: int = 2,
+                 devices: Sequence[Any] | None = None,
+                 slo_itl_ms: float | None = None,
+                 slo: SLOPolicy | None = None,
+                 priority_aware: bool = True,
+                 guard_policy: ReplicaGuardPolicy | None = None,
+                 faults: FaultInjector | None = None,
+                 seed: int = 0,
+                 stall_rounds: int = 64,
+                 batch_pressure_cap: float = 0.5,
+                 **engine_kwargs):
+        """Builds ``replicas`` engines from one ``(run, params)`` pair.
+
+        ``devices`` places replica i on ``devices[i % len(devices)]``
+        (pass ``jax.devices()`` for one replica per local device); None
+        leaves placement implicit — correct but serialized on one
+        device.  ``slo_itl_ms`` (or a full :class:`SLOPolicy` via
+        ``slo``) arms SLO-aware batch admission; None admits batch
+        purely by pressure.  ``priority_aware=False`` is the blind
+        baseline: round-robin routing, single-FIFO schedulers, no SLO
+        gate.  ``faults`` is split per replica
+        (:meth:`~repro.serve.faults.FaultInjector.split`) so one chaos
+        spec drives the fleet deterministically.
+        ``batch_pressure_cap`` balances held-back batch across the
+        fleet: when every SLO-gated replica frees up at once, batch is
+        not dumped wholesale onto the first one — a batch request whose
+        projected KV pressure would exceed the cap waits in the held
+        queue as long as some other replica (even one still gated)
+        has headroom under it.  Remaining kwargs go to every
+        :class:`~repro.serve.engine.ServeEngine` verbatim (each
+        replica seeds its PRNG with ``seed + index``)."""
+        if replicas < 1:
+            raise ValueError(f"need at least 1 replica, got {replicas}")
+        if slo is None and slo_itl_ms is not None:
+            slo = SLOPolicy(slo_itl_ms)
+        self.slo = slo if priority_aware else None
+        self.priority_aware = priority_aware
+        self.stall_rounds = max(1, stall_rounds)
+        self.batch_pressure_cap = float(batch_pressure_cap)
+        self.replicas: list[Replica] = []
+        for i in range(replicas):
+            dev = devices[i % len(devices)] if devices else None
+            inj = (faults.split(f"replica{i}")
+                   if faults is not None and faults.active else faults)
+            eng = ServeEngine(run, params, seed=seed + i, device=dev,
+                              priority_aware=priority_aware,
+                              faults=inj, **engine_kwargs)
+            tracker = SLOTracker(self.slo) if self.slo else None
+            self.replicas.append(
+                Replica(i, eng, ReplicaGuard(guard_policy), tracker))
+        #: batch requests the SLO gate is holding back from every
+        #: replica (FIFO; drained at the top of each round)
+        self.held: deque[Request] = deque()
+        #: requests that went terminal at the router (held-queue
+        #: deadline expiry) without ever reaching an engine
+        self.rejected: list[Request] = []
+        self.rounds = 0
+        #: modeled data-parallel wall clock: sum over rounds of the
+        #: slowest replica's step seconds (see module docstring)
+        self.round_seconds = 0.0
+        self.total_tokens = 0
+        self._rr = 0          # round-robin cursor (blind mode)
+
+    # -- routing -------------------------------------------------------------
+
+    def _routable(self) -> list[Replica]:
+        """Replicas in rotation.  Never empty: with every guard
+        tripped, the least-broken non-evacuated replica (fewest step
+        failures) stays routable and keeps serving — a degraded
+        service beats a deadlocked queue."""
+        healthy = [r for r in self.replicas if r.healthy]
+        if healthy:
+            return healthy
+        alive = [r for r in self.replicas if not r.evacuated] \
+            or self.replicas
+        return [min(alive, key=lambda r: r.guard.step_failures)]
+
+    def _pressure(self, rep: Replica) -> float:
+        """KV pressure score: live pool bytes plus the projected bytes
+        of queued + mid-prefill work, over pool capacity (falls back to
+        stream-count occupancy for plans with no per-position bytes)."""
+        eng = rep.engine
+        sched, pool = eng.scheduler, eng.pool
+        backlog = sum(len(r.prompt) + len(r.output) for r in sched.waiting)
+        backlog += sum(ps.remaining for ps in sched.prefilling)
+        cap = pool.capacity_bytes()
+        if cap:
+            return (pool.used_bytes()
+                    + backlog * pool.bytes_per_token) / cap
+        streams = (len(sched.live_slots()) + len(sched.prefilling)
+                   + len(sched.waiting))
+        return streams / max(pool.slots, 1)
+
+    def _projected(self, rep: Replica, req: Request) -> float:
+        """Pressure the replica would sit at with ``req``'s KV on top."""
+        pool = rep.engine.pool
+        cap = pool.capacity_bytes()
+        if not cap:
+            return self._pressure(rep)
+        need = (len(req.prompt) + req.max_new_tokens) * pool.bytes_per_token
+        return self._pressure(rep) + need / cap
+
+    def _interactive_p99(self, rep: Replica) -> tuple[float, int]:
+        ring = rep.engine.class_itl[PRIORITIES[0]]
+        window = self.slo.window if self.slo else len(ring)
+        recent = list(ring)[-max(1, window):]
+        (p99,) = percentiles([g * 1e3 for g in recent], (99,))
+        return p99, len(recent)
+
+    def _batch_ok(self, rep: Replica) -> bool:
+        if rep.tracker is None:
+            return True
+        if not rep.engine.scheduler.interactive_pending():
+            # no interactive anywhere on the replica (in flight OR
+            # waiting) — nothing to protect, admit freely
+            return True
+        p99, n = self._interactive_p99(rep)
+        return rep.tracker.batch_ok(p99, n)
+
+    def _pick(self, req: Request) -> Replica | None:
+        """The replica this request should land on, or None when every
+        routable replica's SLO gate is holding batch back."""
+        pool_ = self._routable()
+        if not self.priority_aware:
+            rep = pool_[self._rr % len(pool_)]
+            self._rr += 1
+            return rep
+        batch = req.priority != PRIORITIES[0]
+        if batch and self.slo is not None:
+            gated = [r for r in pool_ if not self._batch_ok(r)]
+            pool_ = [r for r in pool_ if self._batch_ok(r)]
+            if not pool_:
+                return None
+            # pressure-cap balance: when one replica frees up first,
+            # don't dump the whole held queue on it — wait for a gated
+            # replica that would still have headroom under the cap
+            fits = [r for r in pool_
+                    if self._projected(r, req) <= self.batch_pressure_cap]
+            if not fits and any(
+                    self._projected(r, req) <= self.batch_pressure_cap
+                    for r in gated):
+                return None
+            if fits:
+                pool_ = fits
+        # radix prefix affinity first (paged pools; 0 on slot pools):
+        # land where the prompt's blocks already are
+        aff = [(r, r.engine.pool.prefix_affinity(req.prompt))
+               for r in pool_]
+        best = max(a for _, a in aff)
+        if best > 0:
+            pool_ = [r for r, a in aff if a == best]
+        return min(pool_, key=self._pressure)
+
+    def _submit(self, rep: Replica, req: Request) -> None:
+        rep.engine.add_request(req)
+        rep.routed[req.priority] += 1
+
+    def add_request(self, req: Request) -> None:
+        """Route one request (stamping ``submit_time`` now — held time
+        counts against TTFT and queue deadlines)."""
+        if req.priority not in PRIORITIES:
+            raise ValueError(f"unknown priority {req.priority!r} "
+                             f"(want one of {PRIORITIES})")
+        if req.submit_time is None:
+            req.submit_time = time.perf_counter()
+        rep = self._pick(req)
+        if rep is None:
+            self.held.append(req)
+            return
+        self._submit(rep, req)
+
+    # -- held-queue maintenance ---------------------------------------------
+
+    def _expire_held(self) -> None:
+        now = time.perf_counter()
+        for req in list(self.held):
+            over = any(
+                budget is not None and req.submit_time is not None
+                and now - req.submit_time > budget
+                for budget in (req.deadline_s, req.max_queue_s))
+            if over:
+                self.held.remove(req)
+                req.status = "deadline_exceeded"
+                req.done = True
+                self.rejected.append(req)
+
+    def _drain_held(self) -> None:
+        while self.held:
+            rep = self._pick(self.held[0])     # FIFO — head blocks
+            if rep is None:
+                break
+            self._submit(rep, self.held.popleft())
+
+    # -- replica failure -----------------------------------------------------
+
+    def _evacuate(self, rep: Replica) -> None:
+        """Pull a tripped replica's work: preempt in-flight streams
+        (they requeue holding their generated prefix — greedy-exact on
+        resume) and re-route its whole waiting queue.  Nothing is
+        published to the failed replica's radix."""
+        if rep.evacuated:
+            return
+        rep.evacuated = True
+        eng = rep.engine
+        sched, pool = eng.scheduler, eng.pool
+        for slot in list(sched.live_slots()):
+            sched.preempt(slot)
+            pool.release(slot, publish=False)
+        for ps in list(sched.prefilling):
+            sched.preempt(ps.slot)
+            pool.release(ps.slot, publish=False)
+        moved: list[Request] = []
+        while sched.waiting:
+            moved.append(sched.waiting.popleft())
+        for req in moved:
+            if req.done:        # retry budget spent mid-preempt
+                continue
+            target = self._pick(req)
+            if target is None:
+                self.held.append(req)
+            else:
+                self._submit(target, req)
+
+    # -- the round loop ------------------------------------------------------
+
+    def step(self) -> int:
+        """One *round*: drain/expire the held queue, step every routable
+        busy replica once, update SLO trackers and health verdicts.
+        Returns tokens produced across the fleet; wall clock advances
+        by the slowest replica's step time (data-parallel model)."""
+        self.rounds += 1
+        self._expire_held()
+        self._drain_held()
+        routable = self._routable()
+        produced = 0
+        round_s = 0.0
+        for rep in self.replicas:
+            if rep not in routable:
+                # out of rotation: move its work to replicas that are
+                # (no-op if already evacuated); unhealthiness detected
+                # after this round's step is handled next round
+                self._evacuate(rep)
+                continue
+            eng = rep.engine
+            if not eng.scheduler.busy():
+                continue
+            t0 = time.perf_counter()
+            try:
+                produced += eng.step()
+            except Exception as exc:  # noqa: BLE001 — contain, re-route
+                rep.guard.record_failure(exc)
+                continue
+            round_s = max(round_s, time.perf_counter() - t0)
+            self._observe(rep)
+        self.total_tokens += produced
+        self.round_seconds += round_s
+        return produced
+
+    def _observe(self, rep: Replica) -> None:
+        rep.peak_used_bytes = max(rep.peak_used_bytes,
+                                  rep.engine.pool.used_bytes())
+        if rep.tracker is None:
+            return
+        if not rep.engine.scheduler.interactive_pending():
+            # nothing to protect, and the interactive ring has frozen —
+            # a stale engaged verdict would shed batch forever
+            rep.tracker.idle_reset()
+            return
+        p99, n = self._interactive_p99(rep)
+        if (rep.tracker.observe(p99, n)
+                and rep.engine.scheduler.batch_pending()):
+            # tail breached AND the replica has batch load to shed:
+            # trip the engine's shedder one step before its own
+            # pressure signals would (shedding a pure-interactive
+            # replica would only slow the tail it protects)
+            rep.engine.slo_pressure = True
+
+    def busy(self) -> bool:
+        return bool(self.held) or any(
+            r.engine.scheduler.busy() for r in self.replicas
+            if not r.evacuated)
+
+    def finished(self) -> list[Request]:
+        """Every terminal request, engine order then router-rejected."""
+        out = [r for rep in self.replicas for r in rep.engine.finished]
+        out.extend(self.rejected)
+        return out
+
+    def run_until_done(self, max_rounds: int = 10_000) -> list[Request]:
+        """Drive rounds until every queue drains.  The same watchdogs
+        as the engine loop: ``stall_rounds`` rounds of zero progress
+        fail the survivors fleet-wide, and exhausting ``max_rounds``
+        with work in flight raises."""
+        start = len(self.finished())
+        stalled = 0
+        for _ in range(max_rounds):
+            if not self.busy():
+                break
+            fin0 = len(self.finished())
+            produced = self.step()
+            progressed = produced > 0 or len(self.finished()) > fin0
+            stalled = 0 if progressed else stalled + 1
+            if stalled >= self.stall_rounds:
+                for rep in self.replicas:
+                    rep.engine._fail_survivors()
+                while self.held:
+                    req = self.held.popleft()
+                    req.status = "failed"
+                    req.done = True
+                    self.rejected.append(req)
+                break
+        else:
+            if self.busy():
+                raise RuntimeError(
+                    f"run_until_done: {max_rounds} rounds exhausted "
+                    f"with {len(self.held)} held and "
+                    f"{sum(r.engine.scheduler.busy() for r in self.replicas)}"
+                    " busy replicas")
+        return self.finished()[start:]
+
+    # -- service-level stats -------------------------------------------------
+
+    def set_slo(self, slo_itl_ms: float) -> None:
+        """(Re)arm the SLO gate — e.g. after calibrating the target
+        from a measured interactive-only baseline."""
+        self.slo = SLOPolicy(slo_itl_ms) if self.priority_aware else None
+        for rep in self.replicas:
+            rep.tracker = SLOTracker(self.slo) if self.slo else None
+
+    def reset_stats(self) -> None:
+        """Zero every latency/throughput counter fleet-wide (keeps
+        pools, params, and compiled functions — benches warm up, reset,
+        then measure)."""
+        self.rounds = 0
+        self.round_seconds = 0.0
+        self.total_tokens = 0
+        for rep in self.replicas:
+            eng = rep.engine
+            eng.stats.clear()
+            for ring in (*eng.class_itl.values(),
+                         *eng.class_ttft.values()):
+                ring.clear()
+            rep.peak_used_bytes = 0
+            rep.routed = {p: 0 for p in PRIORITIES}
+            if rep.tracker is not None:
+                rep.tracker = SLOTracker(self.slo)
+
+    def class_stats(self, priority: str) -> dict:
+        """Fleet-wide per-class p50/p99 ITL + TTFT over every replica's
+        sample rings."""
+        itl = [g for rep in self.replicas
+               for g in rep.engine.class_itl[priority]]
+        ttft = [t for rep in self.replicas
+                for t in rep.engine.class_ttft[priority]]
+        done = sum(1 for r in self.finished() if r.priority == priority)
+        return latency_summary(itl, ttft, requests=done)
+
+    def throughput(self) -> dict:
+        """Service-level stats: modeled data-parallel tokens/s (tokens
+        over max-per-round wall — replicas run concurrently on their
+        own devices), fleet per-class latency, and per-replica detail
+        (each engine's own ``throughput()`` plus routing/health/SLO
+        counters)."""
+        per = []
+        for rep in self.replicas:
+            d = rep.engine.throughput()
+            d["replica"] = rep.index
+            d["routed"] = dict(rep.routed)
+            d["kv_peak_bytes"] = rep.peak_used_bytes
+            d["kv_capacity_bytes"] = rep.engine.pool.capacity_bytes()
+            d["healthy"] = rep.healthy
+            d["tripped"] = rep.guard.tripped
+            d["slo_engaged"] = (rep.tracker.engaged
+                                if rep.tracker else False)
+            d["slo_breaches"] = (rep.tracker.breaches
+                                 if rep.tracker else 0)
+            per.append(d)
+        return {
+            "replicas": len(self.replicas),
+            "rounds": self.rounds,
+            "tokens": self.total_tokens,
+            "round_seconds": self.round_seconds,
+            "tokens_per_s": self.total_tokens / max(self.round_seconds,
+                                                    1e-9),
+            "held_batch": len(self.held),
+            "rejected": len(self.rejected),
+            "slo_itl_ms": self.slo.slo_itl_ms if self.slo else None,
+            "per_class": {p: self.class_stats(p) for p in PRIORITIES},
+            "per_replica": per,
+        }

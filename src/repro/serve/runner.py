@@ -47,8 +47,15 @@ SEG_KINDS = ("decode", "prefill_chunk", "prefill")
 class ModelRunner:
     def __init__(self, model, params: PyTree, opts, *, max_seq: int,
                  kv_quantize: str | None = None, act_quantize: str | None = None,
-                 paged=None, faults=None):
+                 paged=None, faults=None, device=None):
         self.model = model
+        #: the replica's :class:`jax.Device`, or None for implicit
+        #: placement.  Params are committed there, so every jitted step
+        #: dispatches on it — data-parallel replicas never contend for
+        #: one device's queue.
+        self.device = device
+        if device is not None:
+            params = jax.device_put(params, device)
         self.params = params
         self.opts = opts
         self.max_seq = max_seq
@@ -108,8 +115,11 @@ class ModelRunner:
         dtype — chunk attention then runs over the exact K/V prefix, so
         chunked greedy == whole-prefill greedy bit-for-bit, and the pool
         quantizes once at slot insert."""
-        return self.model.init_cache(1, self.max_seq,
-                                     kv_quantize=kv_quantize)
+        cache1 = self.model.init_cache(1, self.max_seq,
+                                       kv_quantize=kv_quantize)
+        if self.device is not None:
+            cache1 = jax.device_put(cache1, self.device)
+        return cache1
 
     def step(self, tokens: jax.Array, positions: jax.Array | None,
              seg_kind: str, *, cache: PyTree,

@@ -8,9 +8,12 @@ One engine step is one *step plan* filled against ``step_token_budget``:
    its generated prefix: on readmission it prefills
    ``prompt + output`` and keeps decoding — bit-exact under greedy
    sampling because chunked prefill == whole prefill == decode.
-2. **Admit** — waiting requests (FIFO ``deque``) take free slots while
-   the pool's byte budget allows.  Admission only *starts* a prefill
-   stream; there is no blocking whole-prompt prefill on this path.
+2. **Admit** — waiting requests take free slots while the pool's byte
+   budget allows.  The queue is a :class:`ClassedQueue`: FIFO within a
+   priority class, ``interactive`` ahead of ``batch`` across classes
+   (pure submission-order FIFO when ``priority_aware=False``).
+   Admission only *starts* a prefill stream; there is no blocking
+   whole-prompt prefill on this path.
 3. **Decode first** — every live stream decodes one token per step,
    unconditionally.  A long prompt can never head-of-line-block live
    decode streams.
@@ -57,6 +60,11 @@ PREFILL_BUCKET_MIN = 8
 STATUSES = ("finished", "cancelled", "deadline_exceeded", "failed",
             "dropped")
 
+#: request priority classes, highest first.  ``interactive`` streams
+#: are admitted and chunk-planned ahead of ``batch`` at every decision
+#: point; ``batch`` fills whatever budget is left.
+PRIORITIES = ("interactive", "batch")
+
 
 @dataclasses.dataclass
 class Request:
@@ -74,6 +82,9 @@ class Request:
     #: preemption-retry budget: one more eviction than this terminates
     #: the request ``dropped``
     max_preemptions: int = 8
+    #: one of :data:`PRIORITIES` — interactive streams decode/admit
+    #: first, batch fills residual budget
+    priority: str = "interactive"
     # filled by the engine:
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
@@ -84,6 +95,10 @@ class Request:
     first_token_time: float | None = None
     token_times: list[float] = dataclasses.field(default_factory=list)
     preemptions: int = 0
+    #: ``(engine key, engine service seconds at last token)`` — the
+    #: engine's service-time ITL accounting; the key guards against a
+    #: stale mark after an evacuation re-routes the request
+    service_mark: tuple[int, float] | None = None
 
     @property
     def ttft(self) -> float | None:
@@ -108,15 +123,88 @@ class PrefillStream:
         return len(self.tokens) - self.written
 
 
+class ClassedQueue:
+    """Per-priority-class waiting queues behind the old single-deque
+    surface.
+
+    Iteration/peek/popleft order is *interactive first, FIFO within
+    class* when ``aware`` (the default), or pure submission-order FIFO
+    when priority-blind (the baseline the router bench compares
+    against).  Every deque operation the engine performs on
+    ``Scheduler.waiting`` — truthiness, ``len``, iteration, ``remove``,
+    ``append``/``appendleft``/``popleft``, head peek — works unchanged,
+    so all existing single-class behavior is bit-identical (a lone
+    class is just a lone deque).
+    """
+
+    def __init__(self, aware: bool = True):
+        self.aware = aware
+        self.by_class: dict[str, deque[Request]] = (
+            {p: deque() for p in PRIORITIES} if aware
+            else {PRIORITIES[0]: deque()})
+
+    def _cls(self, req: Request) -> str:
+        return req.priority if self.aware else PRIORITIES[0]
+
+    def append(self, req: Request) -> None:
+        self.by_class[self._cls(req)].append(req)
+
+    def appendleft(self, req: Request) -> None:
+        self.by_class[self._cls(req)].appendleft(req)
+
+    def popleft(self) -> Request:
+        for q in self.by_class.values():
+            if q:
+                return q.popleft()
+        raise IndexError("pop from an empty ClassedQueue")
+
+    def remove(self, req: Request) -> None:
+        self.by_class[self._cls(req)].remove(req)
+
+    def count(self, priority: str) -> int:
+        if not self.aware:
+            return sum(1 for r in self.by_class[PRIORITIES[0]]
+                       if r.priority == priority)
+        return len(self.by_class[priority])
+
+    def __iter__(self):
+        for q in self.by_class.values():
+            yield from q
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self.by_class.values())
+
+    def __bool__(self) -> bool:
+        return any(self.by_class.values())
+
+    def __getitem__(self, i: int):
+        if i == 0:          # head peek — the only index the engine uses
+            for q in self.by_class.values():
+                if q:
+                    return q[0]
+            raise IndexError("peek at an empty ClassedQueue")
+        return list(self)[i]
+
+
 class Scheduler:
     """Request lifecycle + per-step segment planning."""
 
     def __init__(self, slots: int, *, prefill_chunk: int,
-                 step_token_budget: int):
+                 step_token_budget: int, priority_aware: bool = True,
+                 batch_share: float = 1.0):
         self.slots = slots
         self.prefill_chunk = max(1, prefill_chunk)
         self.step_token_budget = max(1, step_token_budget)
-        self.waiting: deque[Request] = deque()
+        #: honor :attr:`Request.priority` in queueing and planning;
+        #: ``False`` degrades to the old single-FIFO behavior (the
+        #: priority-blind baseline)
+        self.priority_aware = priority_aware
+        #: fraction of the per-step prefill quota that ``batch``
+        #: prefill segments may take *while interactive work is in
+        #: flight* (1.0 = no throttle; batch always gets the full
+        #: residual quota once interactive traffic drains)
+        self.batch_share = min(max(float(batch_share), 0.0), 1.0)
+        self.waiting = ClassedQueue(priority_aware)
         self.prefilling: list[PrefillStream] = []
         self.active: list[Request | None] = [None] * slots
         self.finished: list[Request] = []
@@ -129,6 +217,9 @@ class Scheduler:
     # -- lifecycle ----------------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        if req.priority not in PRIORITIES:
+            raise ValueError(f"unknown priority {req.priority!r} "
+                             f"(want one of {PRIORITIES})")
         self.waiting.append(req)
 
     def terminal(self, req: Request, status: str) -> Request:
@@ -148,6 +239,35 @@ class Scheduler:
     def busy(self) -> bool:
         return bool(self.waiting or self.prefilling
                     or any(r is not None for r in self.active))
+
+    def interactive_inflight(self) -> bool:
+        """Any interactive stream currently decoding or prefilling?
+        (Waiting does not count — an unadmitted request has no tail to
+        protect yet.)"""
+        return (any(r is not None and r.priority == PRIORITIES[0]
+                    for r in self.active)
+                or any(ps.req.priority == PRIORITIES[0]
+                       for ps in self.prefilling))
+
+    def interactive_pending(self) -> bool:
+        """Any interactive work at all — in flight *or* still waiting?
+        The router's SLO gate uses this: a batch request admitted while
+        interactive requests sit unadmitted would steal their slots and
+        prefill budget before the tail is even measurable."""
+        return (self.interactive_inflight()
+                or self.waiting.count(PRIORITIES[0]) > 0)
+
+    def batch_pending(self) -> bool:
+        """Any batch work in flight or waiting?  The router only
+        asserts ``slo_pressure`` (early load shedding) on a replica
+        that actually has batch load to shed — shedding a
+        pure-interactive replica could only hurt the tail it is meant
+        to protect."""
+        batch = PRIORITIES[1]
+        return (any(r is not None and r.priority == batch
+                    for r in self.active)
+                or any(ps.req.priority == batch for ps in self.prefilling)
+                or self.waiting.count(batch) > 0)
 
     def live_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.active) if r is not None]
@@ -244,17 +364,59 @@ class Scheduler:
 
     def chunk_plan(self, n_live: int) -> list[tuple[PrefillStream, int]]:
         """(stream, real-token chunk length) segments for this step,
-        oldest prefilling stream first, until the quota is spent."""
+        oldest prefilling stream first, until the quota is spent.
+
+        When :attr:`priority_aware`, interactive streams plan ahead of
+        batch regardless of admission order, and — while interactive
+        work is in flight — batch segments are additionally capped to
+        ``batch_share`` of the quota (interactive prefill takes the
+        rest; batch gets the full quota back once interactive drains).
+        Progress is guaranteed: with nothing decoding, at least one
+        stream always gets a non-empty segment, share-capped or not.
+
+        Non-final segments are always exactly :attr:`prefill_chunk`
+        real tokens: a runt segment (leftover quota smaller than the
+        chunk) would be a fresh compile shape per distinct residual —
+        several streams splitting one step's quota used to generate
+        3-token prefill launches whose first-time compiles dwarfed the
+        tokens they carried.  A stream whose turn only has runt quota
+        left simply waits for the next step; final chunks stay
+        arbitrary-length (the engine buckets them to a bounded shape
+        set).
+        """
         quota = self.prefill_quota(n_live)
+        streams = self.prefilling
+        batch_quota = quota
+        if self.priority_aware:
+            first = [ps for ps in self.prefilling
+                     if ps.req.priority == PRIORITIES[0]]
+            rest = [ps for ps in self.prefilling
+                    if ps.req.priority != PRIORITIES[0]]
+            streams = first + rest
+            if self.batch_share < 1.0 and self.interactive_inflight():
+                batch_quota = int(quota * self.batch_share)
         plan: list[tuple[PrefillStream, int]] = []
-        for ps in self.prefilling:
+        for ps in streams:
             if quota <= 0:
                 break
             c = min(self.prefill_chunk, quota, ps.remaining)
+            if self.priority_aware and ps.req.priority != PRIORITIES[0]:
+                c = min(c, batch_quota)
             if c <= 0:
                 continue
+            if c < self.prefill_chunk and c < ps.remaining:
+                continue    # runt non-final segment — wait a step
             plan.append((ps, c))
             quota -= c
+            if self.priority_aware and ps.req.priority != PRIORITIES[0]:
+                batch_quota -= c
+        if not plan and self.prefilling and n_live == 0:
+            # every stream was share-capped to zero and nothing is
+            # decoding: force one segment so the queue can never stall
+            ps = self.prefilling[0]
+            c = min(self.prefill_chunk, max(quota, 1), ps.remaining)
+            if c > 0:
+                plan.append((ps, c))
         return plan
 
 

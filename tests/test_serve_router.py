@@ -1,0 +1,436 @@
+"""Multi-replica serve tier: routing, priority classes, SLO admission.
+
+The load-bearing invariants:
+
+* routing only picks *which* engine serves a request — greedy token
+  streams are bit-identical across replica counts (1 vs 2 replicas,
+  and vs a bare engine);
+* priority classes order work end to end: the classed queue pops
+  interactive first, the chunk plan places interactive segments ahead
+  of batch and share-caps batch while interactive is in flight;
+* non-final prefill segments are always exactly ``prefill_chunk`` real
+  tokens (no runt compile shapes), except the guaranteed-progress
+  fallback when nothing is decoding;
+* the SLO gate holds batch from replicas whose interactive tail is
+  unmeasured or breached, and stands down when there is nothing left
+  to protect;
+* one chaos spec splits into per-replica-deterministic injectors;
+* a replica whose ``step`` raises is pulled from rotation and its work
+  finishes elsewhere;
+* per-class ITL samples are *service-time* (the owning engine's step
+  seconds), so one replica's heavy step never contaminates another's
+  measured tail.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import ParallelConfig, RunConfig
+from repro.models.api import get_model
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.faults import FaultInjector
+from repro.serve.router import ServeRouter, SLOPolicy, SLOTracker
+from repro.serve.scheduler import ClassedQueue, PrefillStream, \
+    PRIORITIES, Scheduler
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # f32 model dtype: the determinism tests compare full token
+    # streams, so near-tied bf16 argmaxes must not inject flakiness.
+    cfg = dataclasses.replace(registry.get("llama3.2-1b").smoke,
+                              dtype="float32")
+    run = RunConfig(model=cfg, parallel=ParallelConfig())
+    params, _ = get_model(cfg).init(jax.random.PRNGKey(0))
+    return run, params
+
+
+def _router(run, params, **kw):
+    kw.setdefault("replicas", 2)
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_seq", 64)
+    return ServeRouter(run, params, **kw)
+
+
+def _reqs(prompts, n=6, priority=None):
+    classes = list(PRIORITIES)
+    return [Request(uid=i, prompt=list(p), max_new_tokens=n,
+                    priority=priority or classes[i % 2])
+            for i, p in enumerate(prompts)]
+
+
+PROMPTS = [[1, 2, 3], [4, 5], [6, 7, 8, 9], [10], [11, 12, 13],
+           [14, 15]]
+
+
+# ---------------------------------------------------------------------------
+# ClassedQueue / chunk_plan units (no model)
+# ---------------------------------------------------------------------------
+
+class TestClassedQueue:
+    def test_interactive_pops_first(self):
+        q = ClassedQueue(aware=True)
+        b = Request(uid=0, prompt=[1], priority="batch")
+        i = Request(uid=1, prompt=[2], priority="interactive")
+        q.append(b)
+        q.append(i)
+        assert q.popleft() is i
+        assert q.popleft() is b
+
+    def test_blind_is_fifo(self):
+        q = ClassedQueue(aware=False)
+        b = Request(uid=0, prompt=[1], priority="batch")
+        i = Request(uid=1, prompt=[2], priority="interactive")
+        q.append(b)
+        q.append(i)
+        assert q.popleft() is b
+
+    def test_count_and_remove(self):
+        q = ClassedQueue(aware=True)
+        reqs = _reqs(PROMPTS[:4])
+        for r in reqs:
+            q.append(r)
+        assert q.count("interactive") == 2 and q.count("batch") == 2
+        q.remove(reqs[0])
+        assert q.count("interactive") == 1 and len(q) == 3
+
+
+class TestChunkPlan:
+    def _sched(self, **kw):
+        kw.setdefault("prefill_chunk", 8)
+        kw.setdefault("step_token_budget", 24)
+        return Scheduler(2, **kw)
+
+    def _stream(self, uid, n, priority, slot=0):
+        req = Request(uid=uid, prompt=list(range(1, n + 1)),
+                      priority=priority)
+        return PrefillStream(req=req, slot=slot, tokens=req.prompt)
+
+    def test_interactive_plans_first(self):
+        s = self._sched()
+        s.prefilling = [self._stream(0, 16, "batch", 0),
+                        self._stream(1, 16, "interactive", 1)]
+        plan = s.chunk_plan(n_live=0)
+        assert plan[0][0].req.priority == "interactive"
+
+    def test_batch_share_caps_batch_segments(self):
+        s = self._sched(batch_share=0.25)   # 24-token quota -> 6 batch
+        s.prefilling = [self._stream(0, 32, "interactive", 0),
+                        self._stream(1, 32, "batch", 1)]
+        s.active = [s.prefilling[0].req, None]   # interactive in flight
+        plan = s.chunk_plan(n_live=1)
+        batch_tok = sum(c for ps, c in plan
+                        if ps.req.priority == "batch")
+        assert batch_tok <= int(s.prefill_quota(1) * 0.25)
+
+    def test_runt_nonfinal_segment_waits(self):
+        # 20-token quota, streams A/B take a full chunk each; the 4
+        # leftover would be a runt NON-final segment for C (24 left) —
+        # C waits instead of compiling a fresh 4-token shape.
+        s = self._sched(prefill_chunk=8, step_token_budget=20)
+        a = self._stream(0, 16, "interactive", 0)
+        b = self._stream(1, 16, "interactive", 1)
+        c_ = self._stream(2, 24, "interactive", 0)
+        s.prefilling = [a, b, c_]
+        plan = s.chunk_plan(n_live=0)
+        assert plan == [(a, 8), (b, 8)]       # no 4-token runt for C
+
+    def test_final_runt_is_allowed(self):
+        s = self._sched(prefill_chunk=8, step_token_budget=24)
+        a = self._stream(0, 11, "interactive", 0)   # 8, then final 3
+        s.prefilling = [a]
+        assert [c for _, c in s.chunk_plan(n_live=0)] == [8]
+        a.written = 8
+        assert [c for _, c in s.chunk_plan(n_live=0)] == [3]
+
+    def test_progress_guaranteed_when_idle(self):
+        # nothing decoding + share-capped to zero: one segment anyway
+        s = self._sched(batch_share=0.0)
+        s.prefilling = [self._stream(0, 16, "batch", 0)]
+        assert s.chunk_plan(n_live=0)
+
+
+# ---------------------------------------------------------------------------
+# SLOTracker / FaultInjector.split units (no model)
+# ---------------------------------------------------------------------------
+
+class TestSLOTracker:
+    def test_hysteresis(self):
+        t = SLOTracker(SLOPolicy(slo_itl_ms=10.0, headroom=0.5,
+                                 min_samples=4))
+        assert not t.observe(20.0, 2)          # too few samples
+        assert t.observe(20.0, 8)              # breach -> engaged
+        assert t.breaches == 1
+        assert t.observe(7.0, 8)               # inside dead band: held
+        assert not t.observe(4.0, 8)           # recovered below 5.0
+        assert t.breaches == 1
+
+    def test_idle_reset_stands_down(self):
+        t = SLOTracker(SLOPolicy(slo_itl_ms=10.0))
+        t.observe(100.0, 64)
+        assert t.engaged
+        t.idle_reset()
+        assert not t.engaged and t.breaches == 1
+
+    def test_batch_ok_requires_measured_tail(self):
+        t = SLOTracker(SLOPolicy(slo_itl_ms=10.0, headroom=0.6,
+                                 min_samples=8))
+        assert not t.batch_ok(1.0, 4)          # unmeasured: hold
+        assert t.batch_ok(5.0, 8)              # under headroom * slo
+        assert not t.batch_ok(7.0, 8)          # dead band
+
+
+class TestFaultSplit:
+    SPEC = dict(seed=3, rates={"pool_alloc": 0.5},
+                max_fires={"pool_alloc": 100})
+
+    def _seq(self, inj, n=32):
+        return [inj.fire("pool_alloc") for _ in range(n)]
+
+    def test_same_tag_is_deterministic(self):
+        a = FaultInjector(**self.SPEC).split("replica0")
+        b = FaultInjector(**self.SPEC).split("replica0")
+        assert self._seq(a) == self._seq(b)
+
+    def test_tags_are_independent_and_parent_untouched(self):
+        parent = FaultInjector(**self.SPEC)
+        base = self._seq(FaultInjector(**self.SPEC))
+        s0 = self._seq(parent.split("replica0"))
+        s1 = self._seq(parent.split("replica1"))
+        assert s0 != s1
+        assert parent.fired["pool_alloc"] == 0
+        # the parent's own (seed, point) stream is unchanged by splits
+        assert self._seq(parent) == base
+
+
+# ---------------------------------------------------------------------------
+# Routing behavior
+# ---------------------------------------------------------------------------
+
+class TestRouting:
+    def test_unknown_priority_rejected(self, setup):
+        run, params = setup
+        router = _router(run, params)
+        with pytest.raises(ValueError, match="priority"):
+            router.add_request(Request(uid=0, prompt=[1],
+                                       priority="realtime"))
+
+    def test_least_pressure_spreads_load(self, setup):
+        run, params = setup
+        router = _router(run, params)
+        for r in _reqs(PROMPTS[:4], priority="interactive"):
+            router.add_request(r)
+        routed = [rep.routed["interactive"] for rep in router.replicas]
+        assert sorted(routed) == [2, 2]
+
+    def test_blind_round_robin(self, setup):
+        run, params = setup
+        router = _router(run, params, priority_aware=False)
+        for r in _reqs(PROMPTS[:4]):
+            router.add_request(r)
+        assert [sum(rep.routed.values()) for rep in router.replicas] \
+            == [2, 2]
+
+    def test_slo_gate_holds_batch_until_tail_measured(self, setup):
+        run, params = setup
+        router = _router(run, params, slo_itl_ms=50.0)
+        for r in _reqs(PROMPTS[:4], priority="interactive"):
+            router.add_request(r)
+        held = Request(uid=9, prompt=[7, 8], max_new_tokens=4,
+                       priority="batch")
+        router.add_request(held)
+        # every replica has interactive pending and an unmeasured tail
+        assert list(router.held) == [held]
+        done = router.run_until_done()
+        assert held in done and held.status == "finished"
+        assert router.throughput()["held_batch"] == 0
+
+    def test_batch_pressure_cap_balances_held_drain(self, setup):
+        run, params = setup
+        router = _router(run, params, slo_itl_ms=50.0,
+                         batch_pressure_cap=0.5)
+        free, gated = router.replicas
+        # `free` is over the cap with batch; `gated` holds interactive
+        # (unmeasured tail -> SLO gate) but has headroom under the cap
+        router._submit(free, Request(uid=0, prompt=[1] * 50,
+                                     max_new_tokens=8,
+                                     priority="batch"))
+        router._submit(gated, Request(uid=1, prompt=[2, 3],
+                                      max_new_tokens=4,
+                                      priority="interactive"))
+        probe = Request(uid=2, prompt=[4] * 8, max_new_tokens=8,
+                        priority="batch")
+        assert router._projected(free, probe) > 0.5
+        assert router._projected(gated, probe) <= 0.5
+        assert router._pick(probe) is None     # wait for `gated`
+        done = [r.uid for r in router.run_until_done()]
+        assert set(done) == {0, 1}
+
+    def test_prefix_affinity_routes_to_warm_replica(self, setup):
+        run, params = setup
+        router = _router(run, params, kv_layout="paged")
+        shared = list(range(1, 21))            # > one 16-token block
+        first = Request(uid=0, prompt=shared + [30], max_new_tokens=4)
+        router.add_request(first)
+        router.run_until_done()
+        warm = [rep for rep in router.replicas
+                if rep.engine.pool.prefix_affinity(shared) > 0]
+        assert len(warm) == 1
+        before = warm[0].routed["interactive"]
+        router.add_request(Request(uid=1, prompt=shared + [31],
+                                   max_new_tokens=4))
+        assert warm[0].routed["interactive"] == before + 1
+
+
+# ---------------------------------------------------------------------------
+# Failure containment
+# ---------------------------------------------------------------------------
+
+class TestEvacuation:
+    def test_failed_replica_work_finishes_elsewhere(self, setup):
+        run, params = setup
+        router = _router(run, params)
+        reqs = _reqs(PROMPTS[:4], n=4, priority="interactive")
+        for r in reqs:
+            router.add_request(r)
+        victim = router.replicas[0]
+        victim.engine.step = lambda: (_ for _ in ()).throw(
+            RuntimeError("injected device loss"))
+        done = router.run_until_done()
+        assert victim.guard.tripped == "step_failures"
+        assert victim.evacuated
+        assert {r.uid for r in done} == {r.uid for r in reqs}
+        assert all(r.status == "finished" for r in reqs)
+        assert router.replicas[1].routed["interactive"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Service-time ITL + stats parity
+# ---------------------------------------------------------------------------
+
+class TestServiceTimeITL:
+    def test_itl_samples_are_engine_service_seconds(self, setup):
+        run, params = setup
+        eng = ServeEngine(run, params, slots=2, max_seq=64)
+        reqs = _reqs(PROMPTS[:2], n=5, priority="interactive")
+        for r in reqs:
+            eng.add_request(r)
+        eng.run_until_done()
+        ring = eng.class_itl["interactive"]
+        # first token per request sets the mark without a sample
+        assert len(ring) == sum(len(r.output) for r in reqs) - len(reqs)
+        assert all(g >= 0.0 for g in ring)
+        # samples are deltas of one monotone service clock, so any
+        # single gap is bounded by the engine's total service seconds
+        assert max(ring) <= eng.service_s
+        for r in reqs:
+            key, mark = r.service_mark
+            assert key == id(eng) and 0.0 < mark <= eng.service_s
+
+    def test_fleet_throughput_key_parity(self, setup):
+        run, params = setup
+        router = _router(run, params, slo_itl_ms=50.0)
+        empty = router.throughput()
+        for r in _reqs(PROMPTS[:4], n=4):
+            router.add_request(r)
+        router.run_until_done()
+        full = router.throughput()
+        assert set(empty) == set(full)
+        assert set(empty["per_class"]) == set(PRIORITIES)
+        for e, f in zip(empty["per_replica"], full["per_replica"]):
+            assert set(e) == set(f)
+        for p in PRIORITIES:
+            assert set(empty["per_class"][p]) == set(full["per_class"][p])
+
+
+# ---------------------------------------------------------------------------
+# Cross-replica determinism
+# ---------------------------------------------------------------------------
+
+class TestDeterminism:
+    def test_token_streams_identical_across_replica_counts(self, setup):
+        run, params = setup
+        outs = {}
+        for n in (1, 2):
+            router = _router(run, params, replicas=n, slo_itl_ms=50.0)
+            reqs = _reqs(PROMPTS, n=6)
+            for r in reqs:
+                router.add_request(r)
+            router.run_until_done()
+            assert all(r.status == "finished" for r in reqs)
+            outs[n] = {r.uid: r.output for r in reqs}
+        assert outs[1] == outs[2]
+        # and both match a bare single engine (routing is placement
+        # only — it never changes what a stream decodes)
+        eng = ServeEngine(run, params, slots=2, max_seq=64)
+        reqs = _reqs(PROMPTS, n=6)
+        for r in reqs:
+            eng.add_request(r)
+        eng.run_until_done()
+        assert {r.uid: r.output for r in reqs} == outs[2]
+
+
+# ---------------------------------------------------------------------------
+# Multi-device placement (subprocess — the parent must keep 1 device)
+# ---------------------------------------------------------------------------
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+
+import dataclasses
+import jax
+
+from repro.configs import registry
+from repro.configs.base import ParallelConfig, RunConfig
+from repro.models.api import get_model
+from repro.serve.router import ServeRouter
+from repro.serve.scheduler import Request
+
+assert len(jax.devices()) == 2, jax.devices()
+cfg = dataclasses.replace(registry.get("llama3.2-1b").smoke,
+                          dtype="float32")
+run = RunConfig(model=cfg, parallel=ParallelConfig())
+params, _ = get_model(cfg).init(jax.random.PRNGKey(0))
+
+router = ServeRouter(run, params, replicas=2, devices=jax.devices(),
+                     slots=2, max_seq=64, slo_itl_ms=50.0)
+# each replica's params and KV pool are committed to its own device
+placements = []
+for rep in router.replicas:
+    leaf = jax.tree.leaves(rep.engine.params)[0]
+    (dev,) = leaf.devices()
+    (kv_dev,) = jax.tree.leaves(rep.engine.pool.cache)[0].devices()
+    assert dev == kv_dev == rep.engine.device, (dev, kv_dev)
+    placements.append(dev)
+assert placements[0] != placements[1], placements
+
+reqs = [Request(uid=i, prompt=[i + 1, 2, 3], max_new_tokens=4,
+                priority="interactive" if i % 2 == 0 else "batch")
+        for i in range(4)]
+for r in reqs:
+    router.add_request(r)
+router.run_until_done()
+assert all(r.status == "finished" for r in reqs), \
+    [(r.uid, r.status) for r in reqs]
+tp = router.throughput()
+assert tp["tokens"] == 16, tp["tokens"]
+print("OK", placements)
+"""
+
+
+def test_router_places_replicas_on_two_devices():
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (proc.stdout[-2000:], proc.stderr[-2000:])
+    assert "OK" in proc.stdout
